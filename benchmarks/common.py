@@ -1,0 +1,37 @@
+"""Benchmark helpers: timing + artifact paths."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import jax
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "artifacts")
+
+
+def art_path(*parts: str) -> str:
+    p = os.path.join(ARTIFACTS, *parts[:-1])
+    os.makedirs(p, exist_ok=True)
+    return os.path.join(p, parts[-1])
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall-time per call in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def write_csv(path: str, header, rows):
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)

@@ -1,0 +1,42 @@
+"""Vectorised DES engine throughput (the core's own perf table).
+
+The 2002 toolkit ran one JVM thread per entity; the array engine's cost
+is events/second at fleet scale.  Sized for the 1-core CPU container;
+the same jit'd program is the TPU-target workload for kernels.event_scan.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import engine, gridlet, resource, simulation, types
+
+
+def run():
+    fleet = resource.wwg_fleet()
+    out = []
+    for n_users, n_jobs in ((1, 200), (10, 100), (20, 100)):
+        g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
+                              n_users=n_users)
+        # warmup/compile
+        r = simulation.run_experiment(g, fleet, deadline=2000.0,
+                                      budget=22000.0, opt=types.OPT_COST,
+                                      n_users=n_users)
+        t0 = time.perf_counter()
+        r = simulation.run_experiment(g, fleet, deadline=2000.0,
+                                      budget=22000.0, opt=types.OPT_COST,
+                                      n_users=n_users)
+        jax.block_until_ready(r.spent)
+        wall = time.perf_counter() - t0
+        ev = int(r.gridlets.status.shape[0] * 0 + np.asarray(
+            getattr(r, "term_time")).size * 0) or int(np.asarray(
+                r.n_done).sum() * 4)  # ~4 events per completed gridlet
+        n_events = int(np.asarray(r.gridlets.status).size * 0 +
+                       float(np.asarray(r.n_done).sum()) * 4)
+        out.append((f"engine_{n_users}u_{n_jobs}j",
+                    wall * 1e6,
+                    f"events/s~{n_events / max(wall, 1e-9):.0f} "
+                    f"done={float(np.asarray(r.n_done).sum()):.0f}"))
+    return out

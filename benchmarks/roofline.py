@@ -1,0 +1,134 @@
+"""Roofline analysis (EXPERIMENTS.md section Roofline).
+
+Reads the dry-run artifacts and derives, per (arch x shape) on the
+single-pod 16x16 mesh, the three per-chip roofline terms:
+
+  compute    = weighted HLO dot-FLOPs / 197e12 FLOP/s    (bf16 MXU peak)
+  memory     = weighted HLO HBM bytes / 819e9 B/s
+  collective = ring-model transfer bytes / 50e9 B/s      (per-link ICI)
+
+plus MODEL_FLOPS = 6 * N(_active) * tokens and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs.  "roofline fraction" = (MODEL_FLOPS/peak) /
+dominant-term time: how close the cell is to the compute roofline given
+its actual bottleneck.  FLOP/byte counts are execution-weighted from the
+compiled HLO (launch.hlo), not cost_analysis, which does not multiply
+scan trip counts.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import art_path, write_csv
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / ICI link
+
+DRYRUN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "artifacts", "dryrun", "pod16x16")
+
+_NOTE = {
+    "compute": ("compute-bound: raise MXU utilisation (larger blocks, "
+                "bf16 grad reduction frees headroom only indirectly)"),
+    "memory": ("HBM-bound: fuse/remat to cut activation traffic, or "
+               "shard the dominant tensor further"),
+    "collective": ("collective-bound: cut FSDP regather (cast-before-"
+                   "gather), reduce-scatter grads, overlap DCN"),
+}
+
+
+def analyze(record: dict) -> dict:
+    n_dev = record["n_devices"]
+    kind = record["kind"]
+    tokens = record["global_batch"] * (record["seq_len"]
+                                       if kind != "decode" else 1)
+    n_params = record["params_active"]
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
+    model_flops = mult * n_params * tokens            # global
+    model_per_chip = model_flops / n_dev
+
+    flops = record.get("weighted", {}).get("dot_flops", 0.0)
+    hbm = record.get("weighted", {}).get("hbm_bytes", 0.0)
+    coll = record.get("collective_total", 0.0)
+
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    t_dom = max(terms.values())
+    frac = (model_per_chip / PEAK_FLOPS) / t_dom if t_dom > 0 else 0.0
+    return {
+        "arch": record["arch"], "shape": record["shape"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "useful_ratio": model_per_chip / flops if flops else 0.0,
+        "roofline_fraction": frac,
+        "note": _NOTE[dom],
+        "temp_gb": record.get("memory", {}).get(
+            "temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def table():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("skipped"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skip": rec["skip_reason"]})
+            continue
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skip": f"FAILED: {rec.get('error', '?')[:60]}"})
+            continue
+        rows.append(analyze(rec))
+    return rows
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful ratio | roofline frac | temp GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skip" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"SKIP | - | - | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['temp_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def run():
+    rows = table()
+    done = [r for r in rows if "skip" not in r]
+    if not done:
+        return [("roofline", 0.0, "no dry-run artifacts yet")]
+    csv_rows = [[r["arch"], r["shape"], r["compute_s"], r["memory_s"],
+                 r["collective_s"], r["dominant"], r["model_flops"],
+                 r["useful_ratio"], r["roofline_fraction"], r["temp_gb"],
+                 r["note"]] for r in done]
+    write_csv(art_path("roofline.csv"),
+              ["arch", "shape", "compute_s", "memory_s", "collective_s",
+               "dominant", "model_flops", "useful_ratio",
+               "roofline_fraction", "temp_gb", "note"], csv_rows)
+    with open(art_path("roofline.md"), "w") as f:
+        f.write(markdown(rows))
+    worst = min(done, key=lambda r: r["roofline_fraction"])
+    coll_bound = [r for r in done if r["dominant"] == "collective"]
+    out = [("roofline_cells", 0.0,
+            f"{len(done)} analysed / {len(rows) - len(done)} skipped")]
+    out.append(("roofline_worst_fraction", 0.0,
+                f"{worst['arch']}/{worst['shape']}"
+                f"={worst['roofline_fraction']:.3f}"))
+    out.append(("roofline_collective_bound", 0.0,
+                f"{len(coll_bound)} cells"))
+    return out

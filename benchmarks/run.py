@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Artifacts (full grids, the
+roofline table) are written to benchmarks/artifacts/.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (engine_bench, multi_user, roofline, single_user,
+                   table1)
+    modules = [
+        ("table1", table1),            # paper Table 1
+        ("single_user", single_user),  # Figures 21-27
+        ("multi_user", multi_user),    # Figures 33-38
+        ("engine", engine_bench),      # core DES throughput
+        ("roofline", roofline),        # section Roofline (from dry-run)
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules:
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # keep the harness going
+            failed += 1
+            print(f"{name},0.0,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

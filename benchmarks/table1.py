@@ -1,0 +1,41 @@
+"""Paper Table 1: the canonical 3-Gridlet schedule on 2x1-MIPS PEs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import engine, gridlet, resource, types
+
+from .common import art_path, time_call, write_csv
+
+ARRIVALS = jnp.array([0.0, 4.0, 7.0])
+EXPECTED = {
+    types.TIME_SHARED: ([0.0, 4.0, 7.0], [10.0, 14.0, 18.0]),
+    types.SPACE_SHARED: ([0.0, 4.0, 10.0], [10.0, 12.5, 19.5]),
+}
+
+
+def run():
+    rows, out = [], []
+    for policy, pname in ((types.TIME_SHARED, "time_shared"),
+                          (types.SPACE_SHARED, "space_shared")):
+        g = gridlet.make_batch([10.0, 8.5, 9.5])
+        fleet = resource.table1_resource(policy)
+        res = engine.run_direct(g, fleet, 0, ARRIVALS, max_events=64)
+        us = time_call(lambda: engine.run_direct(
+            g, fleet, 0, ARRIVALS, max_events=64))
+        starts = [round(float(x), 2) for x in res.gridlets.start]
+        fins = [round(float(x), 2) for x in res.gridlets.finish]
+        ok = (starts == EXPECTED[policy][0]
+              and fins == EXPECTED[policy][1])
+        for i in range(3):
+            rows.append([pname, f"G{i+1}", [10.0, 8.5, 9.5][i],
+                         float(ARRIVALS[i]), starts[i], fins[i],
+                         round(fins[i] - float(ARRIVALS[i]), 2)])
+        out.append((f"table1_{pname}", us,
+                    f"finish={'/'.join(str(f) for f in fins)}"
+                    f" match={ok}"))
+        assert ok, f"Table 1 mismatch for {pname}: {fins}"
+    write_csv(art_path("table1.csv"),
+              ["policy", "gridlet", "length_mi", "arrival", "start",
+               "finish", "elapsed"], rows)
+    return out

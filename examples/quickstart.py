@@ -1,0 +1,52 @@
+"""Quickstart: the paper's section-4.1 recipe in ~30 lines.
+
+Creates the WWG testbed fleet (Table 2), a 200-job task-farming
+application (section 5.2), runs the Nimrod-G-like economic broker with
+DBC cost-optimisation, and prints the per-resource allocation -- the
+repeatable, controllable experiment the paper was built for.
+
+  PYTHONPATH=src python examples/quickstart.py [deadline] [budget]
+"""
+import sys
+
+import jax
+import numpy as np
+
+from repro.core import economy, gridlet, resource, simulation, types
+
+
+def main():
+    deadline = float(sys.argv[1]) if len(sys.argv) > 1 else 600.0
+    budget = float(sys.argv[2]) if len(sys.argv) > 2 else 12000.0
+
+    fleet = resource.wwg_fleet()
+    farm = gridlet.task_farm(jax.random.PRNGKey(7), n_jobs=200)
+    total_mi = float(farm.length_mi.sum())
+
+    print(f"fleet: {fleet.r} resources, "
+          f"{int(fleet.num_pe.sum())} PEs, "
+          f"T_min={float(economy.t_min(fleet, total_mi)):.0f} "
+          f"T_max={float(economy.t_max(fleet, total_mi)):.0f} "
+          f"C_min={float(economy.c_min(fleet, total_mi)):.0f} "
+          f"C_max={float(economy.c_max(fleet, total_mi)):.0f}")
+    print(f"experiment: 200 Gridlets, deadline={deadline:.0f}, "
+          f"budget={budget:.0f} G$, cost-optimisation\n")
+
+    res = simulation.run_experiment(farm, fleet, deadline=deadline,
+                                    budget=budget, opt=types.OPT_COST)
+
+    per = np.asarray(res.per_resource_done[0], int)
+    cost_mi = np.asarray(fleet.cost_per_mi())
+    print("resource  PEs  G$/s   MIPS  gridlets")
+    for r in range(fleet.r):
+        print(f"R{r:<8d} {int(fleet.num_pe[r]):3d} "
+              f"{float(fleet.cost_per_sec[r]):5.1f} "
+              f"{float(fleet.mips_per_pe[r]):6.0f} {per[r]:6d}"
+              + ("   <- cheapest G$/MI" if r == cost_mi.argmin() else ""))
+    print(f"\ncompleted {int(res.n_done[0])}/200  "
+          f"spent {float(res.spent[0]):.0f}/{budget:.0f} G$  "
+          f"terminated at t={float(res.term_time[0]):.0f}/{deadline:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Architecture registry: importing this package registers all configs."""
+from . import base
+from .base import ModelConfig, SHAPES, cells, get, names, register
+from . import (deepseek_67b, gemma2_27b, gemma3_1b, granite_moe_1b,
+               mamba2_130m, mixtral_8x22b, qwen2_7b, qwen2_vl_7b,
+               whisper_base, zamba2_1b)
+
+ALL = {
+    m.CONFIG.name: m for m in (
+        gemma2_27b, deepseek_67b, gemma3_1b, qwen2_7b, mixtral_8x22b,
+        granite_moe_1b, whisper_base, qwen2_vl_7b, zamba2_1b, mamba2_130m)
+}
+
+SMOKES = {name: m.SMOKE for name, m in ALL.items()}

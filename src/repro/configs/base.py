@@ -1,0 +1,135 @@
+"""Model configuration schema + registry for the assigned architectures.
+
+Every architecture is a frozen, hashable ``ModelConfig`` so configs can be
+static jit arguments.  ``pattern`` describes one *super-block* -- the
+repeating unit the transformer scans over (e.g. Gemma-2's
+("local", "global") alternation); layers not covered by full super-blocks
+form an unrolled tail (e.g. gemma3-1b's 26 = 4 x (5 local + 1 global) + 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+_REGISTRY: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str = "dense"        # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 256
+    vocab: int = 1000
+
+    act: str = "silu"            # silu | gelu
+    qkv_bias: bool = False
+    attn_softcap: float = 0.0    # gemma-2 logit soft-capping
+    final_softcap: float = 0.0
+    rope_theta: float = 10_000.0
+    pos: str = "rope"            # rope | mrope | learned | none
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    norm_offset: bool = False    # gemma (1 + w) RMSNorm convention
+    pattern: Tuple[str, ...] = ("global",)   # global | local | mamba
+    window: int = 4096           # sliding-window size for "local"
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (Mamba-2 / SSD)
+    d_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    shared_period: int = 0       # zamba2: shared attn block every k layers
+
+    # Encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 1500          # whisper 30s window -> 1500 frames
+
+    # VLM (qwen2-vl)
+    n_vision_tokens: int = 0
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+
+    tie_embeddings: bool = True
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # ----- derived -----
+    @property
+    def n_superblocks(self) -> int:
+        return self.n_layers // max(len(self.pattern), 1)
+
+    @property
+    def tail_pattern(self) -> Tuple[str, ...]:
+        r = self.n_layers - self.n_superblocks * len(self.pattern)
+        return self.pattern[:r]
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.ssm_expand * self.d_model) // max(self.ssm_headdim, 1)
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """A reduced copy for smoke tests."""
+        return dataclasses.replace(self, **kw)
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        from . import ALL  # noqa: F401  (populates registry)
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> list:
+    from . import ALL  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+# ----------------------------------------------------------------------
+# Assigned input shapes (same four for every LM-family architecture).
+# ----------------------------------------------------------------------
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+# Archs allowed to run long_500k (sub-quadratic sequence mixing).
+LONG_CONTEXT_OK = ("mamba2-130m", "zamba2-1.2b")
+
+
+def cells():
+    """All (arch, shape) dry-run cells with skip annotations."""
+    out = []
+    for arch in names():
+        for shape, spec in SHAPES.items():
+            skip = None
+            if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+                skip = ("full-attention prefill is quadratic at 512k; "
+                        "run reserved for SSM/hybrid archs per brief")
+            out.append((arch, shape, spec, skip))
+    return out

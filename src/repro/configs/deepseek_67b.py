@@ -1,0 +1,14 @@
+"""DeepSeek 67B [arXiv:2401.02954]: LLaMA-architecture dense decoder."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-67b", family="dense",
+    n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=22016, vocab=102_400,
+    act="silu", pattern=("global",), rope_theta=10_000.0,
+    tie_embeddings=False,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512)

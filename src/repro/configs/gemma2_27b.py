@@ -1,0 +1,17 @@
+"""Gemma-2 27B [arXiv:2408.00118]: local+global alternating attention,
+logit soft-capping, GeGLU, RMSNorm with (1+w) offset."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma2-27b", family="dense",
+    n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16, head_dim=128,
+    d_ff=36864, vocab=256_000,
+    act="gelu", norm="rmsnorm", norm_offset=True,
+    attn_softcap=50.0, final_softcap=30.0,
+    pattern=("local", "global"), window=4096,
+    rope_theta=10_000.0, tie_embeddings=True,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, window=8)

@@ -1,0 +1,16 @@
+"""Gemma-3 1B [hf:google/gemma-3-1b-pt]: 5:1 local:global attention,
+window 512, 1 KV head.  26 = 4 full super-blocks + 2 tail layers."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma3-1b", family="dense",
+    n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1, head_dim=256,
+    d_ff=6912, vocab=262_144,
+    act="gelu", norm="rmsnorm", norm_offset=True,
+    pattern=("local", "local", "local", "local", "local", "global"),
+    window=512, rope_theta=1_000_000.0, tie_embeddings=True,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=6, d_model=64, n_heads=2, n_kv_heads=1, head_dim=16,
+    d_ff=128, vocab=512, window=8)

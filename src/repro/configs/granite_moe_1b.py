@@ -1,0 +1,16 @@
+"""Granite 3.0 1B-A400M [hf:ibm-granite/granite-3.0-1b-a400m-base]:
+fine-grained 32-expert top-8 MoE."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab=49_155,
+    n_experts=32, top_k=8, capacity_factor=1.25,
+    act="silu", pattern=("global",), rope_theta=10_000.0,
+    tie_embeddings=True,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=32, vocab=512, n_experts=8, top_k=4)

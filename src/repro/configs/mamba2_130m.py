@@ -1,0 +1,14 @@
+"""Mamba-2 130M [arXiv:2405.21060]: attention-free SSD stack."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, n_heads=1, n_kv_heads=1, head_dim=64,
+    d_ff=0, vocab=50_280,
+    d_state=128, ssm_headdim=64, ssm_expand=2, ssm_chunk=256,
+    pattern=("mamba",), tie_embeddings=True,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, vocab=512, d_state=16, ssm_headdim=16,
+    ssm_chunk=8)

@@ -1,0 +1,16 @@
+"""Mixtral 8x22B [arXiv:2401.04088]: 8-expert top-2 MoE with
+sliding-window attention (per assignment brief)."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab=32_768,
+    n_experts=8, top_k=2, capacity_factor=1.25,
+    act="silu", pattern=("local",), window=4096,
+    rope_theta=1_000_000.0, tie_embeddings=False,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=64, vocab=512, n_experts=4, top_k=2, window=8)

@@ -1,0 +1,14 @@
+"""Qwen2 7B [arXiv:2407.10671]: GQA with QKV bias."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-7b", family="dense",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab=152_064,
+    act="silu", qkv_bias=True, pattern=("global",),
+    rope_theta=1_000_000.0, tie_embeddings=False,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512)

@@ -1,0 +1,16 @@
+"""Qwen2-VL 7B [arXiv:2409.12191]: qwen2-7b backbone with M-RoPE.
+Vision frontend is a stub (input_specs supplies patch embeddings)."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab=152_064,
+    act="silu", qkv_bias=True, pos="mrope", mrope_sections=(16, 24, 24),
+    n_vision_tokens=256, pattern=("global",),
+    rope_theta=1_000_000.0, tie_embeddings=False,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, n_vision_tokens=4, mrope_sections=(2, 3, 3))

@@ -1,0 +1,16 @@
+"""Whisper base [arXiv:2212.04356]: encoder-decoder; conv audio frontend
+is a stub (input_specs supplies 1500 precomputed frame embeddings)."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-base", family="encdec",
+    n_layers=6, enc_layers=6, enc_seq=1500,
+    d_model=512, n_heads=8, n_kv_heads=8, head_dim=64,
+    d_ff=2048, vocab=51_865,
+    act="gelu", norm="layernorm", pos="learned",
+    pattern=("global",), tie_embeddings=True,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, enc_layers=2, enc_seq=16, d_model=64, n_heads=4,
+    n_kv_heads=4, head_dim=16, d_ff=128, vocab=512)

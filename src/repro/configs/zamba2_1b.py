@@ -1,0 +1,18 @@
+"""Zamba2 1.2B [arXiv:2411.15242]: Mamba-2 backbone with a shared
+attention+MLP block every 6 layers (per-invocation LoRA simplified away;
+see DESIGN.md)."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab=32_000,
+    d_state=64, ssm_headdim=64, ssm_expand=2, ssm_chunk=256,
+    pattern=("mamba",), shared_period=6,
+    act="gelu", rope_theta=10_000.0, tie_embeddings=True,
+))
+
+SMOKE = CONFIG.scaled(
+    n_layers=6, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab=512, d_state=16, ssm_headdim=16, ssm_chunk=8,
+    shared_period=3)

@@ -1,0 +1,20 @@
+"""GridSim-in-JAX: vectorised discrete-event grid scheduling simulation.
+
+The paper's toolkit layers (section 3.2) map to:
+  SimJava discrete events  -> core.des (array event calendar)
+  GridSim entities         -> core.resource / core.gridlet / core.gis
+  resource allocation      -> core.engine (Figs 7-12, vectorised)
+  economic broker          -> core.broker (Fig 20 DBC algorithms)
+  deadline/budget economy  -> core.economy (Eq 1 / Eq 2)
+  statistics               -> core.stats
+  experiment recipes       -> core.simulation
+"""
+from . import (broker, calendar, des, economy, engine, gis, gridlet,
+               network, rand, reservation, resource, segments, simulation,
+               stats, types)
+
+__all__ = [
+    "broker", "calendar", "des", "economy", "engine", "gis", "gridlet",
+    "network", "rand", "reservation", "resource", "segments", "simulation",
+    "stats", "types",
+]

@@ -1,0 +1,218 @@
+"""Economic grid resource broker (paper section 4.2, Figs 18-20).
+
+Each user owns a broker; a BROKER engine event runs every broker at once
+(vectorised over users).  One event performs the full Fig 20 cycle:
+
+  1. resource discovery (GIS mask) + trading (cost per MI, Table 2 metric),
+  2. measure-and-extrapolate the per-resource job consumption rate,
+  3. predict per-resource job capacity by the deadline,
+  4. release over-committed jobs back to the unassigned queue,
+  5. assign unassigned jobs to resources in policy order (cost / time /
+     cost-time / none optimisation) under the budget constraint,
+  6. dispatch up to MaxGridletPerPE * num_pe staged jobs per resource,
+     committing their exact processing cost against the budget.
+
+The measurement in step 2 counts fractional progress of in-flight jobs so
+the estimate ramps smoothly from the advertised rate to the observed share
+(the paper's "recalibration"; Fig 34 discusses the stale-first-estimate
+overshoot this produces under competition, which this model reproduces).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .segments import group_rank, group_prefix_sum
+from .types import (CREATED, DONE, IN_TRANSIT, INF, OPT_COST, OPT_COST_TIME,
+                    OPT_NONE, OPT_TIME, QUEUED, RETURNING, RUNNING, replace)
+from . import calendar, network
+
+
+def _policy_keys(opt, cost_per_mi, est_rate, r_index):
+    """Composite per-resource ordering key for each optimisation mode.
+
+    cost: cheapest G$/MI first (ties by index, paper Fig 20 step 4);
+    time: fastest estimated consumption rate first;
+    cost-time: cheapest first, equal-cost resources ordered fastest-first
+               (the [23] variant -- same-cost pools scheduled for time);
+    none: resource index order.
+    """
+    shape = est_rate.shape
+    est_norm = est_rate / jnp.maximum(est_rate.max(axis=-1, keepdims=True),
+                                      1e-30)
+    key_cost = jnp.broadcast_to(cost_per_mi + 1e-7 * r_index, shape)
+    key_time = -est_rate + 1e-7 * r_index
+    key_cost_time = jnp.broadcast_to(cost_per_mi, shape) - 1e-4 * est_norm \
+        + 1e-7 * r_index
+    key_none = jnp.broadcast_to(r_index * 1.0, shape)
+    return jnp.select(
+        [opt[:, None] == OPT_COST, opt[:, None] == OPT_TIME,
+         opt[:, None] == OPT_COST_TIME, opt[:, None] == OPT_NONE],
+        [key_cost, key_time, key_cost_time, key_none])
+
+
+def broker_event(state, fleet, params, n_users: int):
+    g = state.g
+    t = state.t
+    n = g.n
+    R = fleet.r
+    u_idx = g.user
+    idx = jnp.arange(n, dtype=jnp.int32)
+    ur_key = u_idx * R + jnp.clip(g.assigned, 0, R - 1)
+
+    # ---- step 1-2: discovery, trading, measurement --------------------
+    registered = params.registered
+    eff = calendar.effective_mips(fleet, t)                      # [R]
+    adv_rate = eff * fleet.num_pe.astype(jnp.float32)            # MIPS
+    cost_per_mi = fleet.cost_per_sec / fleet.mips_per_pe         # [R]
+
+    ones = jnp.ones((n,), jnp.float32)
+    cnt_per_user = jax.ops.segment_sum(ones, u_idx, num_segments=n_users)
+    mi_per_user = jax.ops.segment_sum(g.length_mi, u_idx,
+                                      num_segments=n_users)
+    avg_mi = mi_per_user / jnp.maximum(cnt_per_user, 1.0)        # [U]
+
+    inflight = ((g.status == IN_TRANSIT) | (g.status == QUEUED) |
+                (g.status == RUNNING) | (g.status == RETURNING))
+    on_res = jnp.clip(g.resource, 0, R - 1)
+    ur_res_key = u_idx * R + on_res
+    frac = jnp.where(inflight, 1.0 - g.remaining / g.length_mi, 0.0)
+    progress = jax.ops.segment_sum(frac, ur_res_key,
+                                   num_segments=n_users * R)
+    progress = progress.reshape(n_users, R) + state.done_on      # jobs-equiv
+
+    elapsed = jnp.maximum(t - state.first_dispatch, 1e-6)        # [U,R]
+    adv_jobs = adv_rate[None, :] / jnp.maximum(avg_mi[:, None], 1e-30)
+    measured = progress / elapsed
+    started = jnp.isfinite(state.first_dispatch) & \
+        (t > state.first_dispatch + 1e-9)
+    est_jobs = jnp.where(started, jnp.minimum(measured, adv_jobs), adv_jobs)
+    est_jobs = jnp.where(registered[None, :], est_jobs, 0.0)     # [U,R]
+
+    # ---- step 3: capacity by deadline ---------------------------------
+    time_left = jnp.maximum(params.deadline - t, 0.0)            # [U]
+    cap_jobs = jnp.floor(est_jobs * time_left[:, None]).astype(jnp.int32)
+
+    committed = (g.assigned >= 0) & (g.status != DONE)
+    n_committed = jax.ops.segment_sum(
+        committed.astype(jnp.int32),
+        jnp.where(committed, ur_key, n_users * R),
+        num_segments=n_users * R + 1)[:n_users * R].reshape(n_users, R)
+
+    undispatched = (g.status == CREATED) & (g.assigned >= 0)
+
+    active = ((t < params.deadline) &
+              (state.spent + avg_mi * cost_per_mi.min() <= params.budget))
+
+    # ---- step 4: release over-committed undispatched jobs -------------
+    rel_rank, n_undisp = group_rank(ur_key, undispatched, -idx, n_users * R)
+    n_release = jnp.clip(n_committed - cap_jobs, 0,
+                         n_undisp[:n_users * R].reshape(n_users, R))
+    n_release = jnp.where(active[:, None], n_release, 0)
+    release = undispatched & (rel_rank <
+                              n_release.reshape(-1)[jnp.clip(ur_key, 0,
+                                                             n_users * R - 1)])
+    assigned = jnp.where(release, -1, g.assigned)
+    n_committed = n_committed - n_release
+
+    # ---- step 5: assignment in policy order, budget constrained -------
+    exact_cost_now = g.length_mi * cost_per_mi[jnp.clip(assigned, 0, R - 1)]
+    planned = (assigned >= 0) & (g.status == CREATED)
+    planned_cost = jax.ops.segment_sum(
+        jnp.where(planned, exact_cost_now, 0.0), u_idx,
+        num_segments=n_users)
+    budget_left = jnp.maximum(params.budget - state.spent - planned_cost,
+                              0.0)
+
+    keys = _policy_keys(params.opt, cost_per_mi[None, :], est_jobs,
+                        jnp.arange(R, dtype=jnp.float32)[None, :])
+    keys = jnp.where(registered[None, :], keys, INF)
+    order = jnp.argsort(keys, axis=-1)                           # [U,R]
+    inv_order = jnp.zeros_like(order).at[
+        jnp.arange(n_users)[:, None], order].set(
+        jnp.broadcast_to(jnp.arange(R), (n_users, R)))
+
+    slots = jnp.maximum(cap_jobs - n_committed, 0)               # [U,R]
+    job_cost_est = avg_mi[:, None] * cost_per_mi[None, :]        # [U,R]
+
+    unassigned = (g.status == CREATED) & (assigned < 0)
+    n_unassigned = jax.ops.segment_sum(
+        unassigned.astype(jnp.int32), u_idx, num_segments=n_users)
+
+    def fill(j, carry):
+        taken, budget_rem, take_at = carry
+        r = order[:, j]                                          # [U]
+        rows = jnp.arange(n_users)
+        s = slots[rows, r]
+        c = job_cost_est[rows, r]
+        by_budget = jnp.floor(budget_rem / jnp.maximum(c, 1e-30))
+        by_budget = jnp.clip(by_budget, 0, 2**30).astype(jnp.int32)
+        n_fit = jnp.minimum(jnp.minimum(s, by_budget),
+                            n_unassigned - taken)
+        n_fit = jnp.where(active & registered[r], n_fit, 0)
+        take_at = take_at.at[:, j].set(n_fit)
+        return taken + n_fit, budget_rem - n_fit.astype(jnp.float32) * c, \
+            take_at
+
+    taken0 = jnp.zeros((n_users,), jnp.int32)
+    take_at0 = jnp.zeros((n_users, R), jnp.int32)
+    taken, _, take_at = jax.lax.fori_loop(
+        0, R, fill, (taken0, budget_left, take_at0))
+    cum_take = jnp.cumsum(take_at, axis=-1)                      # [U,R]
+
+    una_rank, _ = group_rank(u_idx, unassigned, idx, n_users)
+    k = una_rank                                                 # [N]
+    cum_for_g = cum_take[u_idx]                                  # [N,R]
+    j_star = jnp.sum((cum_for_g <= k[:, None]).astype(jnp.int32), axis=-1)
+    gets = unassigned & (k < taken[u_idx]) & (j_star < R)
+    new_assigned = jnp.where(
+        gets, order[u_idx, jnp.clip(j_star, 0, R - 1)], assigned)
+
+    # ---- step 6: dispatch staged jobs ---------------------------------
+    ur_key2 = u_idx * R + jnp.clip(new_assigned, 0, R - 1)
+    cand = (g.status == CREATED) & (new_assigned >= 0)
+    n_inflight_ur = jax.ops.segment_sum(
+        inflight.astype(jnp.int32),
+        jnp.where(inflight, ur_res_key, n_users * R),
+        num_segments=n_users * R + 1)[:n_users * R].reshape(n_users, R)
+    limit = params.max_gridlet_per_pe * fleet.num_pe[None, :]
+    disp_slots = jnp.maximum(limit - n_inflight_ur, 0)           # [U,R]
+    disp_rank, _ = group_rank(ur_key2, cand, idx, n_users * R)
+    eligible = cand & (disp_rank < disp_slots.reshape(-1)[
+        jnp.clip(ur_key2, 0, n_users * R - 1)])
+    eligible = eligible & active[u_idx] & registered[
+        jnp.clip(new_assigned, 0, R - 1)]
+
+    exact_cost = g.length_mi * cost_per_mi[jnp.clip(new_assigned, 0, R - 1)]
+    disp_order_key = (inv_order[u_idx, jnp.clip(new_assigned, 0, R - 1)]
+                      .astype(jnp.float32) * (n + 1.0) +
+                      idx.astype(jnp.float32))
+    prefix = group_prefix_sum(u_idx, eligible, disp_order_key, exact_cost,
+                              n_users)
+    fits = prefix + exact_cost <= (params.budget - state.spent)[u_idx]
+    dispatch = eligible & fits
+
+    r_disp = jnp.clip(new_assigned, 0, R - 1)
+    in_delay = network.transfer_delay(g.in_bytes, fleet.baud_rate[r_disp])
+    g2 = replace(
+        g,
+        assigned=new_assigned,
+        status=jnp.where(dispatch, IN_TRANSIT, g.status),
+        resource=jnp.where(dispatch, new_assigned, g.resource),
+        t_event=jnp.where(dispatch, t + in_delay, g.t_event),
+        cost=jnp.where(dispatch, exact_cost, g.cost),
+    )
+    spent = state.spent + jax.ops.segment_sum(
+        jnp.where(dispatch, exact_cost, 0.0), u_idx, num_segments=n_users)
+    fd = jax.ops.segment_min(
+        jnp.where(dispatch, t, INF),
+        jnp.where(dispatch, ur_key2, n_users * R),
+        num_segments=n_users * R + 1)[:n_users * R].reshape(n_users, R)
+    first_dispatch = jnp.minimum(state.first_dispatch, fd)
+
+    # ---- next scheduling event (paper Fig 17 hold heuristic) ----------
+    dl_left = jnp.where(active, params.deadline - t, 0.0)
+    period = jnp.maximum(params.sched_min_period,
+                         params.sched_frac * dl_left.max())
+    return replace(state, g=g2, spent=spent, first_dispatch=first_dispatch,
+                   next_sched=t + period)

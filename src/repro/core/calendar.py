@@ -1,0 +1,40 @@
+"""``gridsim.ResourceCalendar`` -- local (non-grid) load by local time.
+
+The paper models non-grid workload through the resource's time zone,
+weekends and holidays.  Vectorised adaptation: the calendar is a pure
+function ``load(fleet, t) -> [R]`` giving the instantaneous background load
+factor in [0, 1); effective PE capacity is ``mips * (1 - load)``.
+
+Simulation time is interpreted in HOURS_PER_UNIT hours for calendar
+purposes (the paper leaves the time unit abstract; experiments in section 5
+use load = 0, which is our default as well).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+HOURS_PER_UNIT = 1.0
+SATURDAY = 5  # day index with epoch t=0 == Monday 00:00 local at UTC+0
+SUNDAY = 6
+
+
+def local_day_and_hour(t, time_zone):
+    """Day-of-week index [0..6] and hour-of-day at the resource's zone."""
+    local_hours = t * HOURS_PER_UNIT + time_zone
+    day = jnp.floor(local_hours / 24.0).astype(jnp.int32) % 7
+    hour = jnp.mod(local_hours, 24.0)
+    return day, hour
+
+
+def load(fleet, t) -> jax.Array:
+    """Background load factor per resource at simulation time ``t``."""
+    day, _ = local_day_and_hour(t, fleet.time_zone)
+    weekend = (day == SATURDAY) | (day == SUNDAY)
+    l = fleet.base_load + jnp.where(weekend, fleet.weekend_load, 0.0)
+    return jnp.clip(l, 0.0, 0.95)
+
+
+def effective_mips(fleet, t) -> jax.Array:
+    """Per-PE MIPS actually available to grid jobs at time ``t``."""
+    return fleet.mips_per_pe * (1.0 - load(fleet, t))

@@ -1,0 +1,107 @@
+"""Array discrete-event calendar -- the SimJava substitute (paper 3.2.1).
+
+SimJava runs one Java thread per entity and a central timestamp-ordered
+future-event queue; ``sim_schedule`` / ``sim_hold`` / ``sim_wait`` suspend
+threads.  None of that exists under jit, so the toolkit's second layer is
+re-founded on a fixed-capacity struct-of-arrays calendar:
+
+  * ``schedule``   == sim_schedule: write an event row into a free slot.
+  * ``pop_next``   == Sim_system advancing the clock: masked argmin on the
+                      time column (vector-unit friendly O(C) instead of a
+                      pointer heap; C is small and the reduction fuses).
+  * ``sim_hold``   == scheduling an event to yourself at t+dt.
+  * ``sim_wait``   == simply handling your next popped event.
+
+The specialised engine (engine.py) keeps *forecast* events implicit --
+recomputed from state instead of queued -- which is how it sidesteps the
+paper's stale-internal-event discard rule (section 3.4).  This calendar is
+the general-purpose primitive for user-defined entities, tests and the
+reservation system.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import INF, pytree_dataclass
+
+
+@pytree_dataclass
+class EventQueue:
+    time: jax.Array     # f32[C], INF = free slot
+    src: jax.Array      # i32[C]
+    dst: jax.Array      # i32[C]
+    tag: jax.Array      # i32[C]
+    data: jax.Array     # f32[C, K]
+    seq: jax.Array      # i32[C] FIFO tiebreak among equal timestamps
+    next_seq: jax.Array  # i32[]
+
+    @property
+    def capacity(self) -> int:
+        return self.time.shape[0]
+
+
+def make_queue(capacity: int, payload: int = 1) -> EventQueue:
+    return EventQueue(
+        time=jnp.full((capacity,), INF, jnp.float32),
+        src=jnp.zeros((capacity,), jnp.int32),
+        dst=jnp.zeros((capacity,), jnp.int32),
+        tag=jnp.zeros((capacity,), jnp.int32),
+        data=jnp.zeros((capacity, payload), jnp.float32),
+        seq=jnp.zeros((capacity,), jnp.int32),
+        next_seq=jnp.zeros((), jnp.int32),
+    )
+
+
+def schedule(q: EventQueue, time, src, dst, tag, data=None) -> EventQueue:
+    """sim_schedule: place one event.  Overwrites the oldest-free slot;
+    callers size the queue so it never fills (asserted in tests)."""
+    slot = jnp.argmax(~jnp.isfinite(q.time))  # first free slot
+    data = jnp.zeros((q.data.shape[1],), jnp.float32) if data is None \
+        else jnp.asarray(data, jnp.float32).reshape(q.data.shape[1])
+    return EventQueue(
+        time=q.time.at[slot].set(jnp.asarray(time, jnp.float32)),
+        src=q.src.at[slot].set(jnp.asarray(src, jnp.int32)),
+        dst=q.dst.at[slot].set(jnp.asarray(dst, jnp.int32)),
+        tag=q.tag.at[slot].set(jnp.asarray(tag, jnp.int32)),
+        data=q.data.at[slot].set(data),
+        seq=q.seq.at[slot].set(q.next_seq),
+        next_seq=q.next_seq + 1,
+    )
+
+
+def peek_time(q: EventQueue) -> jax.Array:
+    return q.time.min()
+
+
+def size(q: EventQueue) -> jax.Array:
+    return jnp.isfinite(q.time).sum()
+
+
+def pop_next(q: EventQueue):
+    """Remove + return the earliest event (FIFO among ties).
+
+    Returns (queue', (time, src, dst, tag, data, valid)).  ``valid`` is
+    False when the calendar is empty (the END_OF_SIMULATION condition).
+    """
+    # Lexicographic (time, seq) argmin via a composite penalty on seq.
+    tmin = q.time.min()
+    at_min = q.time == tmin
+    seq_key = jnp.where(at_min, q.seq, jnp.iinfo(jnp.int32).max)
+    slot = jnp.argmin(seq_key)
+    valid = jnp.isfinite(tmin)
+    ev = (q.time[slot], q.src[slot], q.dst[slot], q.tag[slot],
+          q.data[slot], valid)
+    q2 = EventQueue(
+        time=q.time.at[slot].set(INF), src=q.src, dst=q.dst, tag=q.tag,
+        data=q.data, seq=q.seq, next_seq=q.next_seq)
+    return q2, ev
+
+
+def cancel(q: EventQueue, predicate) -> EventQueue:
+    """Discard events matching a mask -- the paper's 'discard stale
+    internal events' rule for user-defined entities."""
+    mask = predicate(q)
+    return EventQueue(
+        time=jnp.where(mask, INF, q.time), src=q.src, dst=q.dst,
+        tag=q.tag, data=q.data, seq=q.seq, next_seq=q.next_seq)

@@ -1,0 +1,59 @@
+"""Deadline / budget determination from D- and B-factors (paper 4.2.3).
+
+    Deadline = T_MIN + D_FACTOR * (T_MAX - T_MIN)        (Eq 1)
+    Budget   = C_MIN + B_FACTOR * (C_MAX - C_MIN)        (Eq 2)
+
+Interpretations (documented because the paper defines the terms in prose):
+  T_MIN: all jobs processed in parallel with the fastest resources given
+         priority == ideal makespan lower bound total_MI / sum(peak rates).
+  T_MAX: all jobs processed serially on the slowest resource
+         == total_MI / min(per-PE MIPS).
+  C_MIN: every job on the cheapest G$-per-MI resource.
+  C_MAX: every job on the costliest G$-per-MI resource.
+
+D<0 / B<0 never complete; D>=1 / B>=1 always complete while resources
+remain available -- both properties are asserted in tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def t_min(fleet, total_mi, registered=None):
+    rate = fleet.peak_rate()
+    if registered is not None:
+        rate = jnp.where(registered, rate, 0.0)
+    return total_mi / jnp.maximum(rate.sum(), 1e-30)
+
+
+def t_max(fleet, total_mi, registered=None):
+    mips = fleet.mips_per_pe
+    if registered is not None:
+        mips = jnp.where(registered, mips, jnp.inf)
+    return total_mi / jnp.maximum(mips.min(), 1e-30)
+
+
+def c_min(fleet, total_mi, registered=None):
+    cpm = fleet.cost_per_mi()
+    if registered is not None:
+        cpm = jnp.where(registered, cpm, jnp.inf)
+    return total_mi * cpm.min()
+
+
+def c_max(fleet, total_mi, registered=None):
+    cpm = fleet.cost_per_mi()
+    if registered is not None:
+        cpm = jnp.where(registered, cpm, -jnp.inf)
+    return total_mi * cpm.max()
+
+
+def deadline_from_factor(fleet, total_mi, d_factor, registered=None):
+    lo = t_min(fleet, total_mi, registered)
+    hi = t_max(fleet, total_mi, registered)
+    return lo + d_factor * (hi - lo)
+
+
+def budget_from_factor(fleet, total_mi, b_factor, registered=None):
+    lo = c_min(fleet, total_mi, registered)
+    hi = c_max(fleet, total_mi, registered)
+    return lo + b_factor * (hi - lo)

@@ -1,0 +1,410 @@
+"""The vectorised discrete-event engine (paper sections 3.4-3.5).
+
+One ``lax.while_loop`` advances the whole grid: every iteration finds the
+earliest pending event across
+
+  COMPLETION -- forecast finish of the smallest-remaining-share job
+                (paper Fig 7 step 2d / Fig 10: internal events),
+  RETURN     -- processed Gridlet reaches its broker (GRIDLET_RETURN),
+  ARRIVAL    -- dispatched Gridlet reaches its resource (GRIDLET_SUBMIT),
+  BROKER     -- periodic scheduling event of the economic broker,
+
+advances all resident jobs analytically by the PE-share algebra of Fig 8,
+and applies the event.  Forecasts are recomputed from state on every
+iteration, so the paper's stale-internal-event discard rule (section 3.4)
+holds by construction: a superseded forecast simply never materialises.
+
+Time-shared share allocation (Fig 8): with g jobs on P PEs,
+  min_jobs = g // P PEs' worth of jobs run at MaxShare = eff_mips/min_jobs,
+  the rest at MinShare = eff_mips/(min_jobs+1); jobs are laid onto PEs so
+  the smallest-remaining jobs receive MaxShare -- this is the unique layout
+  consistent with the worked trace of Fig 9 / Table 1 (G3 joins G2's PE at
+  t=7, G1 keeps a whole PE and finishes at 10).
+
+Space-shared (Figs 10-12): dedicated PE per job, FCFS (or SJF) queue.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import broker as broker_mod
+from . import calendar, network
+from .segments import group_rank
+from .types import (CREATED, DONE, EV_ARRIVAL, EV_BROKER, EV_COMPLETION,
+                    EV_RETURN, FCFS, IN_TRANSIT, INF, QUEUED, RETURNING,
+                    RUNNING, SJF, SPACE_SHARED, TIME_SHARED, pytree_dataclass)
+
+TRACE_LEN = 64
+
+
+@pytree_dataclass
+class SimParams:
+    """Per-experiment knobs; all traced so grids of experiments vmap."""
+    deadline: jax.Array        # f32[U]
+    budget: jax.Array          # f32[U]
+    opt: jax.Array             # i32[U] broker optimisation strategy
+    max_gridlet_per_pe: jax.Array  # i32[] dispatch staging limit (paper: 2)
+    sched_min_period: jax.Array    # f32[] broker poll floor (paper: 1.0)
+    sched_frac: jax.Array          # f32[] fraction of deadline-left (0.01)
+    measure_alpha: jax.Array       # f32[] measurement smoothing
+    registered: jax.Array          # bool[R] GIS availability mask
+
+
+def default_params(deadline, budget, opt, n_users: int,
+                   n_resources: int = 1, registered=None) -> SimParams:
+    f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n_users,))
+    if registered is None:
+        registered = jnp.ones((n_resources,), bool)
+    return SimParams(
+        deadline=f(deadline), budget=f(budget),
+        opt=jnp.broadcast_to(jnp.asarray(opt, jnp.int32), (n_users,)),
+        max_gridlet_per_pe=jnp.asarray(2, jnp.int32),
+        sched_min_period=jnp.asarray(1.0, jnp.float32),
+        sched_frac=jnp.asarray(0.01, jnp.float32),
+        measure_alpha=jnp.asarray(0.5, jnp.float32),
+        registered=registered,
+    )
+
+
+@pytree_dataclass
+class SimState:
+    t: jax.Array               # f32 current simulation time
+    g: object                  # GridletBatch
+    pe: jax.Array              # i32[N] PE slot (space-shared)
+    spent: jax.Array           # f32[U] committed budget
+    done_on: jax.Array         # f32[U,R] jobs of u completed on r
+    first_dispatch: jax.Array  # f32[U,R] first dispatch instant (inf)
+    next_sched: jax.Array      # f32 next broker event
+    term_time: jax.Array       # f32[U] broker termination instant
+    n_events: jax.Array        # i32
+    trace_t: jax.Array         # f32[TRACE_LEN]
+    trace_kind: jax.Array      # i32[TRACE_LEN]
+    trace_who: jax.Array       # i32[TRACE_LEN]
+
+
+class SimResult(NamedTuple):
+    gridlets: object
+    spent: jax.Array
+    term_time: jax.Array
+    n_events: jax.Array
+    trace: tuple
+
+
+# ----------------------------------------------------------------------
+# Resource dynamics
+# ----------------------------------------------------------------------
+
+def _rates(state, fleet, n_resources, max_pe):
+    """Per-gridlet execution rate (MI per time unit) under Fig 8 shares."""
+    g = state.g
+    running = g.status == RUNNING
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    eff = calendar.effective_mips(fleet, state.t)          # [R] per PE
+    policy = fleet.policy[res]
+
+    # --- time-shared: rank jobs on each resource by remaining MI ---
+    ts_member = running & (policy == TIME_SHARED)
+    rank, counts = group_rank(res, ts_member, g.remaining, n_resources)
+    g_on_r = counts[res].astype(jnp.int32)                  # jobs on my res
+    p_r = fleet.num_pe[res]
+    min_jobs = g_on_r // jnp.maximum(p_r, 1)
+    extra = g_on_r % jnp.maximum(p_r, 1)
+    max_share_count = (p_r - extra) * min_jobs
+    divisor = min_jobs + (rank >= max_share_count).astype(jnp.int32)
+    ts_rate = eff[res] / jnp.maximum(divisor, 1).astype(jnp.float32)
+
+    # --- space-shared: a dedicated PE at full effective rate ---
+    ss_rate = eff[res]
+
+    rate = jnp.where(policy == TIME_SHARED, ts_rate, ss_rate)
+    return jnp.where(running, rate, 0.0)
+
+
+def _ss_occupancy(state, fleet, n_resources, max_pe):
+    """PE occupancy grid for space-shared placement. BIG where invalid."""
+    g = state.g
+    run_ss = (g.status == RUNNING) & \
+        (fleet.policy[jnp.clip(g.resource, 0, n_resources - 1)] == SPACE_SHARED)
+    res = jnp.where(run_ss, g.resource, 0)
+    pe = jnp.where(run_ss, jnp.clip(state.pe, 0, max_pe - 1), 0)
+    occ = jnp.zeros((n_resources, max_pe), jnp.int32)
+    occ = occ.at[res, pe].add(run_ss.astype(jnp.int32))
+    invalid = jnp.arange(max_pe)[None, :] >= fleet.num_pe[:, None]
+    return occ + invalid.astype(jnp.int32) * 10**6
+
+
+# ----------------------------------------------------------------------
+# Event application
+# ----------------------------------------------------------------------
+
+def _apply_completion(state, fleet, i, t, n_resources, max_pe):
+    """RUNNING -> RETURNING; space-shared: admit next queued job."""
+    from .types import replace
+    g = state.g
+    r = g.resource[i]
+    out_delay = network.transfer_delay(g.out_bytes[i], fleet.baud_rate[r])
+    g = replace(
+        g,
+        status=g.status.at[i].set(RETURNING),
+        remaining=g.remaining.at[i].set(0.0),
+        finish=g.finish.at[i].set(t),
+        t_event=g.t_event.at[i].set(t + out_delay),
+    )
+    state = replace(state, g=g)
+
+    # Space-shared: freed PE admits the next queued Gridlet (Fig 10 step 3).
+    is_ss = fleet.policy[r] == SPACE_SHARED
+    queued = (g.status == QUEUED) & (g.resource == r)
+    # FCFS: earliest arrival at the resource (QUEUED jobs keep their
+    # arrival instant in t_event); SJF: smallest job. Ties by index.
+    key = jnp.where(fleet.queue_policy[r] == SJF, g.length_mi, g.t_event)
+    key = jnp.where(queued, key, INF)
+    j = jnp.argmin(key)
+    any_queued = is_ss & queued[j]
+
+    freed_pe = state.pe[i]
+
+    def admit(state):
+        g = state.g
+        g = replace(
+            g,
+            status=g.status.at[j].set(RUNNING),
+            start=g.start.at[j].set(jnp.minimum(g.start[j], t)),
+            t_event=g.t_event.at[j].set(INF),
+        )
+        return replace(state, g=g, pe=state.pe.at[j].set(freed_pe))
+
+    return jax.lax.cond(any_queued, admit, lambda s: s, state)
+
+
+def _apply_return(state, fleet, params, i, t):
+    """RETURNING -> DONE; broker measurement update (paper 4.2.1 step 6)."""
+    from .types import replace
+    g = state.g
+    u, r = g.user[i], g.resource[i]
+    g = replace(g, status=g.status.at[i].set(DONE),
+                returned=g.returned.at[i].set(t))
+    done_on = state.done_on.at[u, r].add(1.0)
+    return replace(state, g=g, done_on=done_on)
+
+
+def _apply_arrival(state, fleet, i, t, n_resources, max_pe):
+    """IN_TRANSIT -> RUNNING (time-shared / free PE) or QUEUED.
+
+    Time-shared arrivals commute (every resident job just re-shares), so
+    ALL arrivals due at exactly ``t`` on time-shared resources are
+    admitted in one event -- broker dispatch storms otherwise cost one
+    engine iteration per Gridlet (measured 1.8x fewer iterations on the
+    20-user benchmark; EXPERIMENTS.md section Perf, engine cell).
+    Space-shared admission stays one-at-a-time (PE assignment orders).
+    """
+    from .types import replace
+    g = state.g
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+
+    # --- batched time-shared arrivals at this instant ---
+    due_ts = ((g.status == IN_TRANSIT) & (g.t_event <= t) &
+              (fleet.policy[res] == TIME_SHARED))
+    status = jnp.where(due_ts, RUNNING, g.status)
+    start = jnp.where(due_ts, jnp.minimum(g.start, t), g.start)
+    t_event = jnp.where(due_ts, INF, g.t_event)
+
+    # --- single space-shared arrival (gridlet i), if applicable ---
+    r = g.resource[i]
+    is_ss = fleet.policy[r] == SPACE_SHARED
+    occ = _ss_occupancy(state, fleet, n_resources, max_pe)
+    free_pe = jnp.argmin(occ[r])
+    has_free = occ[r, free_pe] == 0
+    starts_now = is_ss & has_free
+    status = status.at[i].set(
+        jnp.where(is_ss, jnp.where(starts_now, RUNNING, QUEUED),
+                  status[i]))
+    start = start.at[i].set(
+        jnp.where(starts_now, jnp.minimum(g.start[i], t), start[i]))
+    # QUEUED jobs keep their arrival instant in t_event (the FCFS key);
+    # QUEUED status is never scanned as a pending event so this is safe.
+    t_event = t_event.at[i].set(
+        jnp.where(is_ss, jnp.where(starts_now, INF, t), t_event[i]))
+    pe = state.pe.at[i].set(
+        jnp.where(is_ss & has_free, free_pe, state.pe[i]))
+
+    g = replace(g, status=status, start=start, t_event=t_event)
+    return replace(state, g=g, pe=pe)
+
+
+# ----------------------------------------------------------------------
+# Main loop
+# ----------------------------------------------------------------------
+
+def _user_flags(state, params, fleet, n_users):
+    """(active, finished) per user -- paper 4.2.1 step 7 semantics."""
+    g = state.g
+    u = g.user
+    not_done = (g.status != DONE).astype(jnp.int32)
+    n_not_done = jax.ops.segment_sum(not_done, u, num_segments=n_users)
+    inflight = ((g.status == IN_TRANSIT) | (g.status == QUEUED) |
+                (g.status == RUNNING) | (g.status == RETURNING))
+    n_inflight = jax.ops.segment_sum(inflight.astype(jnp.int32), u,
+                                     num_segments=n_users)
+    min_job_cost = (fleet.cost_per_sec / fleet.mips_per_pe).min() * 1.0
+    all_done = n_not_done == 0
+    active = ((state.t < params.deadline) &
+              (state.spent + min_job_cost <= params.budget) &
+              ~all_done)
+    finished = (all_done | ~active) & (n_inflight == 0)
+    return active, finished
+
+
+def step(state: SimState, fleet, params: SimParams, n_users: int,
+         max_pe: int):
+    """One engine iteration: pick earliest event, advance, apply."""
+    from .types import replace
+    n_resources = fleet.r
+    g = state.g
+
+    rate = _rates(state, fleet, n_resources, max_pe)
+    forecast = jnp.where(g.status == RUNNING,
+                         state.t + g.remaining / jnp.maximum(rate, 1e-30),
+                         INF)
+    t_complete = forecast.min()
+    i_complete = jnp.argmin(forecast)
+
+    ret_t = jnp.where(g.status == RETURNING, g.t_event, INF)
+    t_return, i_return = ret_t.min(), jnp.argmin(ret_t)
+
+    arr_t = jnp.where(g.status == IN_TRANSIT, g.t_event, INF)
+    t_arrive, i_arrive = arr_t.min(), jnp.argmin(arr_t)
+
+    active, _ = _user_flags(state, params, fleet, n_users)
+    t_broker = jnp.where(active.any(), state.next_sched, INF)
+
+    # Priority among simultaneous events: COMPLETION, RETURN, ARRIVAL,
+    # BROKER (argmin keeps the first of equal keys).
+    times = jnp.stack([t_complete, t_return, t_arrive, t_broker])
+    kind = jnp.argmin(times)
+    t_next = times[kind]
+    t_next = jnp.where(jnp.isfinite(t_next), t_next, state.t)
+
+    # Advance every running job analytically over [t, t_next).
+    dt = jnp.maximum(t_next - state.t, 0.0)
+    new_remaining = jnp.maximum(g.remaining - rate * dt, 0.0)
+    g = replace(g, remaining=new_remaining)
+    state = replace(state, g=g, t=t_next)
+
+    who = jnp.stack([i_complete, i_return, i_arrive, -1])[kind]
+
+    def on_complete(s):
+        return _apply_completion(s, fleet, i_complete, t_next,
+                                 n_resources, max_pe)
+
+    def on_return(s):
+        return _apply_return(s, fleet, params, i_return, t_next)
+
+    def on_arrive(s):
+        return _apply_arrival(s, fleet, i_arrive, t_next,
+                              n_resources, max_pe)
+
+    def on_broker(s):
+        return broker_mod.broker_event(s, fleet, params, n_users)
+
+    state = jax.lax.switch(kind, [on_complete, on_return, on_arrive,
+                                  on_broker], state)
+
+    # Record broker termination instants.
+    _, finished = _user_flags(state, params, fleet, n_users)
+    term = jnp.where(finished & ~jnp.isfinite(state.term_time),
+                     t_next, state.term_time)
+
+    k = jnp.minimum(state.n_events, TRACE_LEN - 1)
+    state = replace(
+        state,
+        term_time=term,
+        n_events=state.n_events + 1,
+        trace_t=state.trace_t.at[k].set(t_next),
+        trace_kind=state.trace_kind.at[k].set(kind),
+        trace_who=state.trace_who.at[k].set(who),
+    )
+    return state
+
+
+def _continue(state, fleet, params, n_users, max_events):
+    _, finished = _user_flags(state, params, fleet, n_users)
+    return (~finished.all()) & (state.n_events < max_events)
+
+
+def init_state(gridlets, fleet, n_users: int,
+               first_sched: float = 0.0) -> SimState:
+    n = gridlets.n
+    return SimState(
+        t=jnp.asarray(0.0, jnp.float32),
+        g=gridlets,
+        pe=jnp.full((n,), -1, jnp.int32),
+        spent=jnp.zeros((n_users,), jnp.float32),
+        done_on=jnp.zeros((n_users, fleet.r), jnp.float32),
+        first_dispatch=jnp.full((n_users, fleet.r), INF, jnp.float32),
+        next_sched=jnp.asarray(first_sched, jnp.float32),
+        term_time=jnp.full((n_users,), INF, jnp.float32),
+        n_events=jnp.asarray(0, jnp.int32),
+        trace_t=jnp.full((TRACE_LEN,), INF, jnp.float32),
+        trace_kind=jnp.full((TRACE_LEN,), -1, jnp.int32),
+        trace_who=jnp.full((TRACE_LEN,), -1, jnp.int32),
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_users", "max_events", "max_pe"))
+def _run_jit(gridlets, fleet, params, n_users, max_events, max_pe):
+    state = init_state(gridlets, fleet, n_users)
+    state = jax.lax.while_loop(
+        lambda s: _continue(s, fleet, params, n_users, max_events),
+        lambda s: step(s, fleet, params, n_users, max_pe),
+        state)
+    # Users that never started (e.g. zero budget) terminate at final t.
+    term = jnp.where(jnp.isfinite(state.term_time), state.term_time, state.t)
+    return SimResult(gridlets=state.g, spent=state.spent, term_time=term,
+                     n_events=state.n_events,
+                     trace=(state.trace_t, state.trace_kind, state.trace_who))
+
+
+def run(gridlets, fleet, params: SimParams, n_users: int,
+        max_events: int) -> SimResult:
+    """Run a full experiment: broker-driven scheduling + execution."""
+    return _run_jit(gridlets, fleet, params, n_users, max_events,
+                    fleet.max_pe)
+
+
+def run_inner(gridlets, fleet, params: SimParams, n_users: int,
+              max_events: int, max_pe: int) -> SimResult:
+    """Trace-safe variant for use under vmap/jit: max_pe passed statically."""
+    state = init_state(gridlets, fleet, n_users)
+    state = jax.lax.while_loop(
+        lambda s: _continue(s, fleet, params, n_users, max_events),
+        lambda s: step(s, fleet, params, n_users, max_pe),
+        state)
+    term = jnp.where(jnp.isfinite(state.term_time), state.term_time, state.t)
+    return SimResult(gridlets=state.g, spent=state.spent, term_time=term,
+                     n_events=state.n_events,
+                     trace=(state.trace_t, state.trace_kind, state.trace_who))
+
+
+def run_direct(gridlets, fleet, resource_idx, dispatch_time,
+               max_events: int) -> SimResult:
+    """Broker-less mode: Gridlets are pre-routed to ``resource_idx`` and
+    enter the network at ``dispatch_time`` -- the paper's Table 1 / Figs 9
+    and 12 scenario (arrivals straight into one resource).
+    """
+    from .types import replace
+    n = gridlets.n
+    r = jnp.broadcast_to(jnp.asarray(resource_idx, jnp.int32), (n,))
+    t0 = jnp.broadcast_to(jnp.asarray(dispatch_time, jnp.float32), (n,))
+    delay = network.transfer_delay(gridlets.in_bytes, fleet.baud_rate[r])
+    g = replace(gridlets,
+                status=jnp.full((n,), IN_TRANSIT, jnp.int32),
+                resource=r, assigned=r, t_event=t0 + delay)
+    params = default_params(jnp.asarray(-1.0), jnp.asarray(0.0),
+                            jnp.asarray(0), 1, fleet.r)  # brokers inert
+    return _run_jit(g, fleet, params, 1, max_events, fleet.max_pe)

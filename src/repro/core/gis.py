@@ -1,0 +1,53 @@
+"""Grid Information Service (``gridsim.GridInformationService``).
+
+Resources register at simulation start; brokers query for the list of
+registered, currently-available resources and their characteristics
+(REGISTER_RESOURCE / RESOURCE_LIST / RESOURCE_CHARACTERISTICS /
+RESOURCE_DYNAMICS tags in paper Fig 14).
+
+Vectorised adaptation: the registry is a boolean availability mask over the
+fleet table; "querying" is masked reads.  Dynamic behaviour (resources
+joining/failing mid-run -- the fault-tolerance hook) flips mask entries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .calendar import effective_mips
+from .types import pytree_dataclass
+
+
+@pytree_dataclass
+class GIS:
+    registered: jax.Array  # bool[R]
+
+
+def init(fleet) -> GIS:
+    """All fleet resources register themselves at start-up (paper 3.4)."""
+    return GIS(registered=jnp.ones((fleet.r,), bool))
+
+
+def register(gis: GIS, idx) -> GIS:
+    return GIS(registered=gis.registered.at[idx].set(True))
+
+
+def deregister(gis: GIS, idx) -> GIS:
+    """Resource failure / administrative removal."""
+    return GIS(registered=gis.registered.at[idx].set(False))
+
+
+def resource_list(gis: GIS) -> jax.Array:
+    """RESOURCE_LIST: availability mask the broker iterates over."""
+    return gis.registered
+
+
+def dynamics(gis: GIS, fleet, t):
+    """RESOURCE_DYNAMICS: advertised aggregate rate + price per resource.
+
+    Unregistered resources advertise zero capacity, so broker code needs no
+    special-casing.
+    """
+    rate = effective_mips(fleet, t) * fleet.num_pe.astype(jnp.float32)
+    rate = jnp.where(gis.registered, rate, 0.0)
+    return rate, fleet.cost_per_sec

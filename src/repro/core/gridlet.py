@@ -1,0 +1,87 @@
+"""Gridlet batches (struct-of-arrays form of ``gridsim.Gridlet``).
+
+A Gridlet is the unit of schedulable work: job length in MI (million
+instructions), input/output payload sizes in bytes, and the originating
+user.  The SoA layout is the vectorised analogue of ``gridsim.GridletList``:
+one fixed-capacity table holds every Gridlet of every user in the
+simulation, which is what lets the whole experiment run inside one jit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import rand
+from .types import CREATED, INF, pytree_dataclass
+
+
+@pytree_dataclass
+class GridletBatch:
+    """All per-gridlet state. Shape [N] everywhere."""
+
+    # --- immutable description (gridsim.Gridlet fields) ---
+    length_mi: jax.Array      # f32: processing requirement in MI
+    in_bytes: jax.Array       # f32: input file size
+    out_bytes: jax.Array      # f32: output file size
+    user: jax.Array           # i32: originating user entity
+    created: jax.Array        # f32: submission time at the broker
+
+    # --- mutable lifecycle state (gridsim.ResGridlet fields) ---
+    status: jax.Array         # i32: types.CREATED .. FAILED
+    resource: jax.Array       # i32: assigned resource (-1 = none)
+    assigned: jax.Array       # i32: broker's planned resource (-1 = none)
+    remaining: jax.Array      # f32: remaining MI
+    t_event: jax.Array        # f32: pending arrival/return timestamp (else inf)
+    start: jax.Array          # f32: first execution instant at the resource
+    finish: jax.Array         # f32: completion instant at the resource
+    returned: jax.Array       # f32: instant the result reached the broker
+    cost: jax.Array           # f32: committed processing cost (G$)
+
+    @property
+    def n(self) -> int:
+        return self.length_mi.shape[0]
+
+
+def make_batch(length_mi, in_bytes=None, out_bytes=None, user=None,
+               created=None) -> GridletBatch:
+    length_mi = jnp.asarray(length_mi, jnp.float32)
+    n = length_mi.shape[0]
+    zeros = jnp.zeros((n,), jnp.float32)
+
+    def arr(x, default, dtype=jnp.float32):
+        if x is None:
+            return default
+        return jnp.broadcast_to(jnp.asarray(x, dtype), (n,))
+
+    return GridletBatch(
+        length_mi=length_mi,
+        in_bytes=arr(in_bytes, zeros),
+        out_bytes=arr(out_bytes, zeros),
+        user=arr(user, jnp.zeros((n,), jnp.int32), jnp.int32),
+        created=arr(created, zeros),
+        status=jnp.full((n,), CREATED, jnp.int32),
+        resource=jnp.full((n,), -1, jnp.int32),
+        assigned=jnp.full((n,), -1, jnp.int32),
+        remaining=length_mi,
+        t_event=jnp.full((n,), INF, jnp.float32),
+        start=jnp.full((n,), INF, jnp.float32),
+        finish=jnp.full((n,), INF, jnp.float32),
+        returned=jnp.full((n,), INF, jnp.float32),
+        cost=zeros,
+    )
+
+
+def task_farm(key: jax.Array, n_jobs: int, n_users: int = 1,
+              base_mi: float = 10_000.0, noise: float = 0.10,
+              in_bytes: float = 0.0, out_bytes: float = 0.0) -> GridletBatch:
+    """Paper section 5.2 application model.
+
+    ``n_jobs`` Gridlets per user, each at least ``base_mi`` MI with a random
+    0..``noise`` variation on the positive side (GridSimRandom.real with
+    f_L=0, f_M=noise).  base_mi=10,000 MI == 100 time units on the standard
+    100-MIPS PE (gridsim.GridSimStandardPE).
+    """
+    n = n_jobs * n_users
+    mi = rand.real(key, jnp.full((n,), base_mi, jnp.float32), 0.0, noise)
+    user = jnp.repeat(jnp.arange(n_users, dtype=jnp.int32), n_jobs)
+    return make_batch(mi, in_bytes=in_bytes, out_bytes=out_bytes, user=user)

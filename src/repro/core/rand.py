@@ -1,0 +1,33 @@
+"""``gridsim.GridSimRandom`` reimplemented on jax.random.
+
+The paper defines ``real(d, f_L, f_M)`` mapping a predicted value ``d`` to a
+random real-world value in ``[(1-f_L)*d, (1+f_M)*d]`` via
+
+    d * (1 - f_L + (f_L + f_M) * rd),   rd ~ U[0, 1).
+
+Determinism is by explicit key threading (strictly stronger repeatability
+than the Java RNG the paper used, which is the point of the toolkit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Default I/O uncertainty factors mirroring GridSimRandom's situation table.
+FACTORS = {
+    "exec": (0.0, 0.10),       # paper section 5.2: 0..10% on the positive side
+    "net_io": (0.05, 0.05),
+    "none": (0.0, 0.0),
+}
+
+
+def real(key: jax.Array, d, f_low, f_more):
+    """Vectorised GridSimRandom.real; ``d`` may be any shaped array."""
+    d = jnp.asarray(d, jnp.float32)
+    rd = jax.random.uniform(key, d.shape, jnp.float32)
+    return d * (1.0 - f_low + (f_low + f_more) * rd)
+
+
+def real_named(key: jax.Array, d, situation: str = "exec"):
+    f_low, f_more = FACTORS[situation]
+    return real(key, d, f_low, f_more)

@@ -1,0 +1,72 @@
+"""Advance reservation (paper feature list: "Resources can be booked").
+
+Launch-level (non-jit) capacity calendar: bookings hold PEs on a resource
+over [start, end).  The engine consumes reservations as a background-load
+term; the launcher uses it to hold slices for scheduled jobs.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import itertools
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class Reservation:
+    rid: int
+    resource: int
+    pes: int
+    start: float
+    end: float
+    user: int = 0
+
+
+class ReservationBook:
+    """Per-resource booking calendar with conflict detection."""
+
+    def __init__(self, num_pe: List[int]):
+        self.num_pe = list(num_pe)
+        self._by_resource: List[List[Reservation]] = \
+            [[] for _ in self.num_pe]
+        self._ids = itertools.count()
+
+    def peak_usage(self, resource: int, start: float, end: float) -> int:
+        """Max PEs simultaneously booked on [start, end)."""
+        events = []
+        for r in self._by_resource[resource]:
+            if r.end <= start or r.start >= end:
+                continue
+            events.append((max(r.start, start), r.pes))
+            events.append((min(r.end, end), -r.pes))
+        events.sort()
+        peak = cur = 0
+        for _, d in events:
+            cur += d
+            peak = max(peak, cur)
+        return peak
+
+    def book(self, resource: int, pes: int, start: float,
+             end: float, user: int = 0) -> Reservation:
+        if not 0 <= resource < len(self.num_pe):
+            raise ValueError(f"no such resource {resource}")
+        if pes <= 0 or end <= start:
+            raise ValueError("reservation must hold >0 PEs over >0 time")
+        if self.peak_usage(resource, start, end) + pes \
+                > self.num_pe[resource]:
+            raise ValueError("reservation conflict: not enough free PEs")
+        res = Reservation(next(self._ids), resource, pes, start, end, user)
+        bisect.insort(self._by_resource[resource], res,
+                      key=lambda r: r.start)
+        return res
+
+    def cancel(self, res: Reservation) -> None:
+        self._by_resource[res.resource].remove(res)
+
+    def reserved_pes(self, resource: int, t: float) -> int:
+        return sum(r.pes for r in self._by_resource[resource]
+                   if r.start <= t < r.end)
+
+    def load_factor(self, resource: int, t: float) -> float:
+        """Reservation-induced load for calendar.effective_mips."""
+        return self.reserved_pes(resource, t) / max(self.num_pe[resource], 1)

@@ -1,0 +1,98 @@
+"""High-level experiment drivers (the paper's section-4 "recipe").
+
+`run_experiment` = create resources + users + brokers, start the clock,
+collect statistics -- one call, one jit.  `sweep` vmaps a whole grid of
+(deadline, budget) scenarios, which is how the repo regenerates the
+paper's Figures 21-38 in seconds instead of one simulation per point.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import economy, engine, gridlet
+from .types import DONE, OPT_COST
+
+
+class ExperimentResult(NamedTuple):
+    n_done: jax.Array        # f32[U] gridlets completed per user
+    spent: jax.Array         # f32[U] budget spent per user
+    term_time: jax.Array     # f32[U] broker termination time
+    time_utilization: jax.Array   # f32[U] term_time / deadline
+    budget_utilization: jax.Array  # f32[U] spent / budget
+    per_resource_done: jax.Array  # f32[U,R] completions by resource
+    gridlets: object
+
+
+def _max_events(n_gridlets: int, n_users: int, horizon: float,
+                min_period: float) -> int:
+    # 4 events per gridlet lifecycle + broker polls over the horizon.
+    return int(4 * n_gridlets + horizon / max(min_period, 1e-6) + 64)
+
+
+def summarize(res: engine.SimResult, params, n_users: int,
+              n_resources: int) -> ExperimentResult:
+    g = res.gridlets
+    done = (g.status == DONE).astype(jnp.float32)
+    n_done = jax.ops.segment_sum(done, g.user, num_segments=n_users)
+    ur = g.user * n_resources + jnp.clip(g.resource, 0, n_resources - 1)
+    per_res = jax.ops.segment_sum(
+        done, ur, num_segments=n_users * n_resources
+    ).reshape(n_users, n_resources)
+    return ExperimentResult(
+        n_done=n_done,
+        spent=res.spent,
+        term_time=res.term_time,
+        time_utilization=res.term_time / jnp.maximum(params.deadline, 1e-30),
+        budget_utilization=res.spent / jnp.maximum(params.budget, 1e-30),
+        per_resource_done=per_res,
+        gridlets=g,
+    )
+
+
+def run_experiment(gridlets_batch, fleet, deadline, budget,
+                   opt=OPT_COST, n_users: int = 1,
+                   max_events: int | None = None) -> ExperimentResult:
+    params = engine.default_params(deadline, budget, opt, n_users, fleet.r)
+    if max_events is None:
+        horizon = float(jnp.max(params.deadline)) * 2.0 + 100.0
+        max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
+    res = engine.run(gridlets_batch, fleet, params, n_users, max_events)
+    return summarize(res, params, n_users, fleet.r)
+
+
+def run_experiment_factors(gridlets_batch, fleet, d_factor, b_factor,
+                           opt=OPT_COST, n_users: int = 1,
+                           max_events: int | None = None):
+    """Paper 4.2.3: derive absolute deadline/budget from D-/B-factors."""
+    total_mi = gridlets_batch.length_mi.sum()
+    deadline = economy.deadline_from_factor(fleet, total_mi, d_factor)
+    budget = economy.budget_from_factor(fleet, total_mi, b_factor)
+    return run_experiment(gridlets_batch, fleet, deadline, budget, opt,
+                          n_users, max_events), (deadline, budget)
+
+
+def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
+          n_users: int = 1, max_events: int | None = None):
+    """vmap over the full deadline x budget grid (paper Figs 21-24).
+
+    deadlines: [D], budgets: [B] -> every field gains leading [D, B] dims.
+    """
+    deadlines = jnp.asarray(deadlines, jnp.float32)
+    budgets = jnp.asarray(budgets, jnp.float32)
+    if max_events is None:
+        horizon = float(deadlines.max()) * 2.0 + 100.0
+        max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
+    max_pe = fleet.max_pe  # static, resolved outside the trace
+
+    def one(d, b):
+        params = engine.default_params(d, b, opt, n_users, fleet.r)
+        res = engine.run_inner(gridlets_batch, fleet, params, n_users,
+                               max_events, max_pe)
+        return summarize(res, params, n_users, fleet.r)
+
+    f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
+    return jax.jit(f)(deadlines, budgets)

@@ -1,0 +1,63 @@
+"""``gridsim.GridStatistics`` / ``gridsim.Accumulator`` analogues.
+
+Accumulator keeps (count, sum, sum of squares, min, max) so mean/std/
+extrema queries are O(1); it is a pytree so it can be threaded through jit
+and updated inside lax loops (the RECORD_STATISTICS event of Fig 14).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import pytree_dataclass
+
+
+@pytree_dataclass
+class Accumulator:
+    count: jax.Array
+    total: jax.Array
+    total_sq: jax.Array
+    vmin: jax.Array
+    vmax: jax.Array
+
+
+def accumulator() -> Accumulator:
+    z = jnp.zeros((), jnp.float32)
+    return Accumulator(count=z, total=z, total_sq=z,
+                       vmin=jnp.asarray(jnp.inf, jnp.float32),
+                       vmax=jnp.asarray(-jnp.inf, jnp.float32))
+
+
+def add(acc: Accumulator, value, weight=1.0) -> Accumulator:
+    v = jnp.asarray(value, jnp.float32)
+    w = jnp.asarray(weight, jnp.float32)
+    return Accumulator(
+        count=acc.count + w,
+        total=acc.total + v * w,
+        total_sq=acc.total_sq + v * v * w,
+        vmin=jnp.minimum(acc.vmin, jnp.where(w > 0, v, jnp.inf)),
+        vmax=jnp.maximum(acc.vmax, jnp.where(w > 0, v, -jnp.inf)),
+    )
+
+
+def add_many(acc: Accumulator, values, mask=None) -> Accumulator:
+    """Bulk insert of a vector, optionally masked -- one fused update."""
+    v = jnp.asarray(values, jnp.float32)
+    m = jnp.ones_like(v) if mask is None else jnp.asarray(mask, jnp.float32)
+    return Accumulator(
+        count=acc.count + m.sum(),
+        total=acc.total + (v * m).sum(),
+        total_sq=acc.total_sq + (v * v * m).sum(),
+        vmin=jnp.minimum(acc.vmin, jnp.where(m > 0, v, jnp.inf).min()),
+        vmax=jnp.maximum(acc.vmax, jnp.where(m > 0, v, -jnp.inf).max()),
+    )
+
+
+def mean(acc: Accumulator) -> jax.Array:
+    return acc.total / jnp.maximum(acc.count, 1.0)
+
+
+def std(acc: Accumulator) -> jax.Array:
+    m = mean(acc)
+    var = acc.total_sq / jnp.maximum(acc.count, 1.0) - m * m
+    return jnp.sqrt(jnp.maximum(var, 0.0))

@@ -1,0 +1,67 @@
+"""Shared enums / constants for the GridSim-in-JAX core.
+
+Mirrors ``gridsim.GridSimTags`` (paper Fig 14) where the tag has an
+observable analogue in the vectorised engine.  Tags that only existed to
+route messages between Java threads (RESOURCE_CHARACTERISTICS, ...) are
+represented by direct function calls on the fleet arrays instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+# ----------------------------------------------------------------------
+# Gridlet lifecycle status (superset of gridsim.Gridlet status codes).
+# ----------------------------------------------------------------------
+CREATED = 0      # at the broker, not yet dispatched
+IN_TRANSIT = 1   # dispatched, network transfer user -> resource
+QUEUED = 2       # waiting for a free PE (space-shared only)
+RUNNING = 3      # executing on a PE (or PE share)
+RETURNING = 4    # finished, network transfer resource -> user
+DONE = 5         # returned to originator
+FAILED = 6       # resource failure / cancelled
+
+# Resource allocation policy (gridsim.ResourceCharacteristics).
+TIME_SHARED = 0
+SPACE_SHARED = 1
+
+# Space-shared queue discipline.
+FCFS = 0
+SJF = 1
+
+# Broker optimisation strategy (paper section 4.2.2).
+OPT_COST = 0
+OPT_TIME = 1
+OPT_COST_TIME = 2
+OPT_NONE = 3
+
+# Engine event kinds (the analogue of GridSimTags command tags).
+EV_NONE = 0
+EV_ARRIVAL = 1      # Gridlet reaches a resource       (GRIDLET_SUBMIT)
+EV_COMPLETION = 2   # internal completion forecast      (paper section 3.5)
+EV_RETURN = 3       # Gridlet back at the broker        (GRIDLET_RETURN)
+EV_BROKER = 4       # periodic scheduling event         (EXPERIMENT)
+EV_END = 5          # END_OF_SIMULATION
+
+INF = float("inf")
+
+
+def pytree_dataclass(cls):
+    """Register a frozen dataclass as a JAX pytree (all fields are leaves)."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+
+    def flatten(obj):
+        return [getattr(obj, n) for n in fields], None
+
+    def unflatten(_, leaves):
+        return cls(**dict(zip(fields, leaves)))
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+def replace(obj: Any, **kw: Any) -> Any:
+    return dataclasses.replace(obj, **kw)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+flash_attention  fused GQA attention (window / softcap / causal)
+ssd_scan         Mamba-2 SSD chunk scan with VMEM-resident state
+event_scan       GridSim Fig 8 PE-share allocation + forecast
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), a jitted wrapper in
+ops.py, and a pure-jnp oracle in ref.py.  On this CPU container they run
+in interpret mode; the BlockSpec tiling targets TPU v5e VMEM.
+"""
+from . import event_scan, flash_attention, ops, ref, ssd_scan

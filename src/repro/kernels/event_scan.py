@@ -1,0 +1,89 @@
+"""Pallas TPU kernel for the GridSim inner loop: Fig 8 PE-share
+allocation + earliest-completion forecast, batched over resources.
+
+This is the simulator's hot spot at fleet scale (the engine evaluates it
+on every event over [resources x job-slots] state).  Per resource row:
+
+  rank_j  = |{j' : remaining_j' < remaining_j}|     (within the row)
+  k       = g // P,  extra = g % P,  msc = (P - extra) * k
+  rate_j  = eff_mips / (k + [rank_j >= msc])        (Fig 8 shares)
+  t_min   = min_j remaining_j / rate_j              (forecast event)
+
+Tiling: grid over resource blocks; each block holds [block_r, J] state in
+VMEM (J <= 256 -> <=256 KB fp32).  Ranking uses an explicit [J, J]
+comparison per row -- O(J^2) VPU work that replaces the engine's XLA
+lexsort; J is the per-resource job-slot bound, so the quadratic term is
+tiny and fully data-parallel.  Oracle: repro.kernels.ref.event_scan_ref
+(and transitively repro.core.engine._rates, which it must agree with).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.0e38
+
+
+def _kernel(remaining_ref, mips_ref, pe_ref, rate_ref, tmin_ref):
+    rem = remaining_ref[...]                       # [R, J] f32
+    mips = mips_ref[...]                           # [R, 1]
+    npe = pe_ref[...]                              # [R, 1] f32
+    r, j = rem.shape
+
+    valid = (rem > 0.0) & (rem < BIG)
+    g = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)  # [R,1]
+
+    # rank within row by (remaining, index): pairwise comparison matrix
+    key = jnp.where(valid, rem, BIG)
+    lt = key[:, :, None] > key[:, None, :]         # j > j' strictly
+    idx = jax.lax.broadcasted_iota(jnp.int32, (j, j), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (j, j), 1)
+    tie = (key[:, :, None] == key[:, None, :]) & (idx > jdx)[None]
+    rank = jnp.sum((lt | tie) & valid[:, None, :],
+                   axis=2).astype(jnp.float32)     # [R, J]
+
+    k = jnp.floor(g / jnp.maximum(npe, 1.0))       # [R,1] min jobs per PE
+    extra = g - k * jnp.maximum(npe, 1.0)
+    msc = (npe - extra) * k                        # max-share count
+    divisor = k + (rank >= msc).astype(jnp.float32)
+    # g <= P: everyone gets a full PE
+    divisor = jnp.where(g <= npe, 1.0, divisor)
+    rate = jnp.where(valid, mips / jnp.maximum(divisor, 1.0), 0.0)
+    rate_ref[...] = rate
+
+    t = jnp.where(valid, rem / jnp.maximum(rate, 1e-30), BIG)
+    tmin_ref[...] = jnp.min(t, axis=1, keepdims=True)
+
+
+def event_scan(remaining, mips_eff, num_pe, *, block_r: int = 8,
+               interpret: bool = False):
+    """remaining: [R, J] (<=0 or >=BIG marks empty slots);
+    mips_eff, num_pe: [R].  Returns (rate [R, J], t_min [R])."""
+    r, j = remaining.shape
+    block_r = min(block_r, r)
+    assert r % block_r == 0, "pad the resource axis upstream"
+
+    rate, tmin = pl.pallas_call(
+        _kernel,
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, j), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(remaining.astype(jnp.float32),
+      mips_eff.astype(jnp.float32).reshape(r, 1),
+      num_pe.astype(jnp.float32).reshape(r, 1))
+    return rate, tmin[:, 0]

@@ -1,0 +1,137 @@
+"""Pallas TPU flash-attention kernel (fwd) with GQA / window / softcap.
+
+Tiling: grid = (batch x q_heads, Sq/block_q, Skv/block_kv); the innermost
+grid dimension is sequential on TPU, so the online-softmax accumulators
+(m, l, acc) live in VMEM scratch and persist across the KV sweep; the
+output block is written once on the last KV step.  Block shapes keep the
+working set in VMEM: q/o blocks [block_q, d], k/v blocks [block_kv, d],
+acc [block_q, d] fp32 -- with the default 512/1024 blocks and d=128 that
+is ~1.6 MB, well inside the ~16 MB VMEM budget, and both matmuls hit the
+MXU at [block_q, d] x [d, block_kv] and [block_q, block_kv] x
+[block_kv, d] (all dims multiples of 128 for the production head sizes).
+
+Causal / window block pairs that are fully masked are skipped with
+``pl.when`` (the XLA execution path in repro.models.attention skips them
+structurally via its static pair list; the kernel grid is dense but does
+no math on dead blocks).
+
+The pure-jnp oracle is repro.kernels.ref.flash_attention_ref; correctness
+is validated in interpret mode over a shape/dtype sweep in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, cap, block_q, block_kv, n_kv):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    iq = pl.program_id(1)
+    q_lo = iq * block_q
+    k_lo = ik * block_kv
+    # static-shape block skip conditions (traced scalars)
+    needed = jnp.asarray(True)
+    if causal:
+        needed &= k_lo <= q_lo + block_q - 1
+    if window:
+        needed &= k_lo + block_kv - 1 > q_lo - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)            # [bq, d]
+        k = k_ref[...].astype(jnp.float32)            # [bk, d]
+        v = v_ref[...]                                # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if cap:
+            s = jnp.tanh(s / cap) * cap
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_kv), 0)
+        kv_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), bool)
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...][:, 0]                     # [bq]
+        l_prev = l_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [bq, d]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = l_ref[...][:, 0]
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    cap: float = 0.0, block_q: int = 512,
+                    block_kv: int = 1024, interpret: bool = False):
+    """q: [B, Hq, Sq, d]; k, v: [B, Hkv, Skv, d] -> [B, Hq, Sq, d]."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, "pad upstream"
+    n_q, n_kv = sq // block_q, skv // block_kv
+    scale = d ** -0.5
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, cap=cap,
+        block_q=block_q, block_kv=block_kv, n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d),
+                         lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((None, block_kv, d),
+                         lambda bh, iq, ik, g=g: (bh // g, ik, 0)),
+            pl.BlockSpec((None, block_kv, d),
+                         lambda bh, iq, ik, g=g: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d)

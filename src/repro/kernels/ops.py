@@ -1,0 +1,52 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret=None`` auto-selects: compiled Pallas on TPU backends,
+interpret mode elsewhere (this container is CPU-only, so tests and
+benches run the kernels through the interpreter; the TPU lowering is the
+TARGET and is exercised by .lower() in the dry-run-adjacent kernel
+tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import event_scan as _event
+from . import flash_attention as _flash
+from . import ssd_scan as _ssd
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "cap", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                    block_q=512, block_kv=1024, interpret=None):
+    """q: [B, Hq, Sq, d]; k, v: [B, Hkv, Skv, d] -> [B, Hq, Sq, d]."""
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window, cap=cap, block_q=block_q,
+        block_kv=block_kv, interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "chunk", "block_h", "interpret"))
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk=256, block_h=8,
+             interpret=None):
+    """Mamba-2 SSD over chunks; see kernels.ssd_scan for shapes."""
+    return _ssd.ssd_scan(x, dt, a, b_mat, c_mat, chunk=chunk,
+                         block_h=block_h,
+                         interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def event_scan(remaining, mips_eff, num_pe, *, block_r=8, interpret=None):
+    """GridSim Fig 8 share allocation + completion forecast."""
+    return _event.event_scan(remaining, mips_eff, num_pe,
+                             block_r=block_r,
+                             interpret=_auto_interpret(interpret))

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each reference is written for clarity, not speed: naive materialised
+attention, a token-by-token SSM recurrence, and a direct transcription of
+paper Fig 8.  Kernel tests sweep shapes/dtypes and assert_allclose
+against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
+    """q: [B, Hq, Sq, d]; k, v: [B, Hkv, Skv, d] -> [B, Hq, Sq, d]."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
+                   k.astype(jnp.float32)) * d ** -0.5
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a, b_mat, c_mat):
+    """Token-by-token SSM recurrence (the SSD semantics).
+
+    x: [B,S,H,P]; dt: [B,S,H]; a: [H]; b_mat/c_mat: [B,S,N] -> [B,S,H,P].
+    """
+    bs, s, h, p = x.shape
+    n = b_mat.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        gain = jnp.exp(dtt * a)
+        state = state * gain[..., None, None] + jnp.einsum(
+            "bn,bh,bhp->bhpn", bt.astype(jnp.float32),
+            dtt.astype(jnp.float32), xt.astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), state)
+        return state, y
+
+    init = jnp.zeros((bs, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, init, tuple(jnp.moveaxis(t, 1, 0)
+                          for t in (x, dt, b_mat, c_mat)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def event_scan_ref(remaining, mips_eff, num_pe):
+    """Paper Fig 8, directly transcribed per resource row.
+
+    remaining: [R, J] (<=0 / huge marks empty); mips_eff, num_pe: [R].
+    Returns (rate [R, J], t_min [R]).
+    """
+    import numpy as np
+    remaining = np.asarray(remaining, np.float64)
+    mips_eff = np.asarray(mips_eff, np.float64)
+    num_pe = np.asarray(num_pe, np.int64)
+    r_n, j_n = remaining.shape
+    rate = np.zeros((r_n, j_n))
+    tmin = np.full((r_n,), 3.0e38)
+    for r in range(r_n):
+        jobs = [(remaining[r, j], j) for j in range(j_n)
+                if 0 < remaining[r, j] < 3.0e38]
+        g, pe = len(jobs), int(num_pe[r])
+        if g == 0:
+            continue
+        jobs.sort()
+        if g <= pe:
+            shares = {j: 1.0 for _, j in jobs}
+        else:
+            k, extra = g // pe, g % pe
+            msc = (pe - extra) * k
+            shares = {}
+            for rank, (_, j) in enumerate(jobs):
+                shares[j] = 1.0 / (k if rank < msc else k + 1)
+        for j, sh in shares.items():
+            rate[r, j] = mips_eff[r] * sh
+            tmin[r] = min(tmin[r], remaining[r, j] / rate[r, j])
+    return (jnp.asarray(rate, jnp.float32),
+            jnp.asarray(tmin, jnp.float32))

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunk scan (arXiv:2405.21060).
+
+Grid = (batch, H/block_h, S/chunk); the chunk axis is innermost and
+sequential on TPU, so the recurrent state [block_h, P, N] persists in
+VMEM scratch across chunks (exactly the inter-chunk recurrence).  Within
+a chunk, the quadratic "attention-like" form runs on the MXU:
+
+    cum   = LT_ones[Q,Q] @ (dt * a)          (cumsum as a matmul)
+    CB    = C[Q,N] @ B[Q,N]^T                (MXU)
+    y_in  = (CB * decay * dt) @ x            (per-head batched MXU)
+    y_out = (C * decay_q) @ state            (MXU)
+    state = state * gain + (B * w)^T @ x     (MXU)
+
+VMEM working set at production sizes (Q=256, block_h=8, P=64, N=128):
+x 512 KB + decay [Q,Q,block_h] 2 MB + state 512 KB (fp32) -- ~4 MB total.
+All matmul dims are multiples of 64/128 -> MXU-aligned.
+
+Head blocking exists because B/C are shared across heads (n_groups=1):
+the [Q,Q,H] decay tensor is the only H-wide intermediate, and blocking H
+keeps it inside VMEM.  Oracle: repro.kernels.ref.ssd_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+            chunk, n_chunks):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = chunk
+    x = x_ref[...].astype(jnp.float32)        # [Q, Hb, P]
+    dt = dt_ref[...].astype(jnp.float32)      # [Q, Hb]
+    a = a_ref[...].astype(jnp.float32)        # [1, Hb]
+    bm = b_ref[...].astype(jnp.float32)       # [Q, N]
+    cm = c_ref[...].astype(jnp.float32)       # [Q, N]
+    hb, p = x.shape[1], x.shape[2]
+    n = bm.shape[1]
+
+    da = dt * a[0][None, :]                   # [Q, Hb]
+    lt = jnp.tril(jnp.ones((q, q), jnp.float32))
+    cum = jax.lax.dot_general(lt, da, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    seg_end = cum[-1]                         # [Hb]
+
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,Q]
+    dec = jnp.exp(cum[:, None, :] - cum[None, :, :])      # [Q,Q,Hb]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    dec = jnp.where(causal[:, :, None], dec, 0.0)
+    w = cb[:, :, None] * dec * dt[None, :, :]             # [Q,K,Hb]
+
+    # y_intra[q,h,p] = sum_k w[q,k,h] x[k,h,p]   (batched over h)
+    w_h = jnp.transpose(w, (2, 0, 1))                     # [Hb,Q,K]
+    x_h = jnp.transpose(x, (1, 0, 2))                     # [Hb,K,P]
+    y_intra = jax.lax.dot_general(
+        w_h, x_h, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)               # [Hb,Q,P]
+
+    state = state_ref[...].reshape(hb, p, n)              # [Hb,P,N]
+    dec_q = jnp.exp(cum)                                  # [Q,Hb]
+    # y_inter[q,h,p] = dec_q[q,h] * sum_n c[q,n] state[h,p,n]
+    cs = jax.lax.dot_general(
+        jnp.broadcast_to(cm[None], (hb, q, n)), state,
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)               # [Hb,Q,P]
+    y_inter = cs * jnp.transpose(dec_q, (1, 0))[:, :, None]
+    y = y_intra + y_inter                                 # [Hb,Q,P]
+    y_ref[...] = jnp.transpose(y, (1, 0, 2)).astype(y_ref.dtype)
+
+    # state update: S_h <- S_h * exp(seg_end_h) + sum_k wk[k,h] B_k x_k
+    wk = jnp.exp(seg_end[None, :] - cum) * dt             # [Q,Hb]
+    xw = x * wk[:, :, None]                               # [Q,Hb,P]
+    xw_h = jnp.transpose(xw, (1, 2, 0))                   # [Hb,P,Q]
+    s_c = jax.lax.dot_general(
+        xw_h, jnp.broadcast_to(bm[None], (hb, q, n)),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)               # [Hb,P,N]
+    new_state = state * jnp.exp(seg_end)[:, None, None] + s_c
+    state_ref[...] = new_state.reshape(hb * p, n)
+
+
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 256,
+             block_h: int = 8, interpret: bool = False):
+    """x: [B,S,H,P]; dt: [B,S,H] (>0); a: [H] (<0); b/c: [B,S,N]."""
+    bs, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    block_h = min(block_h, h)
+    assert s % chunk == 0 and h % block_h == 0, "pad upstream"
+    nc, nh = s // chunk, h // block_h
+    a2 = jnp.broadcast_to(a[None, :], (1, h))
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bs, nh, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, block_h, p),
+                         lambda b, ih, ic: (b, ic, ih, 0)),
+            pl.BlockSpec((None, chunk, block_h),
+                         lambda b, ih, ic: (b, ic, ih)),
+            pl.BlockSpec((1, block_h), lambda b, ih, ic: (0, ih)),
+            pl.BlockSpec((None, chunk, n), lambda b, ih, ic: (b, ic, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, ih, ic: (b, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, block_h, p),
+                               lambda b, ih, ic: (b, ic, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_h * p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2, b_mat, c_mat)
+    return y

@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (train_step for training
+shapes, prefill/decode serve steps for inference shapes), attaches the
+production shardings from repro.dist.sharding, and runs
+``.lower().compile()`` on the target mesh -- 16x16 single-pod and 2x16x16
+multi-pod.  Sharding mismatches, unsupported collectives, or compile-time
+OOMs are failures of the framework and fail the cell.
+
+Artifacts (memory analysis, cost analysis, execution-weighted collective
+bytes) are written to benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json;
+the roofline table (benchmarks/roofline.py, EXPERIMENTS.md section
+Roofline) is derived from them.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "benchmarks", "artifacts", "dryrun")
+
+
+def _cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    d = os.path.abspath(os.path.join(ARTIFACTS, mesh_name))
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape}.json")
+
+
+def build_lowerable(arch: str, shape: str, mesh, overrides=None):
+    """Returns (fn, args, in_shardings, out_shardings, donate, meta)."""
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.dist import sharding as sh
+    from repro.models import api as api_mod, count_params
+    from repro.train import loop as loop_mod, optimizer as opt_mod
+
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    spec = configs.SHAPES[shape]
+    kind, seq, batch = spec["kind"], spec["seq_len"], spec["global_batch"]
+    total, active = count_params(cfg)
+    meta = {"arch": arch, "shape": shape, "kind": kind, "seq_len": seq,
+            "global_batch": batch, "params_total": int(total),
+            "params_active": int(active)}
+
+    key = jax.random.PRNGKey(0)
+
+    if kind == "train":
+        api = api_mod.make(cfg)
+        opt_cfg = opt_mod.AdamWConfig()
+        state_shape = jax.eval_shape(
+            lambda k: loop_mod.init_state(api, k, opt_cfg), key)
+        pspecs = sh.param_specs(state_shape["params"], mesh)
+        opt_spec = {"m": pspecs, "v": pspecs,
+                    "step": jax.sharding.PartitionSpec()}
+        if "master" in state_shape["opt"]:
+            opt_spec["master"] = pspecs
+        state_spec = {"params": pspecs, "opt": opt_spec}
+        batch_shape = api.input_specs("train", batch, seq)
+        batch_spec = sh.batch_specs(batch_shape, mesh)
+        fn = loop_mod.make_train_step(api, opt_cfg)
+        return (fn, (state_shape, batch_shape),
+                (state_spec, batch_spec), (state_spec, None), (0,), meta)
+
+    # serving shapes use bf16 parameters
+    cfg = cfg.scaled(param_dtype="bfloat16")
+    api = api_mod.make(cfg)
+    params_shape = jax.eval_shape(api.init, key)
+    pspecs = sh.param_specs(params_shape, mesh)
+
+    if kind == "prefill":
+        cache_shape = jax.eval_shape(
+            lambda: api.init_cache(batch, seq, jnp.bfloat16))
+        cache_spec = sh.cache_specs(cache_shape, mesh)
+        batch_shape = dict(api.input_specs("prefill", batch, seq))
+        batch_spec = dict(sh.batch_specs(batch_shape, mesh))
+        batch_shape["cache"] = cache_shape
+        batch_spec["cache"] = cache_spec
+
+        def fn(params, b):
+            return api.prefill(params, b)
+
+        return (fn, (params_shape, batch_shape), (pspecs, batch_spec),
+                (None, cache_spec), (1,), meta)
+
+    if kind == "decode":
+        cache_shape = jax.eval_shape(
+            lambda: api.init_cache(batch, seq, jnp.bfloat16))
+        cache_spec = sh.cache_specs(cache_shape, mesh)
+        batch_shape = api.input_specs("decode", batch, seq)
+        batch_spec = sh.batch_specs(batch_shape, mesh)
+
+        def fn(params, cache, b):
+            return api.decode(params, cache, b)
+
+        return (fn, (params_shape, cache_shape, batch_shape),
+                (pspecs, cache_spec, batch_spec), (None, cache_spec),
+                (1,), meta)
+
+    raise ValueError(kind)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             save: bool = True) -> dict:
+    import jax
+    from repro.configs import cells
+    from repro.dist import sharding as sh
+    from repro.launch import hlo
+    from repro.launch.mesh import make_production_mesh
+
+    skip = next((sk for a, s, _, sk in cells()
+                 if a == arch and s == shape), None)
+    record = {"arch": arch, "shape": shape,
+              "mesh": "2x16x16" if multi_pod else "16x16"}
+    if skip:
+        record.update(ok=True, skipped=True, skip_reason=skip)
+        if save:
+            with open(_cell_path(arch, shape, multi_pod), "w") as f:
+                json.dump(record, f, indent=1)
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        fn, args, in_specs, out_specs, donate, meta = build_lowerable(
+            arch, shape, mesh)
+        record.update(meta)
+        in_sh = jax.tree_util.tree_map(
+            lambda s: jax.NamedSharding(mesh, s), in_specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        out_sh = jax.tree_util.tree_map(
+            lambda s: jax.NamedSharding(mesh, s), out_specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        with mesh:
+            lowered = jitted.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+
+            mem = {}
+            try:
+                ma = compiled.memory_analysis()
+                for attr in ("argument_size_in_bytes",
+                             "output_size_in_bytes",
+                             "temp_size_in_bytes",
+                             "generated_code_size_in_bytes",
+                             "alias_size_in_bytes"):
+                    if hasattr(ma, attr):
+                        mem[attr] = int(getattr(ma, attr))
+            except Exception as e:  # backend-dependent
+                mem["error"] = str(e)
+
+            cost = {}
+            try:
+                ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0]
+                for k in ("flops", "transcendentals", "bytes accessed"):
+                    if k in ca:
+                        cost[k] = float(ca[k])
+            except Exception as e:
+                cost["error"] = str(e)
+
+            text = compiled.as_text()
+            coll = hlo.collective_bytes(text, n_dev)
+            weighted = hlo.weighted_cost(text)
+            record.update(
+                ok=True, skipped=False,
+                lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+                memory=mem, cost=cost, collective_bytes=coll,
+                collective_total=float(sum(coll.values())),
+                weighted=weighted,
+                hlo_bytes=len(text), n_devices=int(n_dev),
+            )
+            print(compiled.memory_analysis())
+            try:
+                print({k: v for k, v in (compiled.cost_analysis() or
+                                         {}).items()
+                       if k in ("flops", "bytes accessed")})
+            except Exception:
+                pass
+    except Exception as e:
+        record.update(ok=False, skipped=False, error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    if save:
+        with open(_cell_path(arch, shape, multi_pod), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell in a subprocess each")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import cells
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        failures = 0
+        for multi in meshes:
+            for arch, shape, _, _ in cells():
+                path = _cell_path(arch, shape, multi)
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("ok"):
+                            continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape]
+                if multi:
+                    cmd.append("--multi-pod")
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                with open(path) as f:
+                    rec = json.load(f) if os.path.exists(path) else {}
+                ok = rec.get("ok", False)
+                failures += 0 if ok else 1
+                print(f"[{'OK' if ok else 'FAIL'}] "
+                      f"{'2x16x16' if multi else '16x16'} {arch} {shape} "
+                      f"({time.time() - t0:.0f}s)"
+                      + ("" if ok else f"\n  {rec.get('error', r.stderr[-500:])}"),
+                      flush=True)
+        sys.exit(1 if failures else 0)
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("traceback",)}, indent=1))
+    if not rec.get("ok"):
+        print(rec.get("traceback", ""), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,496 @@
+"""HLO-text analysis: execution-weighted collective-transfer bytes.
+
+``cost_analysis()`` gives FLOPs/bytes but not collective traffic, so the
+roofline's third term is derived here: parse the compiled (partitioned)
+HLO module, walk the computation graph from ENTRY, multiply everything
+inside a ``while`` body by its trip count (jax scans lower to whiles whose
+condition compares the induction variable against a constant), and charge
+each collective a ring-model transfer cost per participating chip:
+
+  all-gather         bytes_out * (g-1)/g
+  reduce-scatter     bytes_out * (g-1)        (output is the shard)
+  all-reduce         2 * bytes * (g-1)/g      (reduce-scatter + all-gather)
+  all-to-all         bytes * (g-1)/g
+  collective-permute bytes
+
+g = replica-group size.  Byte counts are per-chip (the HLO is the
+per-partition module after GSPMD).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "e4m3": 1, "e5m2": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of all array literals in an HLO type string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [n_groups, group_size]
+        return int(m.group(2))
+    return total_devices
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    """computation name -> list of instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{$",
+                     line.rstrip())
+        if m and ("->" in line or line.startswith("ENTRY")
+                  or re.match(r"^%[\w\.\-]+", line)):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None and s:
+            comps[cur].append(s)
+    return comps
+
+
+_CALLSITE_RE = re.compile(
+    r"(?:condition|body|branch_computations|called_computations|to_apply|"
+    r"calls)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest s32 constant in the while condition == scan length bound."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(text: str, total_devices: int) -> Dict[str, float]:
+    """Execution-weighted per-chip transfer bytes by collective kind."""
+    comps = _split_computations(text)
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str, depth: int = 0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 40:
+            return {}
+        memo[name] = {}  # break cycles
+        out: Dict[str, float] = defaultdict(float)
+        for line in comps[name]:
+            # result type = first shape literal(s) before the op name
+            opm = re.search(r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+                            r"(?:\{[^}]*\})?))\s+([\w\-]+)", line)
+            if not opm:
+                continue
+            rtype, op = opm.group(1), opm.group(2)
+            base = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+            if base and not op.endswith("-done"):
+                g = _group_size(line, total_devices)
+                b = _shape_bytes(rtype)
+                if base == "all-gather":
+                    out[base] += b * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    out[base] += b * (g - 1)
+                elif base == "all-reduce":
+                    out[base] += 2 * b * (g - 1) / max(g, 1)
+                elif base == "all-to-all":
+                    out[base] += b * (g - 1) / max(g, 1)
+                else:  # collective-permute
+                    out[base] += b
+            if op == "while":
+                callees = _CALLSITE_RE.findall(line)
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                for k, v in walk(body, depth + 1).items() if body else ():
+                    out[k] += v * trips
+            elif op == "conditional":
+                branches = re.search(
+                    r"branch_computations=\{([^}]*)\}", line)
+                names = []
+                if branches:
+                    names = [n.strip().lstrip("%")
+                             for n in branches.group(1).split(",")]
+                else:
+                    names = [n.strip().lstrip("%") for grp in
+                             re.findall(r"(?:true|false)_computation="
+                                        r"%?([\w\.\-]+)", line) for n in
+                             [grp]]
+                agg: Dict[str, float] = defaultdict(float)
+                for n in names:
+                    for k, v in walk(n, depth + 1).items():
+                        agg[k] = max(agg[k], v)
+                for k, v in agg.items():
+                    out[k] += v
+            elif op in ("call", "custom-call", "fusion", "async-start",
+                        "all-reduce-start"):
+                m = re.search(r"(?:to_apply|called_computations=\{)"
+                              r"%?([\w\.\-]+)", line)
+                if m:
+                    for k, v in walk(m.group(1), depth + 1).items():
+                        out[k] += v
+        memo[name] = dict(out)
+        return memo[name]
+
+    entry = "__entry__"
+    if entry not in comps:
+        # fall back: treat whole text as one computation
+        comps[entry] = [l.strip() for l in text.splitlines()]
+    return dict(walk(entry))
+
+
+def total_collective_bytes(text: str, total_devices: int) -> float:
+    return float(sum(collective_bytes(text, total_devices).values()))
+
+
+_SKIP_BYTES_OPS = {
+    "get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_DEF_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+"
+    r"\[[0-9,]*\](?:\{[^}]*\})?))\s+([\w\-]+)")
+
+
+def _symtab(lines: List[str]) -> Dict[str, str]:
+    tab: Dict[str, str] = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            tab[m.group(1)] = m.group(2)
+    return tab
+
+
+def _dot_flops(line: str, result_type: str, tab: Dict[str, str]) -> float:
+    args = re.search(r"\bdot\(([^)]*)\)", line)
+    if not args:
+        return 0.0
+    ops = re.findall(r"%([\w\.\-]+)", args.group(1))
+    if not ops or ops[0] not in tab:
+        return 0.0
+    lhs = tab[ops[0]]
+    md = _SHAPE_RE.search(lhs)
+    if not md:
+        return 0.0
+    dims = [int(d) for d in md.group(2).split(",")] if md.group(2) else []
+    cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contract = 1
+    if cd and cd.group(1):
+        for i in cd.group(1).split(","):
+            if int(i) < len(dims):
+                contract *= dims[int(i)]
+    rd = _SHAPE_RE.search(result_type)
+    numel = 1
+    if rd and rd.group(2):
+        for d in rd.group(2).split(","):
+            numel *= int(d)
+    return 2.0 * numel * contract
+
+
+def weighted_cost(text: str) -> Dict[str, float]:
+    """Execution-weighted per-chip dot-FLOPs and HBM traffic bytes.
+
+    Unlike ``compiled.cost_analysis()`` (which visits every instruction
+    once), this multiplies `while` bodies by their trip counts -- jax
+    scans over layers / attention block pairs / loss chunks otherwise
+    undercount by the scan length.  HBM bytes are counted at top-level
+    instruction boundaries (fusion internals are VMEM-resident).
+    """
+    comps = _split_computations(text)
+    tabs = {name: _symtab(lines) for name, lines in comps.items()}
+    # computations reached via fusion `calls=` hold no HBM traffic
+    fused: set = set()
+    for lines in comps.values():
+        for line in lines:
+            if re.search(r"\bfusion\(", line):
+                m = re.search(r"calls=%?([\w\.\-]+)", line)
+                if m:
+                    fused.add(m.group(1))
+    memo: Dict[str, Tuple[float, float]] = {}
+
+    def _fusion_bytes(line: str, rtype: str, tab: Dict[str, str]) -> float:
+        """HBM traffic of one fusion call.
+
+        A fusion that only *slices* an operand reads the slice, not the
+        buffer (the flash pair-scan's dynamic-slice+einsum fusions would
+        otherwise look ~100x more HBM-bound than they are).  Charge each
+        operand by how the called computation consumes its parameter:
+        slice-family consumers -> 2x the largest slice; otherwise the
+        full buffer.  A dynamic-update-slice root writes only the update
+        region.
+        """
+        m = re.search(r"calls=%?([\w\.\-]+)", line)
+        callee = comps.get(m.group(1), []) if m else []
+        ctab = tabs.get(m.group(1), {}) if m else {}
+        args = re.search(r"\bfusion\(([^)]*)\)", line)
+        ops_ = re.findall(r"%([\w\.\-]+)", args.group(1)) if args else []
+        # map parameter index -> param name in callee
+        params = {}
+        for cl in callee:
+            pm = re.match(r"%?([\w\.\-]+)\s*=\s*[^=]*parameter\((\d+)\)",
+                          cl.replace("ROOT ", ""))
+            if pm:
+                params[int(pm.group(2))] = pm.group(1)
+        total = 0.0
+        for idx, opname in enumerate(ops_):
+            full = _shape_bytes(tab.get(opname, ""))
+            pname = params.get(idx)
+            if pname is None:
+                total += full
+                continue
+            slice_only, largest = True, 0.0
+            used = False
+            dus_target_only = True
+            for cl in callee:
+                if re.search(r"%" + re.escape(pname) + r"\b", cl) and \
+                        not re.match(r"(ROOT\s+)?%" + re.escape(pname)
+                                     + r"\s*=", cl):
+                    used = True
+                    dm = _DEF_RE.match(cl.replace("ROOT ", ""))
+                    cop = dm.group(3) if dm else ""
+                    if cop in ("dynamic-slice", "slice", "gather"):
+                        largest = max(largest,
+                                      _shape_bytes(dm.group(2)))
+                        dus_target_only = False
+                    elif cop == "dynamic-update-slice":
+                        da = re.search(r"dynamic-update-slice\(([^)]*)\)",
+                                       cl)
+                        dops = re.findall(r"%([\w\.\-]+)",
+                                          da.group(1)) if da else []
+                        if dops and dops[0] == pname:
+                            continue  # in-place update target: no read
+                        slice_only = False
+                        dus_target_only = False
+                        break
+                    else:
+                        slice_only = False
+                        dus_target_only = False
+                        break
+            if used and slice_only and largest > 0:
+                total += 2.0 * largest
+            elif used and slice_only and dus_target_only:
+                total += 0.0  # pure in-place DUS target
+            else:
+                total += full
+        # output side: peel unary chains (convert/bitcast/copy) off the
+        # root to find an underlying in-place dynamic-update-slice
+        root = next((cl for cl in callee if cl.startswith("ROOT")), "")
+        line_of = {}
+        for cl in callee:
+            dm = _DEF_RE.match(cl.replace("ROOT ", ""))
+            if dm:
+                line_of[dm.group(1)] = cl.replace("ROOT ", "")
+        cur = root.replace("ROOT ", "")
+        for _ in range(8):
+            dm = _DEF_RE.match(cur)
+            if not dm:
+                break
+            cop = dm.group(3)
+            if cop == "dynamic-update-slice":
+                ra = re.search(r"dynamic-update-slice\(([^)]*)\)", cur)
+                rops = re.findall(r"%([\w\.\-]+)",
+                                  ra.group(1)) if ra else []
+                upd = _shape_bytes(ctab.get(rops[1], "")) \
+                    if len(rops) > 1 else 0.0
+                return total + 2.0 * upd
+            if cop in ("convert", "bitcast", "copy", "transpose",
+                       "reshape"):
+                oa = re.search(r"\(([^)]*)\)", cur)
+                nxt = re.findall(r"%([\w\.\-]+)", oa.group(1)) \
+                    if oa else []
+                if nxt and nxt[0] in line_of:
+                    cur = line_of[nxt[0]]
+                    continue
+            break
+        total += _shape_bytes(rtype)
+        return total
+
+    def walk(name: str, depth: int = 0) -> Tuple[float, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 40:
+            return (0.0, 0.0)
+        memo[name] = (0.0, 0.0)
+        tab = tabs[name]
+        flops = bytes_ = 0.0
+        in_fusion = name in fused
+        for line in comps[name]:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            _, rtype, op = m.groups()
+            if op == "dot":
+                flops += _dot_flops(line, rtype, tab)
+            if not in_fusion and op not in _SKIP_BYTES_OPS:
+                # slice/gather-family ops touch only the slice, not the
+                # whole operand buffer (counting operands naively made
+                # the flash pair-scan look 20x more HBM-bound than it is)
+                if op == "fusion":
+                    b = _fusion_bytes(line, rtype, tab)
+                elif op in ("dynamic-slice", "slice", "gather"):
+                    b = 2.0 * _shape_bytes(rtype)        # read + write
+                elif op in ("dynamic-update-slice", "scatter"):
+                    args = re.search(r"\(([^)]*)\)", line)
+                    ops_ = re.findall(r"%([\w\.\-]+)",
+                                      args.group(1)) if args else []
+                    upd = _shape_bytes(tab.get(ops_[1], "")) \
+                        if len(ops_) > 1 else 0.0
+                    b = 3.0 * upd                        # r/w region + upd
+                else:
+                    b = _shape_bytes(rtype)
+                    args = re.search(r"\b" + re.escape(op) +
+                                     r"\(([^)]*)\)", line)
+                    if args:
+                        for o in re.findall(r"%([\w\.\-]+)",
+                                            args.group(1)):
+                            if o in tab:
+                                b += _shape_bytes(tab[o])
+                bytes_ += b
+            if op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                trips = _trip_count(comps.get(mc.group(1), [])) \
+                    if mc else 1
+                if mb:
+                    f2, b2 = walk(mb.group(1), depth + 1)
+                    flops += f2 * trips
+                    bytes_ += b2 * trips
+            elif op == "conditional":
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if mbr:
+                    best = (0.0, 0.0)
+                    for n in mbr.group(1).split(","):
+                        f2, b2 = walk(n.strip().lstrip("%"), depth + 1)
+                        best = (max(best[0], f2), max(best[1], b2))
+                    flops += best[0]
+                    bytes_ += best[1]
+            else:
+                mcall = re.search(r"(?:to_apply=|calls=)%?([\w\.\-]+)",
+                                  line)
+                if mcall:
+                    f2, b2 = walk(mcall.group(1), depth + 1)
+                    flops += f2
+                    bytes_ += b2
+        memo[name] = (flops, bytes_)
+        return memo[name]
+
+    f, b = walk("__entry__")
+    return {"dot_flops": f, "hbm_bytes": b}
+
+
+def top_collectives(text: str, total_devices: int, k: int = 15):
+    """Top-k collective op sites by execution-weighted transfer bytes.
+
+    Returns [(weighted_bytes, kind, result_type, trips, computation)].
+    Weighting walks the call graph from ENTRY like ``collective_bytes``.
+    """
+    comps = _split_computations(text)
+
+    # computation -> execution multiplier, via one walk from entry
+    mult: Dict[str, float] = defaultdict(float)
+
+    def walk(name: str, weight: float, depth: int = 0):
+        if name not in comps or depth > 40 or weight <= 0:
+            return
+        mult[name] += weight
+        for line in comps[name]:
+            opm = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+                            r"(?:\{[^}]*\})?)\s+([\w\-]+)", line)
+            if not opm:
+                continue
+            op = opm.group(1)
+            if op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                trips = _trip_count(comps.get(mc.group(1), [])) \
+                    if mc else 1
+                if mb:
+                    walk(mb.group(1), weight * trips, depth + 1)
+                if mc:
+                    walk(mc.group(1), weight, depth + 1)
+            elif op == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if m:
+                    for n in m.group(1).split(","):
+                        walk(n.strip().lstrip("%"), weight, depth + 1)
+            else:
+                m = re.search(r"(?:to_apply=|calls=|called_computations="
+                              r"\{)%?([\w\.\-]+)", line)
+                if m:
+                    walk(m.group(1), weight, depth + 1)
+
+    entry = "__entry__" if "__entry__" in comps else None
+    if entry:
+        walk(entry, 1.0)
+
+    rows = []
+    seen_entry_alias = comps.get("__entry__")
+    for cname, lines in comps.items():
+        if mult.get(cname, 0) == 0:
+            continue
+        if lines is seen_entry_alias and cname != "__entry__":
+            continue  # real entry counted under the __entry__ alias
+        w = mult[cname]
+        for line in lines:
+            opm = re.search(r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+                            r"(?:\{[^}]*\})?))\s+([\w\-]+)", line)
+            if not opm:
+                continue
+            rtype, op = opm.group(1), opm.group(2)
+            base = next((c for c in _COLLECTIVES if op.startswith(c)),
+                        None)
+            if not base or op.endswith("-done"):
+                continue
+            g = _group_size(line, total_devices)
+            b = _shape_bytes(rtype)
+            if base == "all-gather":
+                byt = b * (g - 1) / max(g, 1)
+            elif base == "reduce-scatter":
+                byt = b * (g - 1)
+            elif base == "all-reduce":
+                byt = 2 * b * (g - 1) / max(g, 1)
+            elif base == "all-to-all":
+                byt = b * (g - 1) / max(g, 1)
+            else:
+                byt = b
+            rows.append((byt * w, base, rtype[:90], w, cname[:40]))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:k]

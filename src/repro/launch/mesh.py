@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256 class).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis is the
+DCN dimension -- data parallelism with gradient compression attaches
+there, while "model" stays inside the ICI domain.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax use).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1,
+                   axis_names=("data", "model")):
+    """Small mesh over available (host) devices for tests/examples."""
+    return jax.make_mesh((data, model), axis_names)

@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Perf-iteration profiler: compile one cell and report the dominant
+collective sites (execution-weighted) and the weighted dot-FLOP count.
+This is the dry-run-world replacement for a wall-clock profile
+(see EXPERIMENTS.md section Perf).
+
+Usage:
+  python -m repro.launch.probe --arch deepseek-67b --shape train_4k
+         [--multi-pod] [--set key=value ...] [--dump /tmp/x.hlo]
+"""
+import argparse
+import json
+import sys
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or ():
+        k, v = p.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        if isinstance(v, list):
+            v = tuple(v)
+        out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--dump")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    import jax
+    from repro.launch import hlo
+    from repro.launch.dryrun import build_lowerable
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    n_dev = mesh.devices.size
+    overrides = parse_overrides(args.set)
+    fn, fargs, in_specs, out_specs, donate, meta = build_lowerable(
+        args.arch, args.shape, mesh, overrides or None)
+    in_sh = jax.tree_util.tree_map(
+        lambda s: jax.NamedSharding(mesh, s), in_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    out_sh = jax.tree_util.tree_map(
+        lambda s: jax.NamedSharding(mesh, s), out_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*fargs).compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+    ma = compiled.memory_analysis()
+    print(f"temp/device   {ma.temp_size_in_bytes/1e9:10.2f} GB")
+    print(f"args/device   {ma.argument_size_in_bytes/1e9:10.2f} GB")
+    coll = hlo.collective_bytes(text, n_dev)
+    for k, v in sorted(coll.items(), key=lambda kv: -kv[1]):
+        print(f"{k:20s} {v/1e9:12.2f} GB/device")
+    print("--- top collective sites (weighted) ---")
+    for byt, kind, rtype, trips, comp in hlo.top_collectives(
+            text, n_dev, args.top):
+        print(f"{byt/1e9:10.2f} GB  {kind:18s} x{trips:6.0f} {rtype:60s}"
+              f" in {comp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serving launcher: continuous batching on a reduced (or full) config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
+      [--requests 8] [--slots 4] [--max-len 96]
+"""
+import argparse
+import time
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.models import make
+    from repro.serve.engine import Request, Server
+
+    cfg = configs.get(args.arch) if args.full else configs.SMOKES[args.arch]
+    api = make(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    srv = Server(api, params, slots=args.slots, max_len=args.max_len)
+
+    key = jax.random.PRNGKey(1)
+    for rid in range(args.requests):
+        key, sub = jax.random.split(key)
+        plen = int(jax.random.randint(sub, (), 4, 20))
+        srv.submit(Request(
+            rid=rid,
+            prompt=jax.random.randint(sub, (plen,), 2,
+                                      cfg.vocab).tolist(),
+            max_new_tokens=12))
+    t0 = time.perf_counter()
+    done = srv.run_until_done()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {wall:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

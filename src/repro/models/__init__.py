@@ -1,0 +1,2 @@
+from . import api, attention, common, mamba2, mlp, transformer, whisper
+from .api import ModelApi, count_params, make

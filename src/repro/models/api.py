@@ -1,0 +1,240 @@
+"""Public model API: one constructor for all 10 assigned architectures.
+
+``make(cfg)`` returns a ``ModelApi`` with pure functions:
+
+  init(key) -> params
+  loss(params, batch) -> scalar            (training objective, remat'd)
+  prefill(params, batch) -> (last_logits, cache)
+  decode(params, cache, batch) -> (logits, cache)   one new token
+  init_cache(batch, max_len, dtype) -> cache pytree
+  input_specs(kind, batch, seq) -> batch dict of ShapeDtypeStruct
+
+Batch layouts per family:
+  dense/moe/ssm/hybrid: tokens [B,S] (+ targets for loss)
+  vlm:    tokens [B,S-nvis], vision_embeds [B,nvis,D], positions3 [3,B,S]
+  encdec: audio_embed [B,enc_seq,D], tokens [B,S]
+  decode adds: tokens [B,1] (+ positions3 [3,B,1] for vlm) and
+  cache_index: [] i32 (current cache fill; the new token writes there).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tf
+from . import whisper as wh
+from . import mamba2 as mamba_mod
+
+
+class ModelApi(NamedTuple):
+    cfg: Any
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    input_specs: Callable
+
+
+def _positions(batch, seq, cache_index=0):
+    return cache_index + jnp.broadcast_to(jnp.arange(seq)[None],
+                                          (batch, seq))
+
+
+# ----------------------------------------------------------------------
+# Decoder-only families (dense / moe / ssm / hybrid / vlm)
+# ----------------------------------------------------------------------
+
+def _decoder_api(cfg) -> ModelApi:
+    is_vlm = cfg.family == "vlm"
+    nvis = cfg.n_vision_tokens if is_vlm else 0
+
+    def embed_inputs(params, batch):
+        x = tf.embed(params, cfg, batch["tokens"])
+        if is_vlm:
+            cdt = x.dtype
+            x = jnp.concatenate(
+                [batch["vision_embeds"].astype(cdt), x], axis=1)
+            pos = batch["positions3"]
+        else:
+            b, s = batch["tokens"].shape
+            pos = _positions(b, s, batch.get("cache_index", 0))
+        return x, pos
+
+    def loss(params, batch):
+        x, pos = embed_inputs(params, batch)
+        hidden, _ = tf.hidden_states(params, cfg, x, pos, remat=True)
+        mask = batch.get("mask")
+        if is_vlm and mask is None:
+            b, s = hidden.shape[:2]
+            mask = jnp.concatenate(
+                [jnp.zeros((b, nvis), jnp.float32),
+                 jnp.ones((b, s - nvis), jnp.float32)], axis=1)
+        return tf.lm_loss(params, cfg, hidden, batch["targets"], mask)
+
+    def prefill(params, batch):
+        cache = batch["cache"]
+        x, pos = embed_inputs(params, batch)
+        hidden, cache = tf.hidden_states(params, cfg, x, pos, cache=cache,
+                                         cache_index=0)
+        lg = tf.logits(params, cfg, hidden[:, -1:])
+        return lg, cache
+
+    def decode(params, cache, batch):
+        ci = batch["cache_index"]
+        x = tf.embed(params, cfg, batch["tokens"])
+        if is_vlm:
+            pos = batch["positions3"]
+        else:
+            b, s = batch["tokens"].shape
+            pos = _positions(b, s, ci)
+        hidden, cache = tf.hidden_states(params, cfg, x, pos, cache=cache,
+                                         cache_index=ci)
+        return tf.logits(params, cfg, hidden), cache
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16):
+        return tf.init_caches(cfg, batch, max_len, dtype)
+
+    def input_specs(kind, batch, seq):
+        i32 = jnp.int32
+        cdt = jnp.dtype(cfg.compute_dtype)
+        sds = jax.ShapeDtypeStruct
+        if is_vlm:
+            base = {
+                "tokens": sds((batch, seq - nvis), i32),
+                "vision_embeds": sds((batch, nvis, cfg.d_model), cdt),
+                "positions3": sds((3, batch, seq), i32),
+            }
+        else:
+            base = {"tokens": sds((batch, seq), i32)}
+        if kind == "train":
+            base["targets"] = sds(
+                (batch, seq if is_vlm else seq), i32)
+            return base
+        if kind == "prefill":
+            return base
+        if kind == "decode":
+            d = {"tokens": sds((batch, 1), i32),
+                 "cache_index": sds((), i32)}
+            if is_vlm:
+                d["positions3"] = sds((3, batch, 1), i32)
+            return d
+        raise ValueError(kind)
+
+    return ModelApi(cfg, lambda key: tf.init_lm(key, cfg), loss, prefill,
+                    decode, init_cache, input_specs)
+
+
+# ----------------------------------------------------------------------
+# Encoder-decoder (whisper)
+# ----------------------------------------------------------------------
+
+def _encdec_api(cfg) -> ModelApi:
+    def loss(params, batch):
+        enc = wh.encode(params, cfg, batch["audio_embed"], remat=True)
+        kv = wh.cross_kv(params, cfg, enc)
+        hidden, _ = wh.decode_stack(params, cfg, batch["tokens"], kv,
+                                    remat=True)
+        return tf.lm_loss(params, cfg, hidden, batch["targets"])
+
+    def prefill(params, batch):
+        enc = wh.encode(params, cfg, batch["audio_embed"])
+        kv = wh.cross_kv(params, cfg, enc)
+        hidden, self_cache = wh.decode_stack(
+            params, cfg, batch["tokens"], kv,
+            cache=batch["cache"]["self"], cache_index=0)
+        lg = wh.logits(params, cfg, hidden[:, -1:])
+        return lg, {"self": self_cache, "cross": kv}
+
+    def decode(params, cache, batch):
+        ci = batch["cache_index"]
+        hidden, self_cache = wh.decode_stack(
+            params, cfg, batch["tokens"], cache["cross"],
+            cache=cache["self"], cache_index=ci)
+        return wh.logits(params, cfg, hidden), \
+            {"self": self_cache, "cross": cache["cross"]}
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16):
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                 cfg.head_dim)
+        kvshape = (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads,
+                   cfg.head_dim)
+        return {
+            "self": {"k": jnp.zeros(shape, dtype),
+                     "v": jnp.zeros(shape, dtype)},
+            "cross": (jnp.zeros(kvshape, dtype),
+                      jnp.zeros(kvshape, dtype)),
+        }
+
+    def input_specs(kind, batch, seq):
+        i32 = jnp.int32
+        cdt = jnp.dtype(cfg.compute_dtype)
+        sds = jax.ShapeDtypeStruct
+        audio = sds((batch, cfg.enc_seq, cfg.d_model), cdt)
+        if kind == "train":
+            return {"audio_embed": audio,
+                    "tokens": sds((batch, seq), i32),
+                    "targets": sds((batch, seq), i32)}
+        if kind == "prefill":
+            return {"audio_embed": audio, "tokens": sds((batch, seq), i32)}
+        if kind == "decode":
+            return {"tokens": sds((batch, 1), i32),
+                    "cache_index": sds((), i32)}
+        raise ValueError(kind)
+
+    return ModelApi(cfg, lambda key: wh.init_whisper(key, cfg), loss,
+                    prefill, decode, init_cache, input_specs)
+
+
+def make(cfg) -> ModelApi:
+    if cfg.family == "encdec":
+        return _encdec_api(cfg)
+    return _decoder_api(cfg)
+
+
+# ----------------------------------------------------------------------
+# Parameter counting (MODEL_FLOPS = 6 * N * D convention)
+# ----------------------------------------------------------------------
+
+def count_params(cfg):
+    """(total, active-per-token) parameter counts, analytic."""
+    d, f = cfg.d_model, cfg.d_ff
+    attn = d * cfg.n_heads * cfg.head_dim * 2 + \
+        d * cfg.n_kv_heads * cfg.head_dim * 2
+    dense_mlp = 3 * d * f
+    expert = 3 * d * f
+    moe_total = cfg.n_experts * expert + d * cfg.n_experts
+    moe_active = cfg.top_k * expert + d * cfg.n_experts
+
+    di = cfg.ssm_expand * d
+    mamba = d * (2 * di + 2 * cfg.d_state + cfg.ssm_heads) + di * d + \
+        cfg.conv_width * (di + 2 * cfg.d_state)
+
+    total = active = cfg.vocab * d  # embedding (tied head)
+    if cfg.family == "encdec":
+        enc = cfg.enc_layers * (attn + dense_mlp)
+        dec = cfg.n_layers * (2 * attn + dense_mlp)
+        total += enc + dec
+        return total, total
+    for layer in range(cfg.n_layers):
+        kind = tf._kind_of(cfg, layer)
+        if kind == "mamba":
+            total += mamba
+            active += mamba
+        else:
+            total += attn
+            active += attn
+            if cfg.family == "moe":
+                total += moe_total
+                active += moe_active
+            else:
+                total += dense_mlp
+                active += dense_mlp
+    if cfg.shared_period:
+        shared = attn + dense_mlp
+        total += shared
+        n_inv = tf.n_shared_invocations(cfg)
+        active += shared * n_inv  # applied n_inv times per token
+    return total, active

@@ -1,0 +1,490 @@
+"""GQA attention with sliding-window, soft-capping and KV caches.
+
+The dense math lives in ``attend_chunked`` -- a pure-jnp flash-style
+implementation: one ``lax.scan`` over a *statically precomputed list of
+(q-block, kv-block) pairs* with an online-softmax accumulator, so that
+
+  * peak memory is O(S * block) instead of O(S^2) -- required for the
+    32k prefill dry-runs;
+  * causal masking skips upper-triangle block pairs entirely and "local"
+    layers enumerate only in-window pairs: the compiled HLO FLOPs honestly
+    reflect O(S^2/2) causal and O(S * w) sliding-window cost (XLA counts
+    masked-but-executed work, so sparsity must be structural);
+  * the Pallas kernel (repro.kernels.flash_attention) implements the same
+    block algorithm with explicit VMEM BlockSpecs; this module is its
+    oracle and the CPU/dry-run execution path.
+
+Decode (single query against a pre-allocated cache) takes the dynamic
+path: the pair list cannot depend on the traced cache index, so it scans
+the (window-sliced) cache with a validity mask -- decode attention is
+bytes-bound and reads exactly the cache it should.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (_ambient_mesh, apply_mrope, apply_rope, dense_init,
+                     softcap)
+
+NEG_INF = -2.0 ** 30
+
+
+def _attn_sharding(q_block: int, batch: int):
+    """Sharding plan for the flash pair-scan buffers.
+
+    The q-block token axis takes "model" (512/16 = 32 rows/device): score
+    and PV matmuls then contract only replicated dims (head_dim / kv
+    block), so the forward pass needs NO per-pair collectives, and the
+    online-softmax carries are 1/model_parallel-sized per device.  KV
+    blocks replicate over "model" (they are the small side under GQA).
+    Heads deliberately do NOT take "model": hkv x g (e.g. 8 x 8 for 64
+    heads on a 16-way axis) is not expressible as a single-dim sharding,
+    and head_dim sharding would psum every score block (see
+    dist.sharding notes).  Returns (batch_axes, use_model) or None.
+    """
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return None
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    while baxes:
+        size = 1
+        for a in baxes:
+            size *= mesh.shape[a]
+        if batch % size == 0:
+            break
+        baxes = baxes[1:]
+    use_model = ("model" in mesh.axis_names
+                 and q_block % mesh.shape["model"] == 0
+                 and q_block > mesh.shape["model"])
+    if not baxes and not use_model:
+        return None
+    return (baxes if len(baxes) != 1 else baxes[0], use_model)
+
+
+def _constrain(x, spec):
+    from jax.sharding import PartitionSpec as P
+    spec = [None if (isinstance(s, tuple) and not s) else s for s in spec]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _plan_specs(plan):
+    baxes, use_model = plan
+    m = "model" if use_model else None
+    return baxes, m
+
+
+def init_attn(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, hq, hd), d, dtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), d, dtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), d, dtype),
+        "wo": dense_init(ks[3], (hq, hd, d), hq * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    return p
+
+
+def _pairs(nq, nk, q_block, kv_block, causal, window, q_offset):
+    """Static block pairs with unmasked entries, in two orders:
+    i-major (forward + dq pass) and j-major (dk/dv pass), each with
+    (idx0, idx1, is_first, is_last) flags for its major key."""
+    base = []
+    for i in range(nq):
+        q_lo = q_offset + i * q_block
+        q_hi = q_offset + (i + 1) * q_block - 1
+        for j in range(nk):
+            k_lo, k_hi = j * kv_block, (j + 1) * kv_block - 1
+            if causal and k_lo > q_hi:
+                continue
+            # window keeps kv positions kp > qp - window; the weakest
+            # constraint inside the block is at qp = q_lo.
+            if window and k_hi <= q_lo - window:
+                continue
+            base.append((i, j))
+    return _with_flags(base, 0), _with_flags(
+        sorted(base, key=lambda p: (p[1], p[0])), 1)
+
+
+def _dense_pairs(nq, nk):
+    base = [(i, j) for i in range(nq) for j in range(nk)]
+    return _with_flags(base, 0), _with_flags(
+        sorted(base, key=lambda p: (p[1], p[0])), 1)
+
+
+def _with_flags(pairs, major):
+    out = []
+    n = len(pairs)
+    for t, (i, j) in enumerate(pairs):
+        key = (i, j)[major]
+        first = 1 if t == 0 or (pairs[t - 1][0], pairs[t - 1][1])[major] \
+            != key else 0
+        last = 1 if t == n - 1 or (pairs[t + 1][0], pairs[t + 1][1])[major] \
+            != key else 0
+        out.append((i, j, first, last))
+    import numpy as _np
+    return _np.asarray(out, _np.int32)
+
+
+def _block_mask(pair_i, pair_j, q_block, kv_block, q_offset, valid_kv,
+                causal, window):
+    q_pos = q_offset + pair_i * q_block + jnp.arange(q_block)
+    kv_pos = pair_j * kv_block + jnp.arange(kv_block)
+    mask = kv_pos[None, :] < valid_kv
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    return mask
+
+
+@functools.lru_cache(maxsize=None)
+def _attend_fn(causal, window, cap, q_block, kv_block):
+    """Flash attention over static block-pair lists with a custom VJP.
+
+    Forward and dq-backward iterate i-major, dk/dv-backward iterates a
+    second j-major list (the canonical two-pass flash backward): each
+    pass keeps only the CURRENT major block's accumulator in the scan
+    carry and commits finished blocks with a write-only dynamic-update
+    (a dummy extra row absorbs non-final steps).  Earlier designs that
+    sliced+updated an [nq, ...] buffer every step made XLA copy/convert
+    the whole buffer per pair -- measured 13.5-111 TB/chip of HBM
+    traffic on deepseek-67b cells (EXPERIMENTS.md section Perf iter 4).
+    The backward recomputes p from the saved (out, logsumexp), so
+    training memory stays O(S) per layer -- the same recompute scheme as
+    the Pallas kernel in repro.kernels."""
+
+    def _scores(q_i, k_j, i, j, q_offset, valid_kv, want_tanh=False):
+        scale = q_i.shape[-1] ** -0.5
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                       preferred_element_type=jnp.float32) * scale
+        t = None
+        if cap:
+            t = jnp.tanh(s / cap)
+            s = t * cap
+        mask = _block_mask(i, j, q_block, kv_block, q_offset,
+                           valid_kv, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        return s, t, mask
+
+    def fwd_impl(qb, kb, vb, pairs, q_offset, valid_kv):
+        nq, b, _, hkv, g, hd = qb.shape
+
+        def step(carry, pair):
+            m, l, acc, o_out, lse_out = carry
+            i, j, first, last = pair[0], pair[1], pair[2], pair[3]
+            q_i = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+            k_j = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+            fresh = first > 0
+            m = jnp.where(fresh, NEG_INF, m)
+            l = jnp.where(fresh, 0.0, l)
+            acc = jnp.where(fresh, 0.0, acc)
+            s, _, _ = _scores(q_i, k_j, i, j, q_offset, valid_kv)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+            a_new = acc * alpha[..., None] + pv
+            # commit the block on its final pair (dummy row nq otherwise)
+            slot = jnp.where(last > 0, i, nq)
+            o_blk = (a_new / jnp.maximum(l_new[..., None], 1e-30)
+                     ).astype(o_out.dtype)
+            lse_blk = m_new + jnp.log(jnp.maximum(l_new, 1e-30))
+            o_out = jax.lax.dynamic_update_index_in_dim(
+                o_out, o_blk, slot, 0)
+            lse_out = jax.lax.dynamic_update_index_in_dim(
+                lse_out, lse_blk, slot, 0)
+            return (m_new, l_new, a_new, o_out, lse_out), None
+
+        m0 = jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, hd), jnp.float32)
+        o0 = jnp.zeros((nq + 1, b, hkv, g, q_block, hd), qb.dtype)
+        lse0 = jnp.zeros((nq + 1, b, hkv, g, q_block), jnp.float32)
+        plan = _attn_sharding(q_block, b)
+        if plan is not None:
+            ba, mo = _plan_specs(plan)
+            m0 = _constrain(m0, (ba, None, None, mo))
+            l0 = _constrain(l0, (ba, None, None, mo))
+            a0 = _constrain(a0, (ba, None, None, mo, None))
+            o0 = _constrain(o0, (None, ba, None, None, mo, None))
+            lse0 = _constrain(lse0, (None, ba, None, None, mo))
+        (_, _, _, o_out, lse_out), _ = jax.lax.scan(
+            step, (m0, l0, a0, o0, lse0), pairs)
+        return o_out[:nq], lse_out[:nq]
+
+    @jax.custom_vjp
+    def attend(qb, kb, vb, pairs, pairs_kv, q_offset, valid_kv):
+        return fwd_impl(qb, kb, vb, pairs, q_offset, valid_kv)[0]
+
+    def attend_fwd(qb, kb, vb, pairs, pairs_kv, q_offset, valid_kv):
+        out, lse = fwd_impl(qb, kb, vb, pairs, q_offset, valid_kv)
+        return out, (qb, kb, vb, pairs, pairs_kv, q_offset, valid_kv,
+                     out, lse)
+
+    def attend_bwd(res, dout):
+        qb, kb, vb, pairs, pairs_kv, q_offset, valid_kv, out, lse = res
+        nq, b, _, hkv, g, hd = qb.shape
+        nk = kb.shape[0]
+        scale = hd ** -0.5
+        f32 = jnp.float32
+        delta = jnp.sum(dout.astype(f32) * out.astype(f32), -1)
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+
+        plan = _attn_sharding(q_block, b)
+
+        def block_grads(i, j, shard_kb=False):
+            """Recompute p and ds for one pair.
+
+            Pass A keeps the q-block axis model-sharded (inherited from
+            the forward buffers).  Pass B re-shards to the KV-block axis
+            instead: its dk/dv contraction runs over q, so kb-sharding
+            makes every step fully local -- with qb-sharding GSPMD
+            all-gathered the [.., qb, kb] ds blocks every pair (measured
+            3.8 TB/device, EXPERIMENTS.md Perf iter 5)."""
+            q_i = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+            k_j = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+            do_i = jax.lax.dynamic_index_in_dim(dout, i, 0,
+                                                keepdims=False)
+            lse_i = jax.lax.dynamic_index_in_dim(lse_safe, i, 0,
+                                                 keepdims=False)
+            d_i = jax.lax.dynamic_index_in_dim(delta, i, 0,
+                                               keepdims=False)
+            if shard_kb and plan is not None:
+                ba_, _ = _plan_specs(plan)
+                mk = "model" if plan[1] else None
+                q_i = _constrain(q_i, (ba_, None, None, None, None))
+                do_i = _constrain(do_i, (ba_, None, None, None, None))
+                lse_i = _constrain(lse_i, (ba_, None, None, None))
+                d_i = _constrain(d_i, (ba_, None, None, None))
+                k_j = _constrain(k_j, (ba_, mk, None, None))
+                v_j = _constrain(v_j, (ba_, mk, None, None))
+            s, t, mask = _scores(q_i, k_j, i, j, q_offset, valid_kv)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lse_i[..., None]), 0.0)
+            dp = jnp.einsum("bhgqd,bkhd->bhgqk", do_i.astype(f32), v_j,
+                            preferred_element_type=f32)
+            ds = p * (dp - d_i[..., None])
+            if cap:
+                ds = ds * (1.0 - t * t)
+            ds = ds * scale
+            return q_i, k_j, do_i, p, ds
+
+        # ---- pass A (i-major): dq ----
+        def step_q(carry, pair):
+            dq_cur, dq_out = carry
+            i, j, first, last = pair[0], pair[1], pair[2], pair[3]
+            _, k_j, _, _, ds = block_grads(i, j)
+            dq_cur = jnp.where(first > 0, 0.0, dq_cur)
+            dq_cur = dq_cur + jnp.einsum(
+                "bhgqk,bkhd->bqhgd", ds, k_j,
+                preferred_element_type=f32)
+            slot = jnp.where(last > 0, i, nq)
+            dq_out = jax.lax.dynamic_update_index_in_dim(
+                dq_out, dq_cur.astype(dq_out.dtype), slot, 0)
+            return (dq_cur, dq_out), None
+
+        dq_cur0 = jnp.zeros((b, q_block, hkv, g, hd), f32)
+        dq_out0 = jnp.zeros((nq + 1,) + dq_cur0.shape, qb.dtype)
+        if plan is not None:
+            ba, mo = _plan_specs(plan)
+            dq_cur0 = _constrain(dq_cur0, (ba, mo, None, None, None))
+            dq_out0 = _constrain(dq_out0, (None, ba, mo, None, None,
+                                           None))
+        (_, dq_out), _ = jax.lax.scan(step_q, (dq_cur0, dq_out0), pairs)
+
+        # ---- pass B (j-major): dk, dv ----
+        def step_kv(carry, pair):
+            dk_cur, dv_cur, dk_out, dv_out = carry
+            i, j, first, last = pair[0], pair[1], pair[2], pair[3]
+            q_i, _, do_i, p, ds = block_grads(i, j, shard_kb=True)
+            dk_cur = jnp.where(first > 0, 0.0, dk_cur)
+            dv_cur = jnp.where(first > 0, 0.0, dv_cur)
+            dk_delta = jnp.einsum("bhgqk,bqhgd->bkhd", ds, q_i,
+                                  preferred_element_type=f32)
+            dv_delta = jnp.einsum("bhgqk,bhgqd->bkhd", p,
+                                  do_i.astype(f32),
+                                  preferred_element_type=f32)
+            dk_cur = dk_cur + dk_delta
+            dv_cur = dv_cur + dv_delta
+            slot = jnp.where(last > 0, j, nk)
+            dk_out = jax.lax.dynamic_update_index_in_dim(
+                dk_out, dk_cur.astype(dk_out.dtype), slot, 0)
+            dv_out = jax.lax.dynamic_update_index_in_dim(
+                dv_out, dv_cur.astype(dv_out.dtype), slot, 0)
+            return (dk_cur, dv_cur, dk_out, dv_out), None
+
+        dk_cur0 = jnp.zeros((b, kv_block, hkv, hd), f32)
+        dv_cur0 = jnp.zeros((b, kv_block, hkv, hd), f32)
+        dk_out0 = jnp.zeros((nk + 1,) + dk_cur0.shape, kb.dtype)
+        dv_out0 = jnp.zeros((nk + 1,) + dv_cur0.shape, vb.dtype)
+        if plan is not None:
+            ba, _ = _plan_specs(plan)
+            mk = "model" if plan[1] else None
+            dk_cur0 = _constrain(dk_cur0, (ba, mk, None, None))
+            dv_cur0 = _constrain(dv_cur0, (ba, mk, None, None))
+            dk_out0 = _constrain(dk_out0, (None, ba, mk, None, None))
+            dv_out0 = _constrain(dv_out0, (None, ba, mk, None, None))
+        (_, _, dk_out, dv_out), _ = jax.lax.scan(
+            step_kv, (dk_cur0, dv_cur0, dk_out0, dv_out0), pairs_kv)
+
+        return (dq_out[:nq], dk_out[:nk], dv_out[:nk],
+                None, None, None, None)
+
+    attend.defvjp(attend_fwd, attend_bwd)
+    return attend
+
+
+def attend_chunked(q, k, v, *, causal: bool, window: int = 0,
+                   cap: float = 0.0, q_offset=0, kv_valid_len=None,
+                   q_block: int = 512, kv_block: int = 1024):
+    """q: [B, Sq, Hkv, G, hd]; k, v: [B, Skv, Hkv, hd] -> out like q.
+
+    ``q_offset``: absolute position of q[0]; a python int enables the
+    static block-sparse pair list; a tracer (decode) falls back to a dense
+    kv scan with masking.  ``kv_valid_len`` masks KV positions >= it.
+    """
+    b, sq, hkv, g, hd = q.shape
+    skv = k.shape[1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    sq_p = -(-sq // q_block) * q_block
+    skv_p = -(-skv // kv_block) * kv_block
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq)) + ((0, 0),) * 3)
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    nq, nk = sq_p // q_block, skv_p // kv_block
+
+    static_offset = isinstance(q_offset, (int, np.integer))
+    if static_offset:
+        pairs, pairs_kv = _pairs(nq, nk, q_block, kv_block, causal,
+                                 window, q_offset)
+    else:
+        pairs, pairs_kv = _dense_pairs(nq, nk)
+
+    valid_kv = jnp.asarray(
+        skv if kv_valid_len is None else kv_valid_len, jnp.int32)
+    q_off = jnp.asarray(q_offset, jnp.int32)
+    qb = jnp.moveaxis(q.reshape(b, nq, q_block, hkv, g, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nk, kv_block, hkv, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, kv_block, hkv, hd), 1, 0)
+    plan = _attn_sharding(q_block, b)
+    if plan is not None:
+        ba, mo = _plan_specs(plan)
+        qb = _constrain(qb, (None, ba, mo, None, None, None))
+        kb = _constrain(kb, (None, ba, None, None, None))
+        vb = _constrain(vb, (None, ba, None, None, None))
+
+    attend = _attend_fn(bool(causal), int(window), float(cap),
+                        int(q_block), int(kv_block))
+    out = attend(qb, kb, vb, jnp.asarray(pairs), jnp.asarray(pairs_kv),
+                 q_off, valid_kv)
+    out = jnp.moveaxis(out, 0, 1)                  # [B,nq,H,G,qb,hd]
+    out = jnp.moveaxis(out, 4, 2).reshape(b, sq_p, hkv, g, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention(params, cfg, x, positions, *, layer_kind: str = "global",
+              cache=None, cache_index=None):
+    """Full attention block: qkv proj, rope, mix, out proj.
+
+    cache: None (training / un-cached prefill) or dict(k, v) preallocated
+    [B, S_max, Hkv, hd]; returns (y, new_cache).  ``cache_index`` is the
+    write offset (0 for prefill, current length for decode).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+    cdt = x.dtype
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cdt)
+        k = k + params["bk"].astype(cdt)
+        v = v + params["bv"].astype(cdt)
+
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    window = cfg.window if layer_kind == "local" else 0
+    new_cache = None
+    if cache is None:
+        kv_valid, q_offset = None, 0
+        if layer_kind == "decode_like":  # pragma: no cover - guard
+            raise ValueError("decode requires a cache")
+        out_kv = (k, v)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        kv_valid = cache_index + s
+        q_offset = cache_index
+        kk, vv = ck.astype(cdt), cv.astype(cdt)
+        if window and s == 1 and ck.shape[1] > window:
+            # decode on a local layer: read only the last ``window`` slots
+            start = jnp.clip(kv_valid - window, 0, ck.shape[1] - window)
+            kk = jax.lax.dynamic_slice_in_dim(kk, start, window, axis=1)
+            vv = jax.lax.dynamic_slice_in_dim(vv, start, window, axis=1)
+            kv_valid = kv_valid - start
+            q_offset = q_offset - start
+            window = 0  # slice already enforces the window
+        out_kv = (kk, vv)
+
+    k_used, v_used = out_kv
+    qg = q.reshape(b, s, hkv, g, hd)
+    out = attend_chunked(qg, k_used, v_used,
+                         causal=(layer_kind != "bidir"), window=window,
+                         cap=cfg.attn_softcap, q_offset=q_offset,
+                         kv_valid_len=kv_valid)
+    out = out.reshape(b, s, hq, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cdt))
+    return y, new_cache
+
+
+def init_cache(cfg, batch: int, max_len: int, n_layers: int, dtype):
+    """Stacked KV cache for ``n_layers`` layers: [L, B, S, Hkv, hd]."""
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cross_attention(params, cfg, x, enc_kv):
+    """Whisper-style cross-attention; enc_kv precomputed from encoder."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cdt))
+    k, v = enc_kv
+    qg = q.reshape(b, s, hkv, hq // hkv, hd)
+    out = attend_chunked(qg, k.astype(cdt), v.astype(cdt), causal=False)
+    out = out.reshape(b, s, hq, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cdt))
+
+
+def encode_kv(params, cfg, enc_out):
+    cdt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(cdt))
+    return k, v

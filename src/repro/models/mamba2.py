@@ -1,0 +1,197 @@
+"""Mamba-2 (SSD, state-space duality) blocks -- arXiv:2405.21060.
+
+Chunked SSD algorithm (the paper's Listing 1, re-expressed in jnp):
+sequence split into chunks of Q tokens; within a chunk the quadratic
+"attention-like" form runs on the MXU; across chunks a scan carries the
+[H, P, N] state.  This is the same split the Pallas kernel
+(repro.kernels.ssd_scan) tiles into VMEM; this module is its oracle and
+the XLA execution path.
+
+Decode keeps a constant-size recurrent state per layer:
+  state <- state * exp(dt * A) + dt * B outer x ;  y = C . state
+so 500k-token contexts cost O(1) memory/step (the long_500k cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rmsnorm
+
+
+def d_inner(cfg):
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    di = d_inner(cfg)
+    h = cfg.ssm_heads          # di // headdim
+    n = cfg.d_state
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (di), x (di), B (N), C (N), dt (H)]
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h), d, dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, di + 2 * n),
+                             cfg.conv_width, dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),           # A = -exp(a_log)
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), di, dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv, width W.  x: [B, S, C]; w: [W, C].
+
+    conv_state: [B, W-1, C] history for decode; returns (y, new_state).
+    """
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else \
+        jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return jax.nn.silu(y + b), new_state
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int,
+                return_state: bool = False):
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H] (>0); a: [H] (<0);
+    b_mat, c_mat: [B, S, N] (single B/C group shared over heads).
+    Returns y: [B, S, H, P], or (y, final_state [B,H,P,N]) when
+    ``return_state`` (prefill filling a decode cache).
+    """
+    bs, s0, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s0)
+    s = -(-s0 // q) * q
+    if s != s0:  # pad to a chunk multiple (dt=0 -> identity transition)
+        pad = ((0, 0), (0, s - s0))
+        x = jnp.pad(x, pad + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, pad + ((0, 0),))
+        b_mat = jnp.pad(b_mat, pad + ((0, 0),))
+        c_mat = jnp.pad(c_mat, pad + ((0, 0),))
+    nc = s // q
+    f32 = jnp.float32
+
+    xr = jnp.moveaxis(x.reshape(bs, nc, q, h, p), 1, 0)
+    dtr = jnp.moveaxis(dt.reshape(bs, nc, q, h).astype(f32), 1, 0)
+    br = jnp.moveaxis(b_mat.reshape(bs, nc, q, n), 1, 0)
+    cr = jnp.moveaxis(c_mat.reshape(bs, nc, q, n), 1, 0)
+
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_body(state, inp):
+        """Sequential over chunks; remat'd so the backward recomputes the
+        quadratic intra-chunk tensors per chunk instead of storing all of
+        them (the [B, nc, Q, Q, H] decay tensor dominates memory
+        otherwise)."""
+        xc, dtc, bc, cc = inp        # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        da = dtc * a                                 # [B,Q,H] (<0)
+        cum = jnp.cumsum(da, axis=1)
+        seg_end = cum[:, -1, :]                      # [B,H]
+
+        # intra-chunk (quadratic within Q)
+        cb = jnp.einsum("bqn,bkn->bqk", cc, bc,
+                        preferred_element_type=f32)  # [B,Q,K]
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        dec = jnp.where(causal[None, :, :, None], dec, 0.0)
+        w = cb[..., None] * dec * dtc[:, None, :, :]  # [B,Q,K,H]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", w.astype(x.dtype), xc,
+                             preferred_element_type=f32)
+
+        # contribution of the carried state
+        dec_q = jnp.exp(cum)                         # [B,Q,H]
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cc,
+                             state.astype(x.dtype),
+                             preferred_element_type=f32) * dec_q[..., None]
+
+        # state update: S <- S * exp(seg_end) + sum_k decay_k dt_k B_k x_k
+        decay_to_end = jnp.exp(seg_end[:, None, :] - cum)     # [B,Q,H]
+        wk = (decay_to_end * dtc).astype(x.dtype)
+        s_c = jnp.einsum("bqn,bqh,bqhp->bhpn", bc, wk, xc,
+                         preferred_element_type=f32)
+        new_state = state * jnp.exp(seg_end)[:, :, None, None] + s_c
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    init = jnp.zeros((bs, h, p, n), f32)
+    final_state, y = jax.lax.scan(jax.checkpoint(chunk_body), init,
+                                  (xr, dtr, br, cr))
+    y = jnp.moveaxis(y, 0, 1).reshape(bs, s, h, p)[:, :s0]
+    if return_state:
+        return y, final_state
+    return y
+
+
+def mamba_block(params, cfg, x, cache=None):
+    """x: [B, S, D] -> (y, new_cache).
+
+    cache: None or dict(conv [B,W-1,C], ssm [B,H,P,N]) for decode (S==1).
+    """
+    bs, s, d = x.shape
+    di = d_inner(cfg)
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.d_state
+    cdt = x.dtype
+
+    zxbcdt = x @ params["in_proj"].astype(cdt)
+    z, xin, b_mat, c_mat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xin, b_mat, c_mat], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv = _causal_conv(
+        conv_in, params["conv_w"].astype(cdt), params["conv_b"].astype(cdt),
+        conv_state)
+    xin, b_mat, c_mat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                      # [H] < 0
+    xh = xin.reshape(bs, s, h, p)
+
+    if cache is None:
+        y = ssd_chunked(xh, dt, a, b_mat, c_mat, cfg.ssm_chunk)
+        new_ssm = None
+    elif s > 1:
+        # prefill into a decode cache: chunked scan + final state
+        y, new_ssm = ssd_chunked(xh, dt, a, b_mat, c_mat, cfg.ssm_chunk,
+                                 return_state=True)
+    else:
+        # single-step recurrence (S == 1)
+        state = cache["ssm"].astype(jnp.float32)       # [B,H,P,N]
+        dt1 = dt[:, 0]                                 # [B,H]
+        g = jnp.exp(dt1 * a)                           # [B,H]
+        bx = jnp.einsum("bn,bh,bhp->bhpn", b_mat[:, 0].astype(jnp.float32),
+                        dt1, xh[:, 0].astype(jnp.float32))
+        state = state * g[:, :, None, None] + bx
+        y1 = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0].astype(jnp.float32),
+                        state)
+        y = y1[:, None].astype(cdt)
+        new_ssm = state
+    y = y + xh * params["d_skip"].astype(cdt)[:, None]  # D skip (per head)
+    y = y.reshape(bs, s, di)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y)
+    out = y @ params["out_proj"].astype(cdt)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": new_ssm}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, n_layers: int, dtype):
+    di = d_inner(cfg)
+    c = di + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_width - 1, c), dtype),
+        "ssm": jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_headdim,
+                          cfg.d_state), jnp.float32),
+    }

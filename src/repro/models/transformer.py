@@ -1,0 +1,300 @@
+"""Unified decoder-only LM covering dense / MoE / SSM / hybrid families.
+
+Depth is organised as *super-blocks* (cfg.pattern): parameters of each
+pattern position are stacked over super-blocks and the stack is
+``lax.scan``-ed, so HLO size is O(|pattern|), not O(depth) -- essential to
+keep 95-layer dry-runs compilable.  Layers not covered by whole
+super-blocks (e.g. gemma3-1b's 26 = 4 x (5 local + 1 global) + 2 tail) are
+unrolled separately.
+
+Caches are stored pre-grouped in scan layout -- ``cache["sb"][pos]`` is a
+[n_superblocks, ...] stack consumed directly as scan xs -- so decode never
+gathers/scatters multi-GB cache tensors.
+
+Hybrid (zamba2): pattern ("mamba",) plus a *shared* attention+MLP block
+(single parameter set, per-invocation KV cache) fired every
+``cfg.shared_period`` layers inside the scan, following Zamba2's shared
+transformer design (per-invocation LoRA deltas simplified away; DESIGN.md
+section 3 notes this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba2 as mamba_mod
+from . import mlp as mlp_mod
+from .common import (dense_init, embed_init, norm_apply, norm_init,
+                     shard_hint, softcap)
+
+LOSS_CHUNK = 256
+
+
+def _kind_of(cfg, layer: int) -> str:
+    pat = cfg.pattern
+    if layer < cfg.n_superblocks * len(pat):
+        return pat[layer % len(pat)]
+    return cfg.tail_pattern[layer - cfg.n_superblocks * len(pat)]
+
+
+def _shared_fire(cfg):
+    """fire[sb] == 1 when the shared block runs after super-block sb.
+    NumPy (not jnp) so it stays concrete under eval_shape tracing."""
+    import numpy as np
+    n_sb = cfg.n_superblocks
+    if not cfg.shared_period:
+        return np.zeros((n_sb,), np.int32)
+    if len(cfg.pattern) != 1:
+        raise ValueError("shared_period requires a length-1 pattern")
+    per = cfg.shared_period
+    return np.asarray([1 if sb % per == per - 1 else 0
+                       for sb in range(n_sb)], np.int32)
+
+
+def n_shared_invocations(cfg) -> int:
+    return int(_shared_fire(cfg).sum()) if cfg.shared_period else 0
+
+
+# ----------------------------------------------------------------------
+# Parameter construction
+# ----------------------------------------------------------------------
+
+def _layer_init(key, cfg, kind, dtype):
+    ks = jax.random.split(key, 2)
+    if kind == "mamba":
+        return {
+            "norm": norm_init(cfg, cfg.d_model, dtype),
+            "mamba": mamba_mod.init_mamba(ks[0], cfg, dtype),
+        }
+    p = {
+        "norm1": norm_init(cfg, cfg.d_model, dtype),
+        "attn": attn_mod.init_attn(ks[0], cfg, dtype),
+        "norm2": norm_init(cfg, cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = mlp_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_mod.init_mlp(ks[1], cfg, dtype)
+    return p
+
+
+def init_lm(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    n_sb = cfg.n_superblocks
+
+    blocks = []
+    kb = jax.random.split(ks[0], len(cfg.pattern))
+    for pos, kind in enumerate(cfg.pattern):
+        keys = jax.random.split(kb[pos], max(n_sb, 1))
+        blocks.append(
+            jax.vmap(lambda kk, kind=kind: _layer_init(kk, cfg, kind,
+                                                       dtype))(keys))
+
+    kt = jax.random.split(ks[1], max(len(cfg.tail_pattern), 1))
+    tail = [_layer_init(kt[pos], cfg, kind, dtype)
+            for pos, kind in enumerate(cfg.tail_pattern)]
+
+    params = {
+        "embed": embed_init(ks[2], (cfg.vocab, cfg.d_model), dtype),
+        "blocks": blocks,
+        "tail": tail,
+        "final_norm": norm_init(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            ks[3], (cfg.d_model, cfg.vocab), cfg.d_model, dtype)
+    if cfg.shared_period:
+        params["shared"] = _layer_init(ks[4], cfg, "global", dtype)
+    if cfg.pos == "learned":
+        params["pos_embed"] = embed_init(ks[5], (32768, cfg.d_model), dtype)
+    return params
+
+
+# ----------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------
+
+def _apply_layer(p, cfg, kind, x, positions, cache, cache_index):
+    """One layer; ``cache`` is None or the per-layer cache pytree."""
+    x = shard_hint(x)  # anchor batch sharding (see common.shard_hint)
+    if kind == "mamba":
+        h = norm_apply(cfg, p["norm"], x)
+        y, new_cache = mamba_mod.mamba_block(p["mamba"], cfg, h, cache)
+        return x + y, new_cache
+    h = norm_apply(cfg, p["norm1"], x)
+    y, new_cache = attn_mod.attention(p["attn"], cfg, h, positions,
+                                      layer_kind=kind, cache=cache,
+                                      cache_index=cache_index)
+    x = shard_hint(x + y)
+    h = norm_apply(cfg, p["norm2"], x)
+    if cfg.family == "moe":
+        x = x + mlp_mod.moe(p["moe"], cfg, h)
+    else:
+        x = x + mlp_mod.mlp(p["mlp"], cfg, h)
+    return x, new_cache
+
+
+def hidden_states(params, cfg, x, positions, cache=None, cache_index=0,
+                  remat: bool = False):
+    """x: [B, S, D] embedded input -> (normed hidden, new_cache)."""
+    n_sb = cfg.n_superblocks
+    pat = cfg.pattern
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    has_cache = cache is not None
+    fire = jnp.asarray(_shared_fire(cfg))
+
+    def sb_body(carry, inputs):
+        x, sh_cache, inv = carry
+        sb_params, sb_caches, do_shared = inputs
+        new_caches = []
+        for pos, kind in enumerate(pat):
+            c = sb_caches[pos] if has_cache else None
+            x, nc = _apply_layer(sb_params[pos], cfg, kind, x, positions,
+                                 c, cache_index)
+            new_caches.append(nc if nc is not None
+                              else jnp.zeros((0,), cdt))
+
+        if cfg.shared_period:
+            def run_shared(args):
+                x, sh_cache, inv = args
+                sc = None
+                if has_cache:
+                    sc = jax.tree_util.tree_map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, inv, 0, keepdims=False), sh_cache)
+                y, new_sc = _apply_layer(params["shared"], cfg, "global",
+                                         x, positions, sc, cache_index)
+                if has_cache and new_sc is not None:
+                    sh_cache = jax.tree_util.tree_map(
+                        lambda a, b: jax.lax.dynamic_update_index_in_dim(
+                            a, b.astype(a.dtype), inv, 0),
+                        sh_cache, new_sc)
+                return y, sh_cache, inv + 1
+
+            x, sh_cache, inv = jax.lax.cond(
+                do_shared > 0, run_shared, lambda a: a,
+                (x, sh_cache, inv))
+        return (x, sh_cache, inv), tuple(new_caches)
+
+    body = jax.checkpoint(sb_body) if remat else sb_body
+
+    sh_cache0 = cache.get("shared") if has_cache else jnp.zeros((0,), cdt)
+    if sh_cache0 is None:
+        sh_cache0 = jnp.zeros((0,), cdt)
+    new_sb_caches = tuple(jnp.zeros((0,), cdt) for _ in pat)
+    if n_sb > 0:
+        xs_caches = tuple(
+            cache["sb"][pos] if has_cache else jnp.zeros((n_sb,), cdt)
+            for pos in range(len(pat)))
+        (x, sh_cache_new, _), new_sb_caches = jax.lax.scan(
+            body, (x, sh_cache0, jnp.asarray(0, jnp.int32)),
+            (tuple(params["blocks"]), xs_caches, fire))
+    else:
+        sh_cache_new = sh_cache0
+
+    # --- tail layers (unrolled) ---
+    tail_new = []
+    for pos, kind in enumerate(cfg.tail_pattern):
+        c = cache["tail"][pos] if has_cache else None
+        x, nc = _apply_layer(params["tail"][pos], cfg, kind, x, positions,
+                             c, cache_index)
+        tail_new.append(nc)
+
+    x = norm_apply(cfg, params["final_norm"], x)
+
+    new_cache = None
+    if has_cache:
+        new_cache = {"sb": tuple(new_sb_caches), "tail": tuple(tail_new)}
+        if cfg.shared_period:
+            new_cache["shared"] = sh_cache_new
+    return x, new_cache
+
+
+def embed(params, cfg, tokens):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    if cfg.norm_offset:  # gemma convention: sqrt(d) input normaliser
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    return x
+
+
+def logits(params, cfg, hidden):
+    cdt = hidden.dtype
+    table = params.get("lm_head")
+    if table is None:
+        out = jnp.einsum("bsd,vd->bsv", hidden, params["embed"].astype(cdt))
+    else:
+        out = hidden @ table.astype(cdt)
+    return softcap(out, cfg.final_softcap)
+
+
+def lm_loss(params, cfg, hidden, targets, mask=None):
+    """Chunked cross-entropy over the vocab (memory O(chunk * V))."""
+    b, s, d = hidden.shape
+    chunk = min(LOSS_CHUNK, s)
+    s_p = -(-s // chunk) * chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    if s_p != s:
+        hidden = jnp.pad(hidden, ((0, 0), (0, s_p - s), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, s_p - s)))
+        mask = jnp.pad(mask, ((0, 0), (0, s_p - s)))
+    nc = s_p // chunk
+    hc = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, inp):
+        h, t, m = inp
+        lg = logits(params, cfg, h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ----------------------------------------------------------------------
+# Cache construction (scan layout)
+# ----------------------------------------------------------------------
+
+def _single_cache(cfg, kind, batch, max_len, dtype, stack=None):
+    if kind == "mamba":
+        di = mamba_mod.d_inner(cfg)
+        c = di + 2 * cfg.d_state
+        shape_conv = (batch, cfg.conv_width - 1, c)
+        shape_ssm = (batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.d_state)
+        if stack:
+            shape_conv = (stack,) + shape_conv
+            shape_ssm = (stack,) + shape_ssm
+        return {"conv": jnp.zeros(shape_conv, dtype),
+                "ssm": jnp.zeros(shape_ssm, jnp.float32)}
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if stack:
+        shape = (stack,) + shape
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_caches(cfg, batch: int, max_len: int, dtype):
+    """Cache pytree in scan layout: sb[pos] stacked [n_sb, ...]."""
+    n_sb = cfg.n_superblocks
+    out = {
+        "sb": tuple(
+            _single_cache(cfg, kind, batch, max_len, dtype, stack=n_sb)
+            for kind in cfg.pattern),
+        "tail": tuple(
+            _single_cache(cfg, kind, batch, max_len, dtype)
+            for kind in cfg.tail_pattern),
+    }
+    n_inv = n_shared_invocations(cfg)
+    if n_inv:
+        out["shared"] = _single_cache(cfg, "global", batch, max_len,
+                                      dtype, stack=n_inv)
+    return out

@@ -1,0 +1,136 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the brief: ``input_specs`` supplies
+precomputed log-mel *frame embeddings* [B, enc_seq, D] (enc_seq = 1500,
+Whisper's 30 s window).  Encoder: bidirectional attention + GELU MLP with
+sinusoidal positions.  Decoder: causal self-attention + cross-attention
+with learned positions.  The assigned seq_len applies to the decoder
+token stream (32k decode is a stress configuration far beyond Whisper's
+448-token practical max; intentional, see DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from .common import embed_init, norm_apply, norm_init, shard_hint, softcap
+
+
+def _sinusoid(seq: int, d: int, dtype):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": norm_init(cfg, cfg.d_model, dtype),
+        "attn": attn_mod.init_attn(ks[0], cfg, dtype),
+        "norm2": norm_init(cfg, cfg.d_model, dtype),
+        "mlp": mlp_mod.init_mlp(ks[1], cfg, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": norm_init(cfg, cfg.d_model, dtype),
+        "attn": attn_mod.init_attn(ks[0], cfg, dtype),
+        "norm_x": norm_init(cfg, cfg.d_model, dtype),
+        "xattn": attn_mod.init_attn(ks[1], cfg, dtype),
+        "norm2": norm_init(cfg, cfg.d_model, dtype),
+        "mlp": mlp_mod.init_mlp(ks[2], cfg, dtype),
+    }
+
+
+def init_whisper(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_blocks": jax.vmap(
+            lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": norm_init(cfg, cfg.d_model, dtype),
+        "dec_blocks": jax.vmap(
+            lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "final_norm": norm_init(cfg, cfg.d_model, dtype),
+        "embed": embed_init(ks[2], (cfg.vocab, cfg.d_model), dtype),
+        "pos_embed": embed_init(ks[3], (32768, cfg.d_model), dtype),
+    }
+
+
+def encode(params, cfg, audio_embed, remat: bool = False):
+    """audio_embed: [B, enc_seq, D] -> encoder states."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = audio_embed.astype(cdt)
+    x = x + _sinusoid(x.shape[1], cfg.d_model, cdt)[None]
+    pos = jnp.arange(x.shape[1])[None]
+
+    def body(x, p):
+        x = shard_hint(x)
+        h = norm_apply(cfg, p["norm1"], x)
+        y, _ = attn_mod.attention(p["attn"], cfg, h, pos,
+                                  layer_kind="bidir")
+        x = x + y
+        h = norm_apply(cfg, p["norm2"], x)
+        return x + mlp_mod.mlp(p["mlp"], cfg, h), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return norm_apply(cfg, params["enc_norm"], x)
+
+
+def cross_kv(params, cfg, enc_out):
+    """Per-decoder-layer cross K/V, stacked [L, B, Senc, Hkv, hd]."""
+    def body(_, p):
+        return None, attn_mod.encode_kv(p["xattn"], cfg, enc_out)
+    _, kv = jax.lax.scan(body, None, params["dec_blocks"])
+    return kv  # (k, v) each [L, B, Senc, Hkv, hd]
+
+
+def decode_stack(params, cfg, tokens, enc_kv, cache=None, cache_index=0,
+                 remat: bool = False):
+    """tokens: [B, S] -> (hidden, new_cache).
+
+    enc_kv: per-layer stacked cross K/V.  cache: None or stacked self-attn
+    KV {k, v} [L, B, S_max, Hkv, hd].
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    pos = cache_index + jnp.arange(s)[None]
+    x = params["embed"][tokens].astype(cdt)
+    x = x + params["pos_embed"][cache_index + jnp.arange(s)].astype(cdt)
+    has_cache = cache is not None
+
+    def body(x, inputs):
+        p, kv, c = inputs
+        x = shard_hint(x)
+        h = norm_apply(cfg, p["norm1"], x)
+        y, nc = attn_mod.attention(p["attn"], cfg, h, pos,
+                                   layer_kind="global",
+                                   cache=c if has_cache else None,
+                                   cache_index=cache_index)
+        x = x + y
+        h = norm_apply(cfg, p["norm_x"], x)
+        x = x + attn_mod.cross_attention(p["xattn"], cfg, h, kv)
+        h = norm_apply(cfg, p["norm2"], x)
+        x = x + mlp_mod.mlp(p["mlp"], cfg, h)
+        return x, (nc if nc is not None else jnp.zeros((0,), cdt))
+
+    body_fn = jax.checkpoint(body) if remat else body
+    dummy = jnp.zeros((cfg.n_layers,), cdt)
+    x, new_cache = jax.lax.scan(
+        body_fn, x,
+        (params["dec_blocks"], enc_kv, cache if has_cache else dummy))
+    x = norm_apply(cfg, params["final_norm"], x)
+    return x, (new_cache if has_cache else None)
+
+
+def logits(params, cfg, hidden):
+    return jnp.einsum("bsd,vd->bsv", hidden,
+                      params["embed"].astype(hidden.dtype))

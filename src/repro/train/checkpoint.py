@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing: atomic, sharded, restart-capable.
+
+Layout (one directory per step):
+    <dir>/step_000010.tmp.<nonce>/   -- staging (crash leaves only tmp)
+    <dir>/step_000010/
+        manifest.json                -- tree structure, shapes, dtypes
+        arr_00000.npy ...            -- one file per leaf
+Atomicity: staging dir + os.rename (POSIX-atomic within a filesystem).
+Restore reshards onto the current mesh via device_put with the target
+shardings, so a checkpoint written on one mesh restarts on another
+(elastic re-mesh path; see dist.fault).  Async saves run on a daemon
+thread pool of 1 (ordered), and ``keep`` bounds retained checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import uuid
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _paths_of(tree):
+    return [jax.tree_util.keystr(p) for p, _ in
+            jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
+    """Blocking atomic save; returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + f".tmp.{uuid.uuid4().hex[:8]}"
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "paths": _paths_of(tree),
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+    }
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(tmp, f"arr_{i:05d}.npy"),
+                np.asarray(jax.device_get(leaf)))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+    # clean stale staging dirs from crashed saves
+    for name in os.listdir(directory):
+        if ".tmp." in name:
+            shutil.rmtree(os.path.join(directory, name),
+                          ignore_errors=True)
+
+
+def all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp." not in name and \
+                os.path.exists(os.path.join(directory, name,
+                                            "manifest.json")):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, like: Any,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; optionally device_put with
+    ``shardings`` (pytree matching ``like``) to reshard onto a new mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    like_leaves, treedef = _flatten(like)
+    if manifest["n_leaves"] != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, "
+            f"target structure has {len(like_leaves)}")
+    leaves = [np.load(os.path.join(path, f"arr_{i:05d}.npy"))
+              for i in range(manifest["n_leaves"])]
+    for got, want in zip(leaves, like_leaves):
+        if tuple(got.shape) != tuple(want.shape):
+            raise ValueError(
+                f"shape mismatch {got.shape} vs {want.shape}")
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+class AsyncCheckpointer:
+    """Ordered background saves; ``wait()`` drains before shutdown."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save(self.directory, step, tree, self.keep)
+            except BaseException as e:  # surfaced on wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree: Any):
+        # device_get now so the saved snapshot is consistent
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host_tree))
+
+    def wait(self):
+        self._q.join()
+        if self._err is not None:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

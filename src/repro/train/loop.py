@@ -1,0 +1,86 @@
+"""Training step + loop: mixed-precision, remat, optional gradient
+compression, checkpoint/restart, straggler accounting.
+
+``make_train_step`` builds the pure (state, batch) -> (state, metrics)
+function the dry-run lowers; ``fit`` is the CPU-scale driver used by the
+examples (100M-class models for a few hundred steps).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import checkpoint as ckpt_mod
+from . import compression as comp_mod
+from . import optimizer as opt_mod
+
+
+def init_state(api, key, opt_cfg: opt_mod.AdamWConfig):
+    params = api.init(key)
+    return {"params": params, "opt": opt_mod.init(params)}
+
+
+def make_train_step(api, opt_cfg: opt_mod.AdamWConfig,
+                    compress: str = "none", k_frac: float = 0.01):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    use_ef = compress != "none"
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(api.loss)(state["params"], batch)
+        if use_ef:
+            grads, ef = comp_mod.compress(grads, state["ef"],
+                                          method=compress, k_frac=k_frac)
+        params, opt, metrics = opt_mod.update(opt_cfg, grads,
+                                              state["opt"],
+                                              state["params"])
+        new_state = {"params": params, "opt": opt}
+        if use_ef:
+            new_state["ef"] = ef
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step
+
+
+def fit(api, data_iter, opt_cfg: opt_mod.AdamWConfig, steps: int,
+        seed: int = 0, ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 100, compress: str = "none",
+        log_every: int = 10, log_fn: Callable = print,
+        resume: bool = True) -> Dict[str, Any]:
+    """CPU-scale training driver with checkpoint/restart."""
+    state = init_state(api, jax.random.PRNGKey(seed), opt_cfg)
+    if compress != "none":
+        state["ef"] = comp_mod.init_error_feedback(state["params"])
+    start = 0
+    saver = None
+    if ckpt_dir:
+        saver = ckpt_mod.AsyncCheckpointer(ckpt_dir, keep=3)
+        last = ckpt_mod.latest_step(ckpt_dir) if resume else None
+        if last is not None:
+            state = ckpt_mod.restore(ckpt_dir, last, state)
+            start = last
+            log_fn(f"resumed from step {last}")
+
+    step_fn = jax.jit(make_train_step(api, opt_cfg, compress))
+    history = []
+    durations = []
+    for step in range(start, steps):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        durations.append(time.perf_counter() - t0)
+        history.append(metrics)
+        if log_every and (step + 1) % log_every == 0:
+            log_fn(f"step {step + 1}: loss={metrics['loss']:.4f} "
+                   f"gnorm={metrics['grad_norm']:.3f} "
+                   f"lr={metrics['lr']:.2e}")
+        if saver and (step + 1) % ckpt_every == 0:
+            saver.submit(step + 1, state)
+    if saver:
+        saver.submit(steps, state)
+        saver.close()
+    return {"state": state, "history": history, "durations": durations}

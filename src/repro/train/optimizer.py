@@ -1,0 +1,96 @@
+"""Pure-JAX AdamW with global-norm clipping and warmup-cosine schedule.
+
+Optimizer state is a pytree shaped like params (m, v), so the same
+sharding specs apply -- fully sharded optimizer state under FSDP.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(params):
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {"m": zeros,
+             "v": jax.tree_util.tree_map(jnp.copy, zeros),
+             "step": jnp.zeros((), jnp.int32)}
+    # Mixed precision: bf16 working params keep an fp32 master copy so
+    # gradients reduce in bf16 (and FSDP gathers move bf16 shards) while
+    # updates accumulate in fp32 (Megatron-style distributed optimizer).
+    if any(l.dtype != jnp.float32
+           for l in jax.tree_util.tree_leaves(params)):
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        base = p.astype(jnp.float32) if master is None else master
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * base
+        new_master = base - lr * delta
+        return new_master.astype(p.dtype), m, v, new_master
+
+    has_master = "master" in opt_state
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    flat_ma = tdef.flatten_up_to(opt_state["master"]) if has_master \
+        else [None] * len(flat_p)
+    new = [upd(p, g, m, v, ma) for p, g, m, v, ma in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+    new_params = tdef.unflatten([x[0] for x in new])
+    new_opt = {"m": tdef.unflatten([x[1] for x in new]),
+               "v": tdef.unflatten([x[2] for x in new]),
+               "step": step}
+    if has_master:
+        new_opt["master"] = tdef.unflatten([x[3] for x in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_opt, metrics

@@ -1,0 +1,84 @@
+"""Flash-attention custom VJP vs autodiff of the naive reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as am
+
+
+def naive(q, k, v, causal, window, cap):
+    b, sq, h, g, d = q.shape
+    skv = k.shape[1]
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k) * d ** -0.5
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 8, 0.0), (True, 0, 30.0),
+    (False, 0, 0.0), (True, 8, 30.0),
+])
+def test_flash_vjp_matches_naive_autodiff(causal, window, cap):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 40, 2, 3, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 40, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 40, 2, 8))
+    ct = jax.random.normal(jax.random.PRNGKey(3), (2, 40, 2, 3, 8))
+
+    def f1(q, k, v):
+        return (am.attend_chunked(q, k, v, causal=causal, window=window,
+                                  cap=cap, q_block=16, kv_block=8)
+                * ct).sum()
+
+    def f2(q, k, v):
+        return (naive(q, k, v, causal, window, cap) * ct).sum()
+
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_grad_matches_recurrence_autodiff():
+    from repro.models import mamba2 as mm
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    bs, s, h, p, n = 2, 24, 3, 4, 6
+    x = jax.random.normal(ks[0], (bs, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b_mat = jax.random.normal(ks[3], (bs, s, n))
+    c_mat = jax.random.normal(ks[4], (bs, s, n))
+
+    def naive_ssd(x, dt, a, b_mat, c_mat):
+        def step(state, inp):
+            xt, dtt, bt, ct = inp
+            g = jnp.exp(dtt * a)
+            state = state * g[..., None, None] + jnp.einsum(
+                "bn,bh,bhp->bhpn", bt, dtt, xt)
+            return state, jnp.einsum("bn,bhpn->bhp", ct, state)
+        init = jnp.zeros((bs, h, p, n))
+        _, ys = jax.lax.scan(step, init,
+                             tuple(jnp.moveaxis(t, 1, 0)
+                                   for t in (x, dt, b_mat, c_mat)))
+        return jnp.moveaxis(ys, 0, 1)
+
+    ct = jax.random.normal(jax.random.PRNGKey(9), (bs, s, h, p))
+    f1 = lambda *args: (mm.ssd_chunked(*args, chunk=8) * ct).sum()
+    f2 = lambda *args: (naive_ssd(*args) * ct).sum()
+    g1 = jax.grad(f1, (0, 1, 2, 3, 4))(x, dt, a, b_mat, c_mat)
+    g2 = jax.grad(f2, (0, 1, 2, 3, 4))(x, dt, a, b_mat, c_mat)
+    for a_, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                   rtol=2e-3, atol=2e-3)

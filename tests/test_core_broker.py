@@ -1,0 +1,125 @@
+"""DBC broker behaviour: paper section 5 claims as assertions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import economy, gridlet, resource, simulation, types
+
+KEY = jax.random.PRNGKey(7)
+CHEAPEST = 8  # R8 in Table 2: 1 G$/unit, 380 MIPS -> best G$/MI
+
+
+@pytest.fixture(scope="module")
+def farm():
+    return gridlet.task_farm(KEY, n_jobs=60)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return resource.wwg_fleet()
+
+
+def test_relaxed_deadline_uses_only_cheapest(farm, fleet):
+    """Paper Fig 27/30: with a relaxed deadline the cost-optimising broker
+    leases only the cheapest resource."""
+    r = simulation.run_experiment(farm, fleet, deadline=3100.0,
+                                  budget=22000.0, opt=types.OPT_COST)
+    per = np.asarray(r.per_resource_done[0])
+    assert per[CHEAPEST] == farm.n
+    assert per.sum() == farm.n
+
+
+def test_budget_never_exceeded(farm, fleet):
+    for budget in (600.0, 1500.0, 4000.0):
+        r = simulation.run_experiment(farm, fleet, deadline=500.0,
+                                      budget=budget, opt=types.OPT_COST)
+        assert float(r.spent[0]) <= budget + 1e-3
+
+
+def test_done_increases_with_budget_at_tight_deadline(farm, fleet):
+    """Paper Fig 21: at a tight deadline, completions grow with budget."""
+    done = []
+    for budget in (1500.0, 4000.0, 10000.0, 22000.0):
+        r = simulation.run_experiment(farm, fleet, deadline=100.0,
+                                      budget=budget, opt=types.OPT_COST)
+        done.append(float(r.n_done[0]))
+    assert done == sorted(done)
+    assert done[-1] > done[0]
+
+
+def test_done_increases_with_deadline_at_low_budget(farm, fleet):
+    """Paper Fig 22: at a low budget, completions grow as deadline relaxes."""
+    done = []
+    for deadline in (100.0, 600.0, 1600.0, 3100.0):
+        r = simulation.run_experiment(farm, fleet, deadline=deadline,
+                                      budget=4000.0, opt=types.OPT_COST)
+        done.append(float(r.n_done[0]))
+    assert done == sorted(done)
+    assert done[-1] > done[0]
+
+
+def test_tight_deadline_spends_whole_budget(farm, fleet):
+    """Paper Fig 24: too-tight deadline -> the complete budget is spent."""
+    r = simulation.run_experiment(farm, fleet, deadline=100.0,
+                                  budget=3500.0, opt=types.OPT_COST)
+    assert float(r.budget_utilization[0]) > 0.9
+    # ... and completions are budget-limited, not capacity-limited.
+    assert 0 < float(r.n_done[0]) < farm.n
+
+
+def test_time_opt_no_slower_than_cost_opt(farm, fleet):
+    rc = simulation.run_experiment(farm, fleet, deadline=400.0,
+                                   budget=22000.0, opt=types.OPT_COST)
+    rt = simulation.run_experiment(farm, fleet, deadline=400.0,
+                                   budget=22000.0, opt=types.OPT_TIME)
+    assert float(rt.n_done[0]) >= float(rc.n_done[0]) - 1e-6
+    if rt.n_done[0] == rc.n_done[0] == farm.n:
+        assert float(rt.term_time[0]) <= float(rc.term_time[0]) + 1e-3
+
+
+def test_time_opt_costs_at_least_cost_opt(farm, fleet):
+    rc = simulation.run_experiment(farm, fleet, deadline=2000.0,
+                                   budget=22000.0, opt=types.OPT_COST)
+    rt = simulation.run_experiment(farm, fleet, deadline=2000.0,
+                                   budget=22000.0, opt=types.OPT_TIME)
+    assert float(rt.spent[0]) >= float(rc.spent[0]) - 1e-3
+
+
+def test_cost_time_between(farm, fleet):
+    """Cost-time optimisation completes >= cost-opt at equal spend order."""
+    r = simulation.run_experiment(farm, fleet, deadline=400.0,
+                                  budget=22000.0, opt=types.OPT_COST_TIME)
+    rc = simulation.run_experiment(farm, fleet, deadline=400.0,
+                                   budget=22000.0, opt=types.OPT_COST)
+    assert float(r.n_done[0]) >= float(rc.n_done[0]) - 1e-6
+
+
+def test_multi_user_competition_reduces_completions(fleet):
+    """Paper Figs 33/36: more users competing -> fewer jobs per user."""
+    per_user_done = {}
+    for n_users in (1, 4, 8):
+        g = gridlet.task_farm(KEY, n_jobs=40, n_users=n_users)
+        r = simulation.run_experiment(g, fleet, deadline=250.0,
+                                      budget=4000.0, opt=types.OPT_COST,
+                                      n_users=n_users)
+        per_user_done[n_users] = float(np.mean(np.asarray(r.n_done)))
+    assert per_user_done[4] <= per_user_done[1] + 1e-6
+    assert per_user_done[8] <= per_user_done[4] + 1e-6
+
+
+def test_d_factor_one_always_completes(fleet):
+    """Eq 1/2 property: D-factor >= 1 and B-factor >= 1 complete all."""
+    g = gridlet.task_farm(KEY, n_jobs=30)
+    r, (deadline, budget) = simulation.run_experiment_factors(
+        g, fleet, d_factor=1.0, b_factor=1.0, opt=types.OPT_COST)
+    assert float(r.n_done[0]) == g.n
+    assert float(r.term_time[0]) <= float(deadline) + 1e-2
+    assert float(r.spent[0]) <= float(budget) + 1e-2
+
+
+def test_zero_budget_processes_nothing(farm, fleet):
+    r = simulation.run_experiment(farm, fleet, deadline=1000.0,
+                                  budget=0.0, opt=types.OPT_COST)
+    assert float(r.n_done[0]) == 0.0
+    assert float(r.spent[0]) == 0.0

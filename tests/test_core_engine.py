@@ -1,0 +1,112 @@
+"""Engine invariants: Fig 8 share algebra, queueing, network, conservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine, gridlet, network, resource, types
+from repro.core.types import replace
+
+
+# ----------------------------------------------------------------------
+# Fig 8 PE-share allocation, probed through the private _rates helper.
+# ----------------------------------------------------------------------
+def _rates_for(n_jobs, num_pe, mips=1.0):
+    g = gridlet.make_batch(jnp.full((n_jobs,), 100.0))
+    g = replace(g, status=jnp.full((n_jobs,), types.RUNNING, jnp.int32),
+                resource=jnp.zeros((n_jobs,), jnp.int32),
+                remaining=jnp.arange(1, n_jobs + 1, dtype=jnp.float32))
+    fleet = resource.make_fleet([num_pe], mips, 1.0, types.TIME_SHARED)
+    st_ = engine.init_state(g, fleet, 1)
+    st_ = replace(st_, g=g)
+    return np.asarray(engine._rates(st_, fleet, 1, num_pe))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_jobs=st.integers(1, 17), num_pe=st.integers(1, 8))
+def test_fig8_share_conservation(n_jobs, num_pe):
+    """Total allocated rate == min(jobs, PEs) * MIPS; every job > 0."""
+    rates = _rates_for(n_jobs, num_pe)
+    assert np.all(rates > 0)
+    np.testing.assert_allclose(rates.sum(), min(n_jobs, num_pe),
+                               rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_jobs=st.integers(2, 17), num_pe=st.integers(1, 8))
+def test_fig8_max_min_share(n_jobs, num_pe):
+    """Only two share levels exist: eff/k and eff/(k+1), k=floor(g/P);
+    smallest-remaining jobs receive the larger share."""
+    rates = _rates_for(n_jobs, num_pe)
+    if n_jobs <= num_pe:
+        np.testing.assert_allclose(rates, 1.0)
+        return
+    k = n_jobs // num_pe
+    uniq = np.unique(np.round(rates, 6))
+    expected = np.array([1.0 / k, 1.0 / (k + 1)], np.float32)
+    assert all(np.isclose(u, expected, atol=1e-5).any() for u in uniq)
+    # remaining was arange(1..n): rates must be non-increasing in remaining
+    assert np.all(np.diff(rates) <= 1e-9)
+
+
+def test_space_shared_sjf_order():
+    """SJF admits the shortest queued job first."""
+    g = gridlet.make_batch([10.0, 9.0, 2.0])  # all arrive together
+    fleet = resource.make_fleet([1], 1.0, 1.0, types.SPACE_SHARED,
+                                queue_policy=types.SJF)
+    res = engine.run_direct(g, fleet, 0, jnp.zeros(3), max_events=64)
+    # G1 runs 0-10 (first arrival wins the free PE), then G3 (2 MI), G2.
+    np.testing.assert_allclose(res.gridlets.finish, [10.0, 21.0, 12.0])
+
+
+def test_space_shared_fcfs_order():
+    g = gridlet.make_batch([10.0, 9.0, 2.0])
+    fleet = resource.make_fleet([1], 1.0, 1.0, types.SPACE_SHARED,
+                                queue_policy=types.FCFS)
+    res = engine.run_direct(g, fleet, 0, jnp.array([0.0, 1.0, 2.0]),
+                            max_events=64)
+    np.testing.assert_allclose(res.gridlets.finish, [10.0, 19.0, 21.0])
+
+
+def test_network_delay_shifts_schedule():
+    """Input transfer delays arrival; output transfer delays return."""
+    g = gridlet.make_batch([10.0], in_bytes=[100.0], out_bytes=[50.0])
+    fleet = resource.make_fleet([1], 1.0, 1.0, types.TIME_SHARED,
+                                baud_rate=10.0)
+    res = engine.run_direct(g, fleet, 0, jnp.zeros(1), max_events=32)
+    assert float(res.gridlets.start[0]) == pytest.approx(10.0)   # 100/10
+    assert float(res.gridlets.finish[0]) == pytest.approx(20.0)
+    assert float(res.gridlets.returned[0]) == pytest.approx(25.0)  # +50/10
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    lengths=st.lists(st.floats(1.0, 50.0), min_size=1, max_size=9),
+    num_pe=st.integers(1, 3),
+    policy=st.sampled_from([types.TIME_SHARED, types.SPACE_SHARED]),
+)
+def test_conservation_and_makespan(lengths, num_pe, policy):
+    """All jobs finish; makespan is bounded below by work/capacity and
+    above by serial execution (property over random job sets)."""
+    g = gridlet.make_batch(jnp.asarray(lengths, jnp.float32))
+    fleet = resource.make_fleet([num_pe], 1.0, 1.0, policy)
+    res = engine.run_direct(g, fleet, 0, jnp.zeros(len(lengths)),
+                            max_events=16 * len(lengths) + 32)
+    assert np.all(np.asarray(res.gridlets.status) == types.DONE)
+    makespan = float(np.max(res.gridlets.finish))
+    total = float(sum(lengths))
+    assert makespan >= total / num_pe - 1e-3
+    assert makespan <= total + 1e-3
+    # every finish >= its own length / full speed
+    assert np.all(np.asarray(res.gridlets.finish) >=
+                  np.asarray(lengths) - 1e-3)
+
+
+def test_effective_mips_under_load():
+    fleet = resource.make_fleet([2], 100.0, 1.0, types.TIME_SHARED,
+                                base_load=0.5)
+    g = gridlet.make_batch([100.0])
+    res = engine.run_direct(g, fleet, 0, jnp.zeros(1), max_events=32)
+    # 100 MI at 100*(1-0.5) = 50 MIPS -> 2 time units.
+    assert float(res.gridlets.finish[0]) == pytest.approx(2.0)

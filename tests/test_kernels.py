@@ -1,0 +1,169 @@
+"""Pallas kernels vs ref.py oracles (interpret mode on CPU).
+
+Per the brief: sweep shapes/dtypes per kernel; property tests via
+hypothesis on the system invariants (softmax normalisation, state decay).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.core import engine, gridlet, resource, types
+from repro.core.types import replace as treplace
+
+
+# ------------------------------------------------------------------
+# flash attention
+# ------------------------------------------------------------------
+FLASH_SHAPES = [
+    # (b, hq, hkv, sq, d, causal, window, cap)
+    (1, 2, 2, 64, 16, True, 0, 0.0),
+    (2, 4, 2, 128, 32, True, 0, 0.0),
+    (2, 4, 1, 128, 32, True, 32, 0.0),      # GQA + window
+    (1, 8, 8, 256, 64, True, 0, 50.0),      # softcap
+    (1, 2, 2, 64, 16, False, 0, 0.0),       # bidirectional
+    (2, 6, 2, 96, 16, True, 16, 30.0),      # everything at once
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,causal,window,cap", FLASH_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, hq, hkv, s, d, causal, window,
+                                     cap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * 7 + s), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              cap=cap, block_q=32, block_kv=32,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   cap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_attention_lowers_for_tpu_shapes():
+    """The kernel must at least trace/lower with production block sizes."""
+    q = jax.ShapeDtypeStruct((1, 8, 2048, 128), jnp.bfloat16)
+    k = jax.ShapeDtypeStruct((1, 2, 2048, 128), jnp.bfloat16)
+    v = jax.ShapeDtypeStruct((1, 2, 2048, 128), jnp.bfloat16)
+    jax.eval_shape(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, interpret=True), q, k, v)
+
+
+# ------------------------------------------------------------------
+# SSD scan
+# ------------------------------------------------------------------
+SSD_SHAPES = [
+    # (b, s, h, p, n, chunk, block_h)
+    (1, 32, 4, 8, 16, 8, 4),
+    (2, 64, 8, 16, 32, 16, 4),
+    (1, 128, 8, 32, 64, 32, 8),
+    (2, 48, 2, 8, 8, 16, 2),
+]
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk,bh", SSD_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_ref(b, s, h, p, n, chunk, bh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(
+        jnp.float32)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, n), jnp.float32)
+    cm = jax.random.normal(ks[4], (b, s, n), jnp.float32)
+    got = ops.ssd_scan(x, dt, a, bm, cm, chunk=chunk, block_h=bh,
+                       interpret=True)
+    want = ref.ssd_ref(x, dt, a, bm, cm)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([16, 32, 64]), h=st.sampled_from([2, 4]),
+       seed=st.integers(0, 99))
+def test_ssd_scan_property_decay_bounds(s, h, seed):
+    """With x == 0 the output is 0 (pure decay); states never blow up."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    b, p, n = 1, 8, 8
+    x = jnp.zeros((b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, n))
+    cm = jax.random.normal(ks[0], (b, s, n))
+    y = ops.ssd_scan(x, dt, a, bm, cm, chunk=8, block_h=2,
+                     interpret=True)
+    np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-6)
+
+
+# ------------------------------------------------------------------
+# event scan (paper Fig 8)
+# ------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.sampled_from([8, 16]),
+    j=st.sampled_from([8, 32]),
+    seed=st.integers(0, 999),
+)
+def test_event_scan_matches_ref(r, j, seed):
+    rng = np.random.RandomState(seed)
+    remaining = rng.exponential(50.0, (r, j)).astype(np.float32)
+    remaining[rng.rand(r, j) < 0.4] = 0.0   # empty slots
+    mips = rng.uniform(1.0, 500.0, (r,)).astype(np.float32)
+    pes = rng.randint(1, 9, (r,)).astype(np.int32)
+    rate, tmin = ops.event_scan(jnp.asarray(remaining), jnp.asarray(mips),
+                                jnp.asarray(pes), interpret=True)
+    rate_ref, tmin_ref = ref.event_scan_ref(remaining, mips, pes)
+    np.testing.assert_allclose(np.asarray(rate), np.asarray(rate_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(tmin), np.asarray(tmin_ref),
+                               rtol=1e-4)
+
+
+def test_event_scan_matches_engine_rates():
+    """The kernel, its oracle and the engine's XLA path must agree."""
+    n_jobs, num_pe = 7, 2
+    g = gridlet.make_batch(jnp.full((n_jobs,), 100.0))
+    g = treplace(g, status=jnp.full((n_jobs,), types.RUNNING, jnp.int32),
+                 resource=jnp.zeros((n_jobs,), jnp.int32),
+                 remaining=jnp.arange(1.0, n_jobs + 1.0))
+    fleet = resource.make_fleet([num_pe], 3.0, 1.0, types.TIME_SHARED)
+    st_ = engine.init_state(g, fleet, 1)
+    st_ = treplace(st_, g=g)
+    engine_rates = np.asarray(engine._rates(st_, fleet, 1, num_pe))
+
+    remaining = jnp.arange(1.0, n_jobs + 1.0).reshape(1, n_jobs)
+    remaining = jnp.pad(remaining, ((0, 7), (0, 0)))  # block_r alignment
+    rate, tmin = ops.event_scan(remaining, jnp.full((8,), 3.0),
+                                jnp.full((8,), num_pe, jnp.int32),
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(rate)[0], engine_rates,
+                               rtol=1e-5)
+    assert float(tmin[0]) == pytest.approx(
+        float((jnp.arange(1.0, n_jobs + 1.0) / engine_rates).min()))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_event_scan_capacity_conservation(seed):
+    """Fig 8 invariant: allocated rate sums to min(jobs, PEs) * mips."""
+    rng = np.random.RandomState(seed)
+    r, j = 8, 16
+    remaining = rng.exponential(10.0, (r, j)).astype(np.float32)
+    remaining[rng.rand(r, j) < 0.5] = 0.0
+    mips = rng.uniform(1.0, 10.0, (r,)).astype(np.float32)
+    pes = rng.randint(1, 5, (r,)).astype(np.int32)
+    rate, _ = ops.event_scan(jnp.asarray(remaining), jnp.asarray(mips),
+                             jnp.asarray(pes), interpret=True)
+    jobs = (remaining > 0).sum(axis=1)
+    expect = np.minimum(jobs, pes) * mips
+    np.testing.assert_allclose(np.asarray(rate).sum(axis=1), expect,
+                               rtol=1e-4)

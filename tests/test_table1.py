@@ -1,0 +1,64 @@
+"""Paper Table 1 / Figs 9 and 12: the canonical scheduling trace.
+
+Three Gridlets (10, 8.5, 9.5 MI) arrive at t = 0, 4, 7 on a resource with
+two 1-MIPS PEs.  The paper's exact start/finish/elapsed times must come
+out of the engine for both allocation policies.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, gridlet, resource, types
+
+ARRIVALS = jnp.array([0.0, 4.0, 7.0])
+
+
+def _run(policy):
+    g = gridlet.make_batch([10.0, 8.5, 9.5])
+    fleet = resource.table1_resource(policy)
+    return engine.run_direct(g, fleet, 0, ARRIVALS, max_events=64)
+
+
+def test_time_shared_matches_table1():
+    res = _run(types.TIME_SHARED)
+    np.testing.assert_allclose(res.gridlets.start, [0.0, 4.0, 7.0])
+    np.testing.assert_allclose(res.gridlets.finish, [10.0, 14.0, 18.0])
+    elapsed = np.asarray(res.gridlets.finish) - np.asarray(ARRIVALS)
+    np.testing.assert_allclose(elapsed, [10.0, 10.0, 11.0])
+
+
+def test_space_shared_matches_table1():
+    res = _run(types.SPACE_SHARED)
+    np.testing.assert_allclose(res.gridlets.start, [0.0, 4.0, 10.0])
+    np.testing.assert_allclose(res.gridlets.finish, [10.0, 12.5, 19.5])
+    elapsed = np.asarray(res.gridlets.finish) - np.asarray(ARRIVALS)
+    np.testing.assert_allclose(elapsed, [10.0, 8.5, 12.5])
+
+
+@pytest.mark.parametrize("policy",
+                         [types.TIME_SHARED, types.SPACE_SHARED])
+def test_all_done_and_remaining_zero(policy):
+    res = _run(policy)
+    assert np.all(np.asarray(res.gridlets.status) == types.DONE)
+    np.testing.assert_allclose(res.gridlets.remaining, 0.0, atol=1e-5)
+
+
+def test_time_shared_event_trace():
+    """Fig 9: completions are delivered at t = 10, 14, 18 in that order."""
+    res = _run(types.TIME_SHARED)
+    tt, kind, who = (np.asarray(x) for x in res.trace)
+    completions = tt[kind == 1]  # EV_COMPLETION == index 0 in priority
+    # trace kinds: 0=completion, 1=return, 2=arrival, 3=broker
+    completions = tt[kind == 0]
+    np.testing.assert_allclose(sorted(completions[:3]), [10.0, 14.0, 18.0])
+    arrivals = tt[kind == 2]
+    np.testing.assert_allclose(sorted(arrivals[:3]), [0.0, 4.0, 7.0])
+
+
+def test_space_shared_queueing():
+    """G3 must wait in the queue until G1's PE frees at t=10 (Fig 12)."""
+    res = _run(types.SPACE_SHARED)
+    assert float(res.gridlets.start[2]) == 10.0
+    # G3 ran at full PE speed once started: 9.5 MI at 1 MIPS.
+    assert float(res.gridlets.finish[2] - res.gridlets.start[2]) == \
+        pytest.approx(9.5)
