@@ -1,42 +1,92 @@
 """Vectorised DES engine throughput (the core's own perf table).
 
 The 2002 toolkit ran one JVM thread per entity; the array engine's cost
-is events/second at fleet scale.  Sized for the 1-core CPU container;
-the same jit'd program is the TPU-target workload for kernels.event_scan.
+is events/second at fleet scale.  Three WWG scenarios (1 / 20 / 200
+users) are timed and written to ``benchmarks/artifacts/BENCH_engine.json``
+with events/sec, supersteps and wall-clock, so future PRs have a perf
+trajectory.  The 20-user cell is also compared against the recorded
+pre-superstep engine (tests/data/golden_pre_refactor.json): the
+superstep refactor must keep the ExperimentResult identical while
+running >= 2x fewer while-loop iterations.
+
+Sized for the 1-core CPU container (the kernel routes through its XLA
+fallback there); the same jit'd program is the TPU-target workload for
+kernels.event_scan.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.core import engine, gridlet, resource, simulation, types
+from repro.core import gridlet, resource, simulation, types
+
+from .common import art_path
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           os.pardir, "tests", "data",
+                           "golden_pre_refactor.json")
+SCENARIOS = ((1, 200), (20, 100), (200, 10))
+
+
+def _one(fleet, n_users, n_jobs):
+    g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
+                          n_users=n_users)
+    kw = dict(deadline=2000.0, budget=22000.0, opt=types.OPT_COST,
+              n_users=n_users)
+    r = simulation.run_experiment(g, fleet, **kw)      # warmup/compile
+    jax.block_until_ready(r.spent)
+    t0 = time.perf_counter()
+    r = simulation.run_experiment(g, fleet, **kw)
+    jax.block_until_ready(r.spent)
+    wall = time.perf_counter() - t0
+    return r, wall
 
 
 def run():
     fleet = resource.wwg_fleet()
-    out = []
-    for n_users, n_jobs in ((1, 200), (10, 100), (20, 100)):
-        g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
-                              n_users=n_users)
-        # warmup/compile
-        r = simulation.run_experiment(g, fleet, deadline=2000.0,
-                                      budget=22000.0, opt=types.OPT_COST,
-                                      n_users=n_users)
-        t0 = time.perf_counter()
-        r = simulation.run_experiment(g, fleet, deadline=2000.0,
-                                      budget=22000.0, opt=types.OPT_COST,
-                                      n_users=n_users)
-        jax.block_until_ready(r.spent)
-        wall = time.perf_counter() - t0
-        ev = int(r.gridlets.status.shape[0] * 0 + np.asarray(
-            getattr(r, "term_time")).size * 0) or int(np.asarray(
-                r.n_done).sum() * 4)  # ~4 events per completed gridlet
-        n_events = int(np.asarray(r.gridlets.status).size * 0 +
-                       float(np.asarray(r.n_done).sum()) * 4)
-        out.append((f"engine_{n_users}u_{n_jobs}j",
-                    wall * 1e6,
-                    f"events/s~{n_events / max(wall, 1e-9):.0f} "
-                    f"done={float(np.asarray(r.n_done).sum()):.0f}"))
+    try:
+        golden = json.load(open(GOLDEN_PATH))
+    except OSError:
+        golden = {}
+    report, out = {}, []
+    for n_users, n_jobs in SCENARIOS:
+        r, wall = _one(fleet, n_users, n_jobs)
+        events = int(np.asarray(r.n_events))
+        steps = int(np.asarray(r.n_steps))
+        cell = {
+            "n_users": n_users,
+            "n_jobs_per_user": n_jobs,
+            "wall_s": wall,
+            "events": events,
+            "supersteps": steps,
+            "events_per_sec": events / max(wall, 1e-9),
+            "events_per_superstep": events / max(steps, 1),
+            "n_done": float(np.asarray(r.n_done).sum()),
+            "spent": float(np.asarray(r.spent).sum()),
+            "overflow": int(np.asarray(r.overflow)),
+        }
+        base = golden.get(f"{n_users}u_{n_jobs}j")
+        if base is not None:
+            cell["pre_superstep_iterations"] = base["iterations"]
+            cell["iteration_ratio"] = base["iterations"] / max(steps, 1)
+            cell["result_identical"] = bool(
+                np.allclose(np.asarray(r.n_done), base["n_done"]) and
+                np.allclose(np.asarray(r.spent), base["spent"],
+                            rtol=1e-5) and
+                np.allclose(np.asarray(r.term_time), base["term_time"],
+                            rtol=1e-5))
+        report[f"engine_{n_users}u_{n_jobs}j"] = cell
+        derived = (f"events/s~{cell['events_per_sec']:.0f} "
+                   f"steps={steps} done={cell['n_done']:.0f}")
+        if "iteration_ratio" in cell:
+            derived += (f" iters_vs_pre={cell['iteration_ratio']:.2f}x "
+                        f"identical={cell['result_identical']}")
+        out.append((f"engine_{n_users}u_{n_jobs}j", wall * 1e6, derived))
+
+    with open(art_path("BENCH_engine.json"), "w") as f:
+        json.dump(report, f, indent=1)
     return out

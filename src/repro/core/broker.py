@@ -1,21 +1,39 @@
 """Economic grid resource broker (paper section 4.2, Figs 18-20).
 
 Each user owns a broker; a BROKER engine event runs every broker at once
-(vectorised over users).  One event performs the full Fig 20 cycle:
+(vectorised over users).  One event performs the full Fig 20 cycle,
+split into the helper per step so each stage can be tested and profiled
+on its own:
 
-  1. resource discovery (GIS mask) + trading (cost per MI, Table 2 metric),
-  2. measure-and-extrapolate the per-resource job consumption rate,
-  3. predict per-resource job capacity by the deadline,
-  4. release over-committed jobs back to the unassigned queue,
-  5. assign unassigned jobs to resources in policy order (cost / time /
-     cost-time / none optimisation) under the budget constraint,
-  6. dispatch up to MaxGridletPerPE * num_pe staged jobs per resource,
-     committing their exact processing cost against the budget.
+  ``_measure``  -- 1. resource discovery (GIS mask) + trading (cost per
+                   MI, Table 2 metric), 2. measure-and-extrapolate the
+                   per-resource job consumption rate, 3. predict
+                   per-resource job capacity by the deadline,
+  ``_release``  -- 4. release over-committed jobs back to the
+                   unassigned queue,
+  ``_assign``   -- 5. assign unassigned jobs to resources in policy
+                   order (cost / time / cost-time / none optimisation)
+                   under the budget constraint,
+  ``_dispatch`` -- 6. dispatch up to MaxGridletPerPE * num_pe staged
+                   jobs per resource, committing their exact processing
+                   cost against the budget.
+
+The broker reads only the flat GridletBatch arrays plus the engine's
+``done_on`` counters; it never touches the engine's resource-major
+job-slot table (a Gridlet's slot column is an engine implementation
+detail), which is what lets one broker event run inside a superstep at
+any point after completions and returns have been applied.
 
 The measurement in step 2 counts fractional progress of in-flight jobs so
 the estimate ramps smoothly from the advertised rate to the observed share
 (the paper's "recalibration"; Fig 34 discusses the stale-first-estimate
 overshoot this produces under competition, which this model reproduces).
+
+A broker stays active only while its cheapest possible purchase -- the
+user's smallest still-undispatched Gridlet priced at the best G$/MI on
+the grid -- fits in the remaining budget (mirrors
+``engine._user_flags``); a broker with nothing left to dispatch is
+inactive, because every further poll would be a no-op.
 """
 from __future__ import annotations
 
@@ -51,22 +69,31 @@ def _policy_keys(opt, cost_per_mi, est_rate, r_index):
         [key_cost, key_time, key_cost_time, key_none])
 
 
-def broker_event(state, fleet, params, n_users: int):
+def min_affordable_cost(g, fleet, n_users: int):
+    """Cheapest possible next purchase per user: the smallest
+    still-undispatched (CREATED) Gridlet priced at the best G$/MI.
+    +inf when nothing is left to dispatch."""
+    undispatched = g.status == CREATED
+    min_mi = jax.ops.segment_min(
+        jnp.where(undispatched, g.length_mi, INF), g.user,
+        num_segments=n_users)
+    return min_mi * (fleet.cost_per_sec / fleet.mips_per_pe).min()
+
+
+def _measure(state, fleet, params, n_users: int):
+    """Fig 20 steps 1-3: trading metrics, measured consumption rate,
+    capacity by deadline.  Returns the per-event context dict."""
     g = state.g
     t = state.t
-    n = g.n
     R = fleet.r
     u_idx = g.user
-    idx = jnp.arange(n, dtype=jnp.int32)
-    ur_key = u_idx * R + jnp.clip(g.assigned, 0, R - 1)
 
-    # ---- step 1-2: discovery, trading, measurement --------------------
     registered = params.registered
     eff = calendar.effective_mips(fleet, t)                      # [R]
     adv_rate = eff * fleet.num_pe.astype(jnp.float32)            # MIPS
     cost_per_mi = fleet.cost_per_sec / fleet.mips_per_pe         # [R]
 
-    ones = jnp.ones((n,), jnp.float32)
+    ones = jnp.ones((g.n,), jnp.float32)
     cnt_per_user = jax.ops.segment_sum(ones, u_idx, num_segments=n_users)
     mi_per_user = jax.ops.segment_sum(g.length_mi, u_idx,
                                       num_segments=n_users)
@@ -89,9 +116,24 @@ def broker_event(state, fleet, params, n_users: int):
     est_jobs = jnp.where(started, jnp.minimum(measured, adv_jobs), adv_jobs)
     est_jobs = jnp.where(registered[None, :], est_jobs, 0.0)     # [U,R]
 
-    # ---- step 3: capacity by deadline ---------------------------------
     time_left = jnp.maximum(params.deadline - t, 0.0)            # [U]
     cap_jobs = jnp.floor(est_jobs * time_left[:, None]).astype(jnp.int32)
+
+    active = ((t < params.deadline) &
+              (state.spent + min_affordable_cost(g, fleet, n_users)
+               <= params.budget))
+
+    return dict(registered=registered, cost_per_mi=cost_per_mi,
+                est_jobs=est_jobs, cap_jobs=cap_jobs, avg_mi=avg_mi,
+                inflight=inflight, ur_res_key=ur_res_key, active=active)
+
+
+def _release(state, ctx, n_users: int, R: int):
+    """Fig 20 step 4: release over-committed undispatched jobs."""
+    g = state.g
+    u_idx = g.user
+    idx = jnp.arange(g.n, dtype=jnp.int32)
+    ur_key = u_idx * R + jnp.clip(g.assigned, 0, R - 1)
 
     committed = (g.assigned >= 0) & (g.status != DONE)
     n_committed = jax.ops.segment_sum(
@@ -100,22 +142,28 @@ def broker_event(state, fleet, params, n_users: int):
         num_segments=n_users * R + 1)[:n_users * R].reshape(n_users, R)
 
     undispatched = (g.status == CREATED) & (g.assigned >= 0)
-
-    active = ((t < params.deadline) &
-              (state.spent + avg_mi * cost_per_mi.min() <= params.budget))
-
-    # ---- step 4: release over-committed undispatched jobs -------------
-    rel_rank, n_undisp = group_rank(ur_key, undispatched, -idx, n_users * R)
-    n_release = jnp.clip(n_committed - cap_jobs, 0,
+    rel_rank, n_undisp = group_rank(ur_key, undispatched, -idx,
+                                    n_users * R)
+    n_release = jnp.clip(n_committed - ctx["cap_jobs"], 0,
                          n_undisp[:n_users * R].reshape(n_users, R))
-    n_release = jnp.where(active[:, None], n_release, 0)
+    n_release = jnp.where(ctx["active"][:, None], n_release, 0)
     release = undispatched & (rel_rank <
                               n_release.reshape(-1)[jnp.clip(ur_key, 0,
                                                              n_users * R - 1)])
     assigned = jnp.where(release, -1, g.assigned)
-    n_committed = n_committed - n_release
+    return assigned, n_committed - n_release
 
-    # ---- step 5: assignment in policy order, budget constrained -------
+
+def _assign(state, ctx, assigned, n_committed, params, n_users: int,
+            R: int):
+    """Fig 20 step 5: fill per-resource capacity slots with unassigned
+    jobs in policy order under the budget constraint."""
+    g = state.g
+    u_idx = g.user
+    idx = jnp.arange(g.n, dtype=jnp.int32)
+    cost_per_mi = ctx["cost_per_mi"]
+    registered = ctx["registered"]
+
     exact_cost_now = g.length_mi * cost_per_mi[jnp.clip(assigned, 0, R - 1)]
     planned = (assigned >= 0) & (g.status == CREATED)
     planned_cost = jax.ops.segment_sum(
@@ -124,7 +172,7 @@ def broker_event(state, fleet, params, n_users: int):
     budget_left = jnp.maximum(params.budget - state.spent - planned_cost,
                               0.0)
 
-    keys = _policy_keys(params.opt, cost_per_mi[None, :], est_jobs,
+    keys = _policy_keys(params.opt, cost_per_mi[None, :], ctx["est_jobs"],
                         jnp.arange(R, dtype=jnp.float32)[None, :])
     keys = jnp.where(registered[None, :], keys, INF)
     order = jnp.argsort(keys, axis=-1)                           # [U,R]
@@ -132,12 +180,13 @@ def broker_event(state, fleet, params, n_users: int):
         jnp.arange(n_users)[:, None], order].set(
         jnp.broadcast_to(jnp.arange(R), (n_users, R)))
 
-    slots = jnp.maximum(cap_jobs - n_committed, 0)               # [U,R]
-    job_cost_est = avg_mi[:, None] * cost_per_mi[None, :]        # [U,R]
+    slots = jnp.maximum(ctx["cap_jobs"] - n_committed, 0)        # [U,R]
+    job_cost_est = ctx["avg_mi"][:, None] * cost_per_mi[None, :]  # [U,R]
 
     unassigned = (g.status == CREATED) & (assigned < 0)
     n_unassigned = jax.ops.segment_sum(
         unassigned.astype(jnp.int32), u_idx, num_segments=n_users)
+    active = ctx["active"]
 
     def fill(j, carry):
         taken, budget_rem, take_at = carry
@@ -167,25 +216,36 @@ def broker_event(state, fleet, params, n_users: int):
     gets = unassigned & (k < taken[u_idx]) & (j_star < R)
     new_assigned = jnp.where(
         gets, order[u_idx, jnp.clip(j_star, 0, R - 1)], assigned)
+    return new_assigned, inv_order
 
-    # ---- step 6: dispatch staged jobs ---------------------------------
+
+def _dispatch(state, fleet, ctx, params, new_assigned, inv_order,
+              n_users: int, R: int):
+    """Fig 20 step 6: stage up to MaxGridletPerPE * num_pe jobs per
+    resource, committing exact processing cost against the budget."""
+    g = state.g
+    t = state.t
+    u_idx = g.user
+    idx = jnp.arange(g.n, dtype=jnp.int32)
+    cost_per_mi = ctx["cost_per_mi"]
+
     ur_key2 = u_idx * R + jnp.clip(new_assigned, 0, R - 1)
     cand = (g.status == CREATED) & (new_assigned >= 0)
     n_inflight_ur = jax.ops.segment_sum(
-        inflight.astype(jnp.int32),
-        jnp.where(inflight, ur_res_key, n_users * R),
+        ctx["inflight"].astype(jnp.int32),
+        jnp.where(ctx["inflight"], ctx["ur_res_key"], n_users * R),
         num_segments=n_users * R + 1)[:n_users * R].reshape(n_users, R)
     limit = params.max_gridlet_per_pe * fleet.num_pe[None, :]
     disp_slots = jnp.maximum(limit - n_inflight_ur, 0)           # [U,R]
     disp_rank, _ = group_rank(ur_key2, cand, idx, n_users * R)
     eligible = cand & (disp_rank < disp_slots.reshape(-1)[
         jnp.clip(ur_key2, 0, n_users * R - 1)])
-    eligible = eligible & active[u_idx] & registered[
+    eligible = eligible & ctx["active"][u_idx] & ctx["registered"][
         jnp.clip(new_assigned, 0, R - 1)]
 
     exact_cost = g.length_mi * cost_per_mi[jnp.clip(new_assigned, 0, R - 1)]
     disp_order_key = (inv_order[u_idx, jnp.clip(new_assigned, 0, R - 1)]
-                      .astype(jnp.float32) * (n + 1.0) +
+                      .astype(jnp.float32) * (g.n + 1.0) +
                       idx.astype(jnp.float32))
     prefix = group_prefix_sum(u_idx, eligible, disp_order_key, exact_cost,
                               n_users)
@@ -209,10 +269,22 @@ def broker_event(state, fleet, params, n_users: int):
         jnp.where(dispatch, ur_key2, n_users * R),
         num_segments=n_users * R + 1)[:n_users * R].reshape(n_users, R)
     first_dispatch = jnp.minimum(state.first_dispatch, fd)
+    return replace(state, g=g2, spent=spent,
+                   first_dispatch=first_dispatch)
+
+
+def broker_event(state, fleet, params, n_users: int):
+    """One full Fig 20 cycle for every broker, plus the next poll."""
+    R = fleet.r
+    ctx = _measure(state, fleet, params, n_users)
+    assigned, n_committed = _release(state, ctx, n_users, R)
+    new_assigned, inv_order = _assign(state, ctx, assigned, n_committed,
+                                      params, n_users, R)
+    state = _dispatch(state, fleet, ctx, params, new_assigned, inv_order,
+                      n_users, R)
 
     # ---- next scheduling event (paper Fig 17 hold heuristic) ----------
-    dl_left = jnp.where(active, params.deadline - t, 0.0)
+    dl_left = jnp.where(ctx["active"], params.deadline - state.t, 0.0)
     period = jnp.maximum(params.sched_min_period,
                          params.sched_frac * dl_left.max())
-    return replace(state, g=g2, spent=spent, first_dispatch=first_dispatch,
-                   next_sched=t + period)
+    return replace(state, next_sched=state.t + period)

@@ -14,9 +14,14 @@ re-founded on a fixed-capacity struct-of-arrays calendar:
 
 The specialised engine (engine.py) keeps *forecast* events implicit --
 recomputed from state instead of queued -- which is how it sidesteps the
-paper's stale-internal-event discard rule (section 3.4).  This calendar is
-the general-purpose primitive for user-defined entities, tests and the
-reservation system.
+paper's stale-internal-event discard rule (section 3.4); its superstep
+loop additionally pops and applies *every* event sharing the earliest
+timestamp in one iteration, where this calendar's ``pop_next`` stays
+strictly one-event-at-a-time (the paper's Fig 2 semantics).  This
+calendar is the general-purpose primitive for user-defined entities,
+tests and the reservation system.  ``EventQueue.overflow`` counts
+events dropped because the calendar was full -- callers size capacity
+so it stays 0 (asserted in tests).
 """
 from __future__ import annotations
 
@@ -35,6 +40,7 @@ class EventQueue:
     data: jax.Array     # f32[C, K]
     seq: jax.Array      # i32[C] FIFO tiebreak among equal timestamps
     next_seq: jax.Array  # i32[]
+    overflow: jax.Array  # i32[] events dropped on a full calendar
 
     @property
     def capacity(self) -> int:
@@ -50,23 +56,37 @@ def make_queue(capacity: int, payload: int = 1) -> EventQueue:
         data=jnp.zeros((capacity, payload), jnp.float32),
         seq=jnp.zeros((capacity,), jnp.int32),
         next_seq=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.int32),
     )
 
 
 def schedule(q: EventQueue, time, src, dst, tag, data=None) -> EventQueue:
-    """sim_schedule: place one event.  Overwrites the oldest-free slot;
-    callers size the queue so it never fills (asserted in tests)."""
-    slot = jnp.argmax(~jnp.isfinite(q.time))  # first free slot
+    """sim_schedule: place one event in the first free slot.
+
+    A full calendar DROPS the event and increments ``overflow`` instead
+    of silently overwriting a live slot (the previous behaviour --
+    argmax over an all-False free mask returned slot 0).  Callers size
+    the queue so this never happens; tests assert overflow == 0.
+    """
+    free = ~jnp.isfinite(q.time)
+    has_free = free.any()
+    slot = jnp.argmax(free)  # first free slot (garbage when full)
     data = jnp.zeros((q.data.shape[1],), jnp.float32) if data is None \
         else jnp.asarray(data, jnp.float32).reshape(q.data.shape[1])
+
+    def put(new, old):
+        return jnp.where(has_free, new, old)
+
     return EventQueue(
-        time=q.time.at[slot].set(jnp.asarray(time, jnp.float32)),
-        src=q.src.at[slot].set(jnp.asarray(src, jnp.int32)),
-        dst=q.dst.at[slot].set(jnp.asarray(dst, jnp.int32)),
-        tag=q.tag.at[slot].set(jnp.asarray(tag, jnp.int32)),
-        data=q.data.at[slot].set(data),
-        seq=q.seq.at[slot].set(q.next_seq),
+        time=put(q.time.at[slot].set(jnp.asarray(time, jnp.float32)),
+                 q.time),
+        src=put(q.src.at[slot].set(jnp.asarray(src, jnp.int32)), q.src),
+        dst=put(q.dst.at[slot].set(jnp.asarray(dst, jnp.int32)), q.dst),
+        tag=put(q.tag.at[slot].set(jnp.asarray(tag, jnp.int32)), q.tag),
+        data=put(q.data.at[slot].set(data), q.data),
+        seq=put(q.seq.at[slot].set(q.next_seq), q.seq),
         next_seq=q.next_seq + 1,
+        overflow=q.overflow + (~has_free).astype(jnp.int32),
     )
 
 
@@ -94,7 +114,7 @@ def pop_next(q: EventQueue):
           q.data[slot], valid)
     q2 = EventQueue(
         time=q.time.at[slot].set(INF), src=q.src, dst=q.dst, tag=q.tag,
-        data=q.data, seq=q.seq, next_seq=q.next_seq)
+        data=q.data, seq=q.seq, next_seq=q.next_seq, overflow=q.overflow)
     return q2, ev
 
 
@@ -104,4 +124,5 @@ def cancel(q: EventQueue, predicate) -> EventQueue:
     mask = predicate(q)
     return EventQueue(
         time=jnp.where(mask, INF, q.time), src=q.src, dst=q.dst,
-        tag=q.tag, data=q.data, seq=q.seq, next_seq=q.next_seq)
+        tag=q.tag, data=q.data, seq=q.seq, next_seq=q.next_seq,
+        overflow=q.overflow)

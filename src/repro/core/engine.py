@@ -1,7 +1,29 @@
-"""The vectorised discrete-event engine (paper sections 3.4-3.5).
+"""The vectorised discrete-event engine (paper sections 3.4-3.5),
+refactored around a **resource-major superstep loop**.
 
-One ``lax.while_loop`` advances the whole grid: every iteration finds the
-earliest pending event across
+State layout
+------------
+Gridlet state stays in the flat struct-of-arrays ``GridletBatch`` (the
+broker's natural layout), but every *executing* Gridlet additionally
+occupies one column of a resource-major ``[R_pad, J]`` job-slot table:
+
+  ``SimState.slot[i]``          -- column of Gridlet ``i`` (-1 = none),
+  ``SimState.row_gridlet[r,j]`` -- inverse map: flat Gridlet index (-1).
+
+Slots are allocated on admission (RUNNING) and freed on completion, so
+the table always holds exactly the running set.  Each while-loop
+iteration -- one **superstep** -- gathers ``remaining`` into the table
+and evaluates the Fig 8 PE-share + forecast math in a single call to
+``kernels.ops.event_scan`` (compiled Pallas on TPU, vectorised XLA
+fallback on CPU hosts); the kernel also emits the per-row earliest
+completion (argmin) and PE occupancy so no second pass over the state is
+needed.
+
+Superstep semantics
+-------------------
+The paper's engine (section 3.4) pops one timestamp-ordered event per
+iteration.  A superstep instead finds the earliest pending time ``t*``
+across
 
   COMPLETION -- forecast finish of the smallest-remaining-share job
                 (paper Fig 7 step 2d / Fig 10: internal events),
@@ -9,10 +31,21 @@ earliest pending event across
   ARRIVAL    -- dispatched Gridlet reaches its resource (GRIDLET_SUBMIT),
   BROKER     -- periodic scheduling event of the economic broker,
 
-advances all resident jobs analytically by the PE-share algebra of Fig 8,
-and applies the event.  Forecasts are recomputed from state on every
-iteration, so the paper's stale-internal-event discard rule (section 3.4)
-holds by construction: a superseded forecast simply never materialises.
+advances all resident jobs analytically by the PE-share algebra of Fig 8
+over ``[t, t*)``, then applies **every** event due at ``t*`` in one
+vectorised batch per kind, in the priority order COMPLETION > RETURN >
+ARRIVAL > BROKER.  Within a kind, ties are FIFO by flat Gridlet index --
+exactly the order the one-event-at-a-time loop would have produced, so
+the Table 1 / Fig 9 / Fig 12 traces are reproduced bit-for-bit.  Two
+event chains that the paper engine spreads over extra zero-dt
+iterations are folded into the same superstep because they are
+observationally simultaneous: a zero-delay RETURN of a Gridlet that
+completed at ``t*``, and the zero-delay ARRIVAL of a Gridlet the broker
+dispatched at ``t*`` (arrival application commutes with the broker
+event: it changes neither the in-flight set nor any quantity the broker
+reads).  Forecasts are recomputed from state every superstep, so the
+paper's stale-internal-event discard rule (section 3.4) holds by
+construction: a superseded forecast simply never materialises.
 
 Time-shared share allocation (Fig 8): with g jobs on P PEs,
   min_jobs = g // P PEs' worth of jobs run at MaxShare = eff_mips/min_jobs,
@@ -21,7 +54,13 @@ Time-shared share allocation (Fig 8): with g jobs on P PEs,
   consistent with the worked trace of Fig 9 / Table 1 (G3 joins G2's PE at
   t=7, G1 keeps a whole PE and finishes at 10).
 
-Space-shared (Figs 10-12): dedicated PE per job, FCFS (or SJF) queue.
+Space-shared (Figs 10-12): dedicated PE per job, FCFS (or SJF) queue;
+PE identity never affects the trace (all PEs of a resource are equal
+rated), so only the per-resource occupancy count is tracked.
+
+``SimState.n_events`` counts applied events, ``n_steps`` counts
+supersteps (while-loop iterations); ``overflow`` counts job-slot
+allocation failures and must stay 0 (drivers size ``J`` accordingly).
 """
 from __future__ import annotations
 
@@ -33,12 +72,15 @@ import jax.numpy as jnp
 
 from . import broker as broker_mod
 from . import calendar, network
+from ..kernels import ops as kernel_ops
+from ..kernels.event_scan import BIG as _BIG  # empty-slot sentinel
 from .segments import group_rank
 from .types import (CREATED, DONE, EV_ARRIVAL, EV_BROKER, EV_COMPLETION,
                     EV_RETURN, FCFS, IN_TRANSIT, INF, QUEUED, RETURNING,
                     RUNNING, SJF, SPACE_SHARED, TIME_SHARED, pytree_dataclass)
 
 TRACE_LEN = 64
+BLOCK_R = 8          # event_scan row blocking; resource axis padded to it
 
 
 @pytree_dataclass
@@ -74,13 +116,17 @@ def default_params(deadline, budget, opt, n_users: int,
 class SimState:
     t: jax.Array               # f32 current simulation time
     g: object                  # GridletBatch
-    pe: jax.Array              # i32[N] PE slot (space-shared)
+    slot: jax.Array            # i32[N] job-slot column (-1 = none)
+    row_gridlet: jax.Array     # i32[R_pad, J] slot -> gridlet (-1 = free)
     spent: jax.Array           # f32[U] committed budget
     done_on: jax.Array         # f32[U,R] jobs of u completed on r
     first_dispatch: jax.Array  # f32[U,R] first dispatch instant (inf)
     next_sched: jax.Array      # f32 next broker event
     term_time: jax.Array       # f32[U] broker termination instant
-    n_events: jax.Array        # i32
+    n_events: jax.Array        # i32 applied events (batched kinds summed)
+    n_steps: jax.Array         # i32 supersteps (while-loop iterations)
+    n_trace: jax.Array         # i32 trace entries written
+    overflow: jax.Array        # i32 job-slot allocation failures (== 0)
     trace_t: jax.Array         # f32[TRACE_LEN]
     trace_kind: jax.Array      # i32[TRACE_LEN]
     trace_who: jax.Array       # i32[TRACE_LEN]
@@ -92,14 +138,21 @@ class SimResult(NamedTuple):
     term_time: jax.Array
     n_events: jax.Array
     trace: tuple
+    n_steps: jax.Array
+    overflow: jax.Array
 
 
 # ----------------------------------------------------------------------
 # Resource dynamics
 # ----------------------------------------------------------------------
 
-def _rates(state, fleet, n_resources, max_pe):
-    """Per-gridlet execution rate (MI per time unit) under Fig 8 shares."""
+def _rates(state, fleet, n_resources):
+    """Per-gridlet execution rate (MI per time unit) under Fig 8 shares.
+
+    Flat-layout XLA reference path, kept as the oracle the kernel path
+    must agree with (asserted in tests); the superstep loop itself goes
+    through kernels.ops.event_scan on the resource-major table.
+    """
     g = state.g
     running = g.status == RUNNING
     res = jnp.clip(g.resource, 0, n_resources - 1)
@@ -124,116 +177,175 @@ def _rates(state, fleet, n_resources, max_pe):
     return jnp.where(running, rate, 0.0)
 
 
-def _ss_occupancy(state, fleet, n_resources, max_pe):
-    """PE occupancy grid for space-shared placement. BIG where invalid."""
+def _scan_events(state, fleet, n_resources, r_pad):
+    """Resource-major Fig 8 scan through kernels.ops.event_scan.
+
+    Gathers ``remaining`` into the [R_pad, J] job-slot table (flat
+    gridlet index as the FIFO tie-break key) and returns the kernel
+    outputs (rate [R_pad, J], t_min [R_pad], argmin col [R_pad],
+    occupancy [R_pad]).
+    """
     g = state.g
-    run_ss = (g.status == RUNNING) & \
-        (fleet.policy[jnp.clip(g.resource, 0, n_resources - 1)] == SPACE_SHARED)
-    res = jnp.where(run_ss, g.resource, 0)
-    pe = jnp.where(run_ss, jnp.clip(state.pe, 0, max_pe - 1), 0)
-    occ = jnp.zeros((n_resources, max_pe), jnp.int32)
-    occ = occ.at[res, pe].add(run_ss.astype(jnp.int32))
-    invalid = jnp.arange(max_pe)[None, :] >= fleet.num_pe[:, None]
-    return occ + invalid.astype(jnp.int32) * 10**6
+    rg = state.row_gridlet
+    occupied = rg >= 0
+    gid = jnp.clip(rg, 0, g.n - 1)
+    # An occupied slot whose remaining underflowed to exactly 0 (f32
+    # advance rounding) must stay visible to the kernel -- 0 is the
+    # empty-slot sentinel -- so it is clamped to a tiny epsilon: it then
+    # forecasts an immediate completion and keeps its PE share, exactly
+    # as a zero-remaining RUNNING job did in the one-event-at-a-time
+    # engine.
+    rem_rj = jnp.where(occupied,
+                       jnp.maximum(g.remaining[gid], 1e-30), 0.0)
+    tie_rj = jnp.where(occupied, rg, 2 ** 30).astype(jnp.float32)
+    pad = r_pad - n_resources
+    eff = jnp.pad(calendar.effective_mips(fleet, state.t), (0, pad),
+                  constant_values=1.0)
+    npe = jnp.pad(fleet.num_pe, (0, pad), constant_values=1)
+    pol = jnp.pad(fleet.policy, (0, pad))
+    return kernel_ops.event_scan(rem_rj, eff, npe, tie=tie_rj, policy=pol)
 
 
 # ----------------------------------------------------------------------
-# Event application
+# Batched event application
 # ----------------------------------------------------------------------
 
-def _apply_completion(state, fleet, i, t, n_resources, max_pe):
-    """RUNNING -> RETURNING; space-shared: admit next queued job."""
+def _free_slots(state, mask, res, r_pad):
+    """Release the job slots of every gridlet in ``mask``."""
+    from .types import replace
+    j_cap = state.row_gridlet.shape[1]
+    rows = jnp.where(mask, res, r_pad)          # out of range: dropped
+    cols = jnp.where(mask, jnp.clip(state.slot, 0, j_cap - 1), 0)
+    rg = state.row_gridlet.at[rows, cols].set(-1, mode="drop")
+    return replace(state, row_gridlet=rg,
+                   slot=jnp.where(mask, -1, state.slot))
+
+
+def _alloc_slots(state, mask, res, n_resources, r_pad):
+    """Allocate a free job-slot column to every gridlet in ``mask``.
+
+    Within a resource, gridlets take columns in flat-index order (the
+    FIFO tie-break also used by the kernel, so column identity never
+    matters).  Gridlets that find no free column are counted in
+    ``overflow`` -- drivers size J so this cannot happen.
+    """
     from .types import replace
     g = state.g
-    r = g.resource[i]
-    out_delay = network.transfer_delay(g.out_bytes[i], fleet.baud_rate[r])
+    n = g.n
+    j_cap = state.row_gridlet.shape[1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    used = state.row_gridlet >= 0
+    free_order = jnp.argsort(used, axis=1, stable=True)   # free cols first
+    n_free = j_cap - jnp.sum(used, axis=1)                # [R_pad]
+    rank, _ = group_rank(res, mask, idx, n_resources)
+    ok = mask & (rank < n_free[res])
+    col = free_order[res, jnp.clip(rank, 0, j_cap - 1)]
+    rows = jnp.where(ok, res, r_pad)            # out of range: dropped
+    cols = jnp.where(ok, col, 0)
+    rg = state.row_gridlet.at[rows, cols].set(idx, mode="drop")
+    return replace(
+        state, row_gridlet=rg,
+        slot=jnp.where(ok, col, state.slot),
+        overflow=state.overflow + jnp.sum(mask & ~ok, dtype=jnp.int32))
+
+
+def _apply_completions(state, fleet, completes, t_next, n_resources,
+                       r_pad):
+    """RUNNING -> RETURNING for the whole batch; job slots freed."""
+    from .types import replace
+    g = state.g
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    out_delay = network.transfer_delay(g.out_bytes, fleet.baud_rate[res])
     g = replace(
         g,
-        status=g.status.at[i].set(RETURNING),
-        remaining=g.remaining.at[i].set(0.0),
-        finish=g.finish.at[i].set(t),
-        t_event=g.t_event.at[i].set(t + out_delay),
+        status=jnp.where(completes, RETURNING, g.status),
+        finish=jnp.where(completes, t_next, g.finish),
+        t_event=jnp.where(completes, t_next + out_delay, g.t_event),
     )
-    state = replace(state, g=g)
-
-    # Space-shared: freed PE admits the next queued Gridlet (Fig 10 step 3).
-    is_ss = fleet.policy[r] == SPACE_SHARED
-    queued = (g.status == QUEUED) & (g.resource == r)
-    # FCFS: earliest arrival at the resource (QUEUED jobs keep their
-    # arrival instant in t_event); SJF: smallest job. Ties by index.
-    key = jnp.where(fleet.queue_policy[r] == SJF, g.length_mi, g.t_event)
-    key = jnp.where(queued, key, INF)
-    j = jnp.argmin(key)
-    any_queued = is_ss & queued[j]
-
-    freed_pe = state.pe[i]
-
-    def admit(state):
-        g = state.g
-        g = replace(
-            g,
-            status=g.status.at[j].set(RUNNING),
-            start=g.start.at[j].set(jnp.minimum(g.start[j], t)),
-            t_event=g.t_event.at[j].set(INF),
-        )
-        return replace(state, g=g, pe=state.pe.at[j].set(freed_pe))
-
-    return jax.lax.cond(any_queued, admit, lambda s: s, state)
+    return _free_slots(replace(state, g=g), completes, res, r_pad)
 
 
-def _apply_return(state, fleet, params, i, t):
-    """RETURNING -> DONE; broker measurement update (paper 4.2.1 step 6)."""
-    from .types import replace
-    g = state.g
-    u, r = g.user[i], g.resource[i]
-    g = replace(g, status=g.status.at[i].set(DONE),
-                returned=g.returned.at[i].set(t))
-    done_on = state.done_on.at[u, r].add(1.0)
-    return replace(state, g=g, done_on=done_on)
-
-
-def _apply_arrival(state, fleet, i, t, n_resources, max_pe):
-    """IN_TRANSIT -> RUNNING (time-shared / free PE) or QUEUED.
-
-    Time-shared arrivals commute (every resident job just re-shares), so
-    ALL arrivals due at exactly ``t`` on time-shared resources are
-    admitted in one event -- broker dispatch storms otherwise cost one
-    engine iteration per Gridlet (measured 1.8x fewer iterations on the
-    20-user benchmark; EXPERIMENTS.md section Perf, engine cell).
-    Space-shared admission stays one-at-a-time (PE assignment orders).
+def _admit_queued(state, fleet, free_pe, t_next, n_resources):
+    """Freed space-shared PEs admit the next queued Gridlets in FCFS/SJF
+    order (Fig 10 step 3).  Returns (state, admitted mask) -- slots are
+    allocated later together with the arrival batch.
     """
     from .types import replace
     g = state.g
     res = jnp.clip(g.resource, 0, n_resources - 1)
+    queued = g.status == QUEUED
+    # FCFS: earliest arrival at the resource (QUEUED jobs keep their
+    # arrival instant in t_event); SJF: smallest job. Ties by index.
+    qkey = jnp.where(fleet.queue_policy[res] == SJF, g.length_mi,
+                     g.t_event)
+    rank, _ = group_rank(res, queued, qkey, n_resources)
+    admitq = queued & (rank < free_pe[res])
+    g = replace(
+        g,
+        status=jnp.where(admitq, RUNNING, g.status),
+        start=jnp.where(admitq, jnp.minimum(g.start, t_next), g.start),
+        t_event=jnp.where(admitq, INF, g.t_event),
+    )
+    return replace(state, g=g), admitq
 
-    # --- batched time-shared arrivals at this instant ---
-    due_ts = ((g.status == IN_TRANSIT) & (g.t_event <= t) &
-              (fleet.policy[res] == TIME_SHARED))
-    status = jnp.where(due_ts, RUNNING, g.status)
-    start = jnp.where(due_ts, jnp.minimum(g.start, t), g.start)
-    t_event = jnp.where(due_ts, INF, g.t_event)
 
-    # --- single space-shared arrival (gridlet i), if applicable ---
-    r = g.resource[i]
-    is_ss = fleet.policy[r] == SPACE_SHARED
-    occ = _ss_occupancy(state, fleet, n_resources, max_pe)
-    free_pe = jnp.argmin(occ[r])
-    has_free = occ[r, free_pe] == 0
-    starts_now = is_ss & has_free
-    status = status.at[i].set(
-        jnp.where(is_ss, jnp.where(starts_now, RUNNING, QUEUED),
-                  status[i]))
-    start = start.at[i].set(
-        jnp.where(starts_now, jnp.minimum(g.start[i], t), start[i]))
-    # QUEUED jobs keep their arrival instant in t_event (the FCFS key);
-    # QUEUED status is never scanned as a pending event so this is safe.
-    t_event = t_event.at[i].set(
-        jnp.where(is_ss, jnp.where(starts_now, INF, t), t_event[i]))
-    pe = state.pe.at[i].set(
-        jnp.where(is_ss & has_free, free_pe, state.pe[i]))
+def _apply_returns(state, fleet, t_next, n_users, n_resources):
+    """RETURNING & due -> DONE for the whole batch; broker measurement
+    update (paper 4.2.1 step 6).  Includes zero-delay returns of jobs
+    that completed earlier in this same superstep.
+    """
+    from .types import replace
+    g = state.g
+    ret_due = (g.status == RETURNING) & (g.t_event <= t_next)
+    g = replace(g,
+                status=jnp.where(ret_due, DONE, g.status),
+                returned=jnp.where(ret_due, t_next, g.returned))
+    ur = g.user * n_resources + jnp.clip(g.resource, 0, n_resources - 1)
+    done_on = state.done_on + jax.ops.segment_sum(
+        ret_due.astype(jnp.float32), ur,
+        num_segments=n_users * n_resources).reshape(n_users, n_resources)
+    return replace(state, g=g, done_on=done_on), ret_due
 
-    g = replace(g, status=status, start=start, t_event=t_event)
-    return replace(state, g=g, pe=pe)
+
+def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_resources):
+    """IN_TRANSIT & due -> RUNNING (time-shared / free PE) or QUEUED,
+    for the whole batch.
+
+    All time-shared arrivals commute (every resident job just
+    re-shares).  Space-shared arrivals fill the ``free_pe`` PEs left
+    after this superstep's queue admissions -- arrivals already due
+    before the broker event (``arr_pre``) first, then this superstep's
+    zero-delay dispatches, flat-index order within each class: exactly
+    the order the one-at-a-time loop (ARRIVAL before BROKER at equal
+    time) admits them -- and the rest join the queue stamped with their
+    arrival instant (the FCFS key).  Returns (state, arrival mask,
+    newly-running mask).
+    """
+    from .types import replace
+    g = state.g
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    idx = jnp.arange(g.n, dtype=jnp.int32)
+    arr_due = (g.status == IN_TRANSIT) & (g.t_event <= t_next)
+    is_ss = fleet.policy[res] == SPACE_SHARED
+    arr_ss = arr_due & is_ss
+    order = jnp.where(arr_pre, idx, idx + g.n)
+    rank = jax.lax.cond(
+        arr_ss.any(),
+        lambda: group_rank(res, arr_ss, order, n_resources)[0],
+        lambda: jnp.full((g.n,), jnp.int32(2 ** 30)))
+    arr_run = arr_due & (~is_ss | (rank < free_pe[res]))
+    arr_queue = arr_ss & ~arr_run
+    g = replace(
+        g,
+        status=jnp.where(arr_run, RUNNING,
+                         jnp.where(arr_queue, QUEUED, g.status)),
+        start=jnp.where(arr_run, jnp.minimum(g.start, t_next), g.start),
+        # QUEUED jobs keep their arrival instant in t_event (the FCFS
+        # key); QUEUED is never scanned as a pending event so it's safe.
+        t_event=jnp.where(arr_run, INF,
+                          jnp.where(arr_queue, t_next, g.t_event)),
+    )
+    return replace(state, g=g), arr_due, arr_run
 
 
 # ----------------------------------------------------------------------
@@ -241,7 +353,15 @@ def _apply_arrival(state, fleet, i, t, n_resources, max_pe):
 # ----------------------------------------------------------------------
 
 def _user_flags(state, params, fleet, n_users):
-    """(active, finished) per user -- paper 4.2.1 step 7 semantics."""
+    """(active, finished) per user -- paper 4.2.1 step 7 semantics.
+
+    A broker stays active only while its cheapest possible purchase --
+    the user's smallest still-undispatched Gridlet priced at the best
+    G$/MI on the grid -- fits in the remaining budget.  With nothing
+    left to dispatch the broker goes inactive (every further poll would
+    be a no-op); the user is finished once inactive with nothing in
+    flight.
+    """
     g = state.g
     u = g.user
     not_done = (g.status != DONE).astype(jnp.int32)
@@ -250,7 +370,7 @@ def _user_flags(state, params, fleet, n_users):
                 (g.status == RUNNING) | (g.status == RETURNING))
     n_inflight = jax.ops.segment_sum(inflight.astype(jnp.int32), u,
                                      num_segments=n_users)
-    min_job_cost = (fleet.cost_per_sec / fleet.mips_per_pe).min() * 1.0
+    min_job_cost = broker_mod.min_affordable_cost(g, fleet, n_users)
     all_done = n_not_done == 0
     active = ((state.t < params.deadline) &
               (state.spent + min_job_cost <= params.budget) &
@@ -259,136 +379,204 @@ def _user_flags(state, params, fleet, n_users):
     return active, finished
 
 
-def step(state: SimState, fleet, params: SimParams, n_users: int,
-         max_pe: int):
-    """One engine iteration: pick earliest event, advance, apply."""
+def step(state: SimState, fleet, params: SimParams, n_users: int):
+    """One superstep: scan once, pick earliest time t*, advance, apply
+    ALL events due at t* in priority order."""
     from .types import replace
     n_resources = fleet.r
+    r_pad = state.row_gridlet.shape[0]
     g = state.g
+    j_cap = state.row_gridlet.shape[1]
 
-    rate = _rates(state, fleet, n_resources, max_pe)
-    forecast = jnp.where(g.status == RUNNING,
-                         state.t + g.remaining / jnp.maximum(rate, 1e-30),
-                         INF)
-    t_complete = forecast.min()
-    i_complete = jnp.argmin(forecast)
+    # ---- one kernel scan: rates, forecasts, argmin, occupancy --------
+    rate_rj, tmin_rows, amin_rows, occ_rows = _scan_events(
+        state, fleet, n_resources, r_pad)
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    has_slot = (g.status == RUNNING) & (state.slot >= 0)
+    rate = jnp.where(has_slot,
+                     rate_rj[res, jnp.clip(state.slot, 0, j_cap - 1)], 0.0)
+    rel = jnp.where(has_slot,
+                    g.remaining / jnp.maximum(rate, 1e-30), INF)
+
+    tmin = tmin_rows.min()
+    t_complete = jnp.where(tmin < _BIG, state.t + tmin, INF)
 
     ret_t = jnp.where(g.status == RETURNING, g.t_event, INF)
-    t_return, i_return = ret_t.min(), jnp.argmin(ret_t)
-
+    t_return = ret_t.min()
     arr_t = jnp.where(g.status == IN_TRANSIT, g.t_event, INF)
-    t_arrive, i_arrive = arr_t.min(), jnp.argmin(arr_t)
-
+    t_arrive = arr_t.min()
     active, _ = _user_flags(state, params, fleet, n_users)
     t_broker = jnp.where(active.any(), state.next_sched, INF)
 
     # Priority among simultaneous events: COMPLETION, RETURN, ARRIVAL,
-    # BROKER (argmin keeps the first of equal keys).
+    # BROKER -- every kind due at t* fires this superstep, applied in
+    # that order.
     times = jnp.stack([t_complete, t_return, t_arrive, t_broker])
-    kind = jnp.argmin(times)
-    t_next = times[kind]
-    t_next = jnp.where(jnp.isfinite(t_next), t_next, state.t)
+    t_min_all = times.min()
+    any_event = jnp.isfinite(t_min_all)
+    t_next = jnp.where(any_event, t_min_all, state.t)
 
     # Advance every running job analytically over [t, t_next).
     dt = jnp.maximum(t_next - state.t, 0.0)
-    new_remaining = jnp.maximum(g.remaining - rate * dt, 0.0)
-    g = replace(g, remaining=new_remaining)
-    state = replace(state, g=g, t=t_next)
+    completes = has_slot & any_event & (state.t + rel <= t_next)
+    new_remaining = jnp.where(
+        completes, 0.0, jnp.maximum(g.remaining - rate * dt, 0.0))
+    # Trace representative: the kernel's per-row argmin of the earliest
+    # row (first row attaining the global forecast minimum).
+    r_star = jnp.argmin(tmin_rows)
+    who_c = state.row_gridlet[
+        r_star, jnp.clip(amin_rows[r_star], 0, j_cap - 1)]
+    state = replace(state, g=replace(g, remaining=new_remaining), t=t_next)
 
-    who = jnp.stack([i_complete, i_return, i_arrive, -1])[kind]
+    # ---- COMPLETION batch (+ space-shared queue admission) -----------
+    state = _apply_completions(state, fleet, completes, t_next,
+                               n_resources, r_pad)
+    # Freed PEs admit queued Gridlets.  Queued jobs only exist while
+    # every PE is busy, so the kernel occupancy minus this batch's
+    # completions is the exact busy count.
+    n_comp_r = jax.ops.segment_sum(completes.astype(jnp.int32), res,
+                                   num_segments=n_resources)
+    free_pe = jnp.maximum(
+        fleet.num_pe - (occ_rows[:n_resources] - n_comp_r), 0)
+    free_pe = jnp.where(fleet.policy == SPACE_SHARED, free_pe, 0)
+    ss_freed = completes & (fleet.policy[res] == SPACE_SHARED)
+    state, admitq = jax.lax.cond(
+        ss_freed.any(),
+        lambda s: _admit_queued(s, fleet, free_pe, t_next, n_resources),
+        lambda s: (s, jnp.zeros_like(completes)), state)
+    free_pe = free_pe - jax.ops.segment_sum(
+        admitq.astype(jnp.int32), res, num_segments=n_resources)
 
-    def on_complete(s):
-        return _apply_completion(s, fleet, i_complete, t_next,
-                                 n_resources, max_pe)
+    # ---- RETURN batch ------------------------------------------------
+    state, ret_due = _apply_returns(state, fleet, t_next, n_users,
+                                    n_resources)
+    who_r = jnp.argmax(ret_due).astype(jnp.int32)
 
-    def on_return(s):
-        return _apply_return(s, fleet, params, i_return, t_next)
+    # Arrivals already due before the broker fires hold admission
+    # priority over its zero-delay dispatches (ARRIVAL > BROKER).
+    arr_pre = (state.g.status == IN_TRANSIT) & (state.g.t_event <= t_next)
 
-    def on_arrive(s):
-        return _apply_arrival(s, fleet, i_arrive, t_next,
-                              n_resources, max_pe)
+    # ---- BROKER event ------------------------------------------------
+    fired_b = jnp.isfinite(t_broker) & (t_broker <= t_next)
+    state = jax.lax.cond(
+        fired_b,
+        lambda s: broker_mod.broker_event(s, fleet, params, n_users),
+        lambda s: s, state)
 
-    def on_broker(s):
-        return broker_mod.broker_event(s, fleet, params, n_users)
+    # ---- ARRIVAL batch (incl. zero-delay arrivals of this superstep's
+    # dispatches; commutes with the broker event) ----------------------
+    state, arr_due, arr_run = _apply_arrivals(state, fleet, free_pe,
+                                              arr_pre, t_next,
+                                              n_resources)
+    who_a = jnp.argmax(arr_due).astype(jnp.int32)
 
-    state = jax.lax.switch(kind, [on_complete, on_return, on_arrive,
-                                  on_broker], state)
+    # ---- allocate job slots for everything newly RUNNING -------------
+    newly = admitq | arr_run
+    res_now = jnp.clip(state.g.resource, 0, n_resources - 1)
+    state = jax.lax.cond(
+        newly.any(),
+        lambda s: _alloc_slots(s, newly, res_now, n_resources, r_pad),
+        lambda s: s, state)
 
-    # Record broker termination instants.
+    # ---- bookkeeping: termination instants, trace, counters ----------
     _, finished = _user_flags(state, params, fleet, n_users)
     term = jnp.where(finished & ~jnp.isfinite(state.term_time),
                      t_next, state.term_time)
 
-    k = jnp.minimum(state.n_events, TRACE_LEN - 1)
+    n_comp = jnp.sum(completes, dtype=jnp.int32)
+    n_ret = jnp.sum(ret_due, dtype=jnp.int32)
+    n_arr = jnp.sum(arr_due, dtype=jnp.int32)
+    fired = jnp.stack([n_comp > 0, n_ret > 0, n_arr > 0, fired_b])
+    whos = jnp.stack([who_c, who_r, who_a, jnp.asarray(-1, jnp.int32)])
+    off = jnp.cumsum(fired.astype(jnp.int32)) - fired.astype(jnp.int32)
+    # Out-of-range positions (unfired kinds / full trace) are dropped.
+    pos = jnp.where(fired, state.n_trace + off, TRACE_LEN)
+    kinds = jnp.arange(4, dtype=jnp.int32)
     state = replace(
         state,
         term_time=term,
-        n_events=state.n_events + 1,
-        trace_t=state.trace_t.at[k].set(t_next),
-        trace_kind=state.trace_kind.at[k].set(kind),
-        trace_who=state.trace_who.at[k].set(who),
+        n_events=state.n_events + n_comp + n_ret + n_arr +
+        fired_b.astype(jnp.int32),
+        n_steps=state.n_steps + 1,
+        n_trace=state.n_trace + jnp.sum(fired, dtype=jnp.int32),
+        trace_t=state.trace_t.at[pos].set(t_next, mode="drop"),
+        trace_kind=state.trace_kind.at[pos].set(kinds, mode="drop"),
+        trace_who=state.trace_who.at[pos].set(whos, mode="drop"),
     )
     return state
 
 
 def _continue(state, fleet, params, n_users, max_events):
     _, finished = _user_flags(state, params, fleet, n_users)
-    return (~finished.all()) & (state.n_events < max_events)
+    return (~finished.all()) & (state.n_steps < max_events)
 
 
-def init_state(gridlets, fleet, n_users: int,
-               first_sched: float = 0.0) -> SimState:
+def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
+               max_jobs: int | None = None) -> SimState:
+    """``max_jobs`` bounds concurrently RUNNING gridlets per resource
+    (the J axis of the job-slot table); defaults to the safe bound N."""
     n = gridlets.n
+    j_cap = n if max_jobs is None else min(max_jobs, n)
+    r_pad = -(-fleet.r // BLOCK_R) * BLOCK_R
     return SimState(
         t=jnp.asarray(0.0, jnp.float32),
         g=gridlets,
-        pe=jnp.full((n,), -1, jnp.int32),
+        slot=jnp.full((n,), -1, jnp.int32),
+        row_gridlet=jnp.full((r_pad, j_cap), -1, jnp.int32),
         spent=jnp.zeros((n_users,), jnp.float32),
         done_on=jnp.zeros((n_users, fleet.r), jnp.float32),
         first_dispatch=jnp.full((n_users, fleet.r), INF, jnp.float32),
         next_sched=jnp.asarray(first_sched, jnp.float32),
         term_time=jnp.full((n_users,), INF, jnp.float32),
         n_events=jnp.asarray(0, jnp.int32),
+        n_steps=jnp.asarray(0, jnp.int32),
+        n_trace=jnp.asarray(0, jnp.int32),
+        overflow=jnp.asarray(0, jnp.int32),
         trace_t=jnp.full((TRACE_LEN,), INF, jnp.float32),
         trace_kind=jnp.full((TRACE_LEN,), -1, jnp.int32),
         trace_who=jnp.full((TRACE_LEN,), -1, jnp.int32),
     )
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("n_users", "max_events", "max_pe"))
-def _run_jit(gridlets, fleet, params, n_users, max_events, max_pe):
-    state = init_state(gridlets, fleet, n_users)
-    state = jax.lax.while_loop(
-        lambda s: _continue(s, fleet, params, n_users, max_events),
-        lambda s: step(s, fleet, params, n_users, max_pe),
-        state)
+def _finalize(state: SimState) -> SimResult:
     # Users that never started (e.g. zero budget) terminate at final t.
-    term = jnp.where(jnp.isfinite(state.term_time), state.term_time, state.t)
+    term = jnp.where(jnp.isfinite(state.term_time), state.term_time,
+                     state.t)
     return SimResult(gridlets=state.g, spent=state.spent, term_time=term,
                      n_events=state.n_events,
-                     trace=(state.trace_t, state.trace_kind, state.trace_who))
+                     trace=(state.trace_t, state.trace_kind,
+                            state.trace_who),
+                     n_steps=state.n_steps, overflow=state.overflow)
+
+
+@functools.partial(jax.jit, static_argnames=("n_users", "max_events",
+                                             "max_jobs"))
+def _run_jit(gridlets, fleet, params, n_users, max_events, max_jobs):
+    state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs)
+    state = jax.lax.while_loop(
+        lambda s: _continue(s, fleet, params, n_users, max_events),
+        lambda s: step(s, fleet, params, n_users),
+        state)
+    return _finalize(state)
 
 
 def run(gridlets, fleet, params: SimParams, n_users: int,
-        max_events: int) -> SimResult:
+        max_events: int, max_jobs: int | None = None) -> SimResult:
     """Run a full experiment: broker-driven scheduling + execution."""
     return _run_jit(gridlets, fleet, params, n_users, max_events,
-                    fleet.max_pe)
+                    max_jobs)
 
 
 def run_inner(gridlets, fleet, params: SimParams, n_users: int,
-              max_events: int, max_pe: int) -> SimResult:
-    """Trace-safe variant for use under vmap/jit: max_pe passed statically."""
-    state = init_state(gridlets, fleet, n_users)
+              max_events: int,
+              max_jobs: int | None = None) -> SimResult:
+    """Unjitted variant for use under an outer vmap/jit (sweep)."""
+    state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs)
     state = jax.lax.while_loop(
         lambda s: _continue(s, fleet, params, n_users, max_events),
-        lambda s: step(s, fleet, params, n_users, max_pe),
+        lambda s: step(s, fleet, params, n_users),
         state)
-    term = jnp.where(jnp.isfinite(state.term_time), state.term_time, state.t)
-    return SimResult(gridlets=state.g, spent=state.spent, term_time=term,
-                     n_events=state.n_events,
-                     trace=(state.trace_t, state.trace_kind, state.trace_who))
+    return _finalize(state)
 
 
 def run_direct(gridlets, fleet, resource_idx, dispatch_time,
@@ -407,4 +595,4 @@ def run_direct(gridlets, fleet, resource_idx, dispatch_time,
                 resource=r, assigned=r, t_event=t0 + delay)
     params = default_params(jnp.asarray(-1.0), jnp.asarray(0.0),
                             jnp.asarray(0), 1, fleet.r)  # brokers inert
-    return _run_jit(g, fleet, params, 1, max_events, fleet.max_pe)
+    return _run_jit(g, fleet, params, 1, max_events, None)

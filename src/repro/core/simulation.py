@@ -25,6 +25,9 @@ class ExperimentResult(NamedTuple):
     budget_utilization: jax.Array  # f32[U] spent / budget
     per_resource_done: jax.Array  # f32[U,R] completions by resource
     gridlets: object
+    n_events: jax.Array      # i32 events applied by the engine
+    n_steps: jax.Array       # i32 engine supersteps (loop iterations)
+    overflow: jax.Array      # i32 job-slot allocation failures (== 0)
 
 
 def _max_events(n_gridlets: int, n_users: int, horizon: float,
@@ -50,7 +53,19 @@ def summarize(res: engine.SimResult, params, n_users: int,
         budget_utilization=res.spent / jnp.maximum(params.budget, 1e-30),
         per_resource_done=per_res,
         gridlets=g,
+        n_events=res.n_events,
+        n_steps=res.n_steps,
+        overflow=res.overflow,
     )
+
+
+def safe_max_jobs(gridlets_batch, params, fleet) -> int:
+    """Static bound on concurrently RUNNING gridlets per resource: the
+    broker stages at most max_gridlet_per_pe * num_pe in-flight jobs per
+    (user, resource), so the engine's job-slot table never needs more
+    than U * that many columns (capped at N)."""
+    limit = int(params.max_gridlet_per_pe) * fleet.max_pe
+    return min(gridlets_batch.n, params.deadline.shape[0] * limit)
 
 
 def run_experiment(gridlets_batch, fleet, deadline, budget,
@@ -60,7 +75,8 @@ def run_experiment(gridlets_batch, fleet, deadline, budget,
     if max_events is None:
         horizon = float(jnp.max(params.deadline)) * 2.0 + 100.0
         max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
-    res = engine.run(gridlets_batch, fleet, params, n_users, max_events)
+    res = engine.run(gridlets_batch, fleet, params, n_users, max_events,
+                     max_jobs=safe_max_jobs(gridlets_batch, params, fleet))
     return summarize(res, params, n_users, fleet.r)
 
 
@@ -86,12 +102,13 @@ def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
     if max_events is None:
         horizon = float(deadlines.max()) * 2.0 + 100.0
         max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
-    max_pe = fleet.max_pe  # static, resolved outside the trace
+    params0 = engine.default_params(1.0, 1.0, opt, n_users, fleet.r)
+    max_jobs = safe_max_jobs(gridlets_batch, params0, fleet)  # static
 
     def one(d, b):
         params = engine.default_params(d, b, opt, n_users, fleet.r)
         res = engine.run_inner(gridlets_batch, fleet, params, n_users,
-                               max_events, max_pe)
+                               max_events, max_jobs)
         return summarize(res, params, n_users, fleet.r)
 
     f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))

@@ -1,20 +1,35 @@
 """Pallas TPU kernel for the GridSim inner loop: Fig 8 PE-share
 allocation + earliest-completion forecast, batched over resources.
 
-This is the simulator's hot spot at fleet scale (the engine evaluates it
-on every event over [resources x job-slots] state).  Per resource row:
+This is the simulator's hot spot at fleet scale: the superstep engine
+(repro.core.engine) evaluates it once per while-loop iteration over the
+resource-major ``[R, J]`` job-slot table.  Per resource row:
 
-  rank_j  = |{j' : remaining_j' < remaining_j}|     (within the row)
+  rank_j  = |{j' : (rem_j', tie_j') < (rem_j, tie_j)}|  (within the row)
   k       = g // P,  extra = g % P,  msc = (P - extra) * k
-  rate_j  = eff_mips / (k + [rank_j >= msc])        (Fig 8 shares)
-  t_min   = min_j remaining_j / rate_j              (forecast event)
+  rate_j  = eff_mips / (k + [rank_j >= msc])        (Fig 8 shares; a
+            space-shared row instead grants every job a whole PE)
+  t_j     = remaining_j / rate_j
+  t_min   = min_j t_j                               (forecast event)
+  argmin  = col of the earliest completion, ties broken by tie key
+  occ     = number of occupied job slots (space-shared PE occupancy)
+
+The per-row argmin and occupancy outputs exist so the engine needs no
+second pass over the state to locate the completing job or to count busy
+PEs for queue admission.
+
+The ``tie`` input carries the engine's FIFO tie-break priority (the flat
+gridlet index): equal-remaining jobs must receive MaxShare in submission
+order for the Fig 9 / Table 1 trace to be reproduced exactly.
 
 Tiling: grid over resource blocks; each block holds [block_r, J] state in
 VMEM (J <= 256 -> <=256 KB fp32).  Ranking uses an explicit [J, J]
-comparison per row -- O(J^2) VPU work that replaces the engine's XLA
-lexsort; J is the per-resource job-slot bound, so the quadratic term is
-tiny and fully data-parallel.  Oracle: repro.kernels.ref.event_scan_ref
-(and transitively repro.core.engine._rates, which it must agree with).
+comparison per row -- O(J^2) VPU work that is fully data-parallel; J is
+the per-resource job-slot bound, so keep it small on TPU.  On CPU hosts
+the engine routes through :func:`event_scan_xla`, an equivalent
+vectorised jnp implementation whose per-row sort is O(J log J) (the
+"reference fallback" -- the Pallas path in interpret mode is reserved
+for kernel tests).  Oracle: repro.kernels.ref.event_scan_ref.
 """
 from __future__ import annotations
 
@@ -27,22 +42,25 @@ from jax.experimental import pallas as pl
 BIG = 3.0e38
 
 
-def _kernel(remaining_ref, mips_ref, pe_ref, rate_ref, tmin_ref):
+def _kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
+            rate_ref, tmin_ref, amin_ref, occ_ref):
     rem = remaining_ref[...]                       # [R, J] f32
+    tie = tie_ref[...]                             # [R, J] f32
     mips = mips_ref[...]                           # [R, 1]
     npe = pe_ref[...]                              # [R, 1] f32
+    pol = policy_ref[...]                          # [R, 1] f32 (1 = space)
     r, j = rem.shape
 
     valid = (rem > 0.0) & (rem < BIG)
     g = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)  # [R,1]
 
-    # rank within row by (remaining, index): pairwise comparison matrix
+    # rank within row by (remaining, tie): pairwise comparison matrix
     key = jnp.where(valid, rem, BIG)
-    lt = key[:, :, None] > key[:, None, :]         # j > j' strictly
-    idx = jax.lax.broadcasted_iota(jnp.int32, (j, j), 0)
-    jdx = jax.lax.broadcasted_iota(jnp.int32, (j, j), 1)
-    tie = (key[:, :, None] == key[:, None, :]) & (idx > jdx)[None]
-    rank = jnp.sum((lt | tie) & valid[:, None, :],
+    tkey = jnp.where(valid, tie, BIG)
+    lt = key[:, :, None] > key[:, None, :]         # j strictly after j'
+    tie_lt = (key[:, :, None] == key[:, None, :]) & \
+        (tkey[:, :, None] > tkey[:, None, :])
+    rank = jnp.sum((lt | tie_lt) & valid[:, None, :],
                    axis=2).astype(jnp.float32)     # [R, J]
 
     k = jnp.floor(g / jnp.maximum(npe, 1.0))       # [R,1] min jobs per PE
@@ -51,39 +69,114 @@ def _kernel(remaining_ref, mips_ref, pe_ref, rate_ref, tmin_ref):
     divisor = k + (rank >= msc).astype(jnp.float32)
     # g <= P: everyone gets a full PE
     divisor = jnp.where(g <= npe, 1.0, divisor)
+    # space-shared rows: every resident job owns a whole PE
+    divisor = jnp.where(pol > 0.5, 1.0, divisor)
     rate = jnp.where(valid, mips / jnp.maximum(divisor, 1.0), 0.0)
     rate_ref[...] = rate
 
     t = jnp.where(valid, rem / jnp.maximum(rate, 1e-30), BIG)
-    tmin_ref[...] = jnp.min(t, axis=1, keepdims=True)
+    tmin = jnp.min(t, axis=1, keepdims=True)
+    tmin_ref[...] = tmin
+
+    # per-row argmin col, FIFO ties broken by the tie key
+    at_min = (t <= tmin) & valid
+    cand = jnp.where(at_min, tkey, BIG)
+    tie_min = jnp.min(cand, axis=1, keepdims=True)
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, j), 1)
+    amin_ref[...] = jnp.min(
+        jnp.where(at_min & (cand <= tie_min), col, j),
+        axis=1, keepdims=True)
+    occ_ref[...] = g.astype(jnp.int32)
 
 
-def event_scan(remaining, mips_eff, num_pe, *, block_r: int = 8,
-               interpret: bool = False):
-    """remaining: [R, J] (<=0 or >=BIG marks empty slots);
-    mips_eff, num_pe: [R].  Returns (rate [R, J], t_min [R])."""
+def _default_inputs(remaining, tie, policy):
     r, j = remaining.shape
+    if tie is None:
+        tie = jnp.broadcast_to(
+            jnp.arange(j, dtype=jnp.float32)[None, :], (r, j))
+    if policy is None:
+        policy = jnp.zeros((r,), jnp.float32)
+    return (remaining.astype(jnp.float32), jnp.asarray(tie, jnp.float32),
+            jnp.asarray(policy, jnp.float32).reshape(r))
+
+
+def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None, *,
+               block_r: int = 8, interpret: bool = False):
+    """remaining: [R, J] (<=0 or >=BIG marks empty slots); tie: [R, J]
+    FIFO tie-break priority (defaults to the col index); mips_eff,
+    num_pe, policy: [R] (policy 0 = time-shared, 1 = space-shared).
+    Returns (rate [R, J], t_min [R], argmin_col [R] i32, occupancy [R]
+    i32); argmin_col is J for empty rows.
+    """
+    r, j = remaining.shape
+    remaining, tie, policy = _default_inputs(remaining, tie, policy)
     block_r = min(block_r, r)
     assert r % block_r == 0, "pad the resource axis upstream"
 
-    rate, tmin = pl.pallas_call(
+    rate, tmin, amin, occ = pl.pallas_call(
         _kernel,
         grid=(r // block_r,),
         in_specs=[
             pl.BlockSpec((block_r, j), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_r, j), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((r, j), jnp.float32),
             jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(remaining.astype(jnp.float32),
+    )(remaining, tie,
       mips_eff.astype(jnp.float32).reshape(r, 1),
-      num_pe.astype(jnp.float32).reshape(r, 1))
-    return rate, tmin[:, 0]
+      num_pe.astype(jnp.float32).reshape(r, 1),
+      policy.reshape(r, 1))
+    return rate, tmin[:, 0], amin[:, 0], occ[:, 0]
+
+
+def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None):
+    """Vectorised jnp fallback with identical semantics to the kernel.
+
+    The per-row O(J log J) lexsort replaces the kernel's O(J^2) pairwise
+    rank, which makes it the right path for CPU hosts where Pallas would
+    run interpreted.  Bitwise-identical share arithmetic to ``_kernel``.
+    """
+    r, j = remaining.shape
+    remaining, tie, policy = _default_inputs(remaining, tie, policy)
+    mips = mips_eff.astype(jnp.float32)[:, None]
+    npe = num_pe.astype(jnp.float32)[:, None]
+    pol = policy[:, None]
+
+    valid = (remaining > 0.0) & (remaining < BIG)
+    g = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
+
+    key = jnp.where(valid, remaining, BIG)
+    tkey = jnp.where(valid, tie, BIG)
+    order = jnp.lexsort((tkey, key), axis=-1)       # cols by (rem, tie)
+    rank = jnp.argsort(order, axis=-1).astype(jnp.float32)  # inverse perm
+
+    k = jnp.floor(g / jnp.maximum(npe, 1.0))
+    extra = g - k * jnp.maximum(npe, 1.0)
+    msc = (npe - extra) * k
+    divisor = k + (rank >= msc).astype(jnp.float32)
+    divisor = jnp.where(g <= npe, 1.0, divisor)
+    divisor = jnp.where(pol > 0.5, 1.0, divisor)
+    rate = jnp.where(valid, mips / jnp.maximum(divisor, 1.0), 0.0)
+
+    t = jnp.where(valid, remaining / jnp.maximum(rate, 1e-30), BIG)
+    tmin = jnp.min(t, axis=1, keepdims=True)
+    at_min = (t <= tmin) & valid
+    cand = jnp.where(at_min, tkey, BIG)
+    tie_min = jnp.min(cand, axis=1, keepdims=True)
+    col = jnp.broadcast_to(jnp.arange(j, dtype=jnp.int32)[None, :], (r, j))
+    amin = jnp.min(jnp.where(at_min & (cand <= tie_min), col, j), axis=1)
+    return rate, tmin[:, 0], amin, jnp.sum(valid, axis=1, dtype=jnp.int32)

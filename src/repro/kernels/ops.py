@@ -45,8 +45,19 @@ def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk=256, block_h=8,
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
-def event_scan(remaining, mips_eff, num_pe, *, block_r=8, interpret=None):
-    """GridSim Fig 8 share allocation + completion forecast."""
-    return _event.event_scan(remaining, mips_eff, num_pe,
-                             block_r=block_r,
+def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None, *,
+               block_r=8, interpret=None):
+    """GridSim Fig 8 share allocation + completion forecast.
+
+    Returns (rate [R, J], t_min [R], argmin_col [R], occupancy [R]).
+    Routing: compiled Pallas on TPU (interpret=None/False); the
+    vectorised XLA fallback on non-TPU hosts (interpret=None), so the
+    engine hot path stays fast on CPU; Pallas interpret mode only when
+    explicitly requested (interpret=True, used by the kernel tests).
+    """
+    if interpret is None and jax.default_backend() != "tpu":
+        return _event.event_scan_xla(remaining, mips_eff, num_pe,
+                                     tie=tie, policy=policy)
+    return _event.event_scan(remaining, mips_eff, num_pe, tie=tie,
+                             policy=policy, block_r=block_r,
                              interpret=_auto_interpret(interpret))

@@ -58,36 +58,58 @@ def ssd_ref(x, dt, a, b_mat, c_mat):
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
 
 
-def event_scan_ref(remaining, mips_eff, num_pe):
+def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None):
     """Paper Fig 8, directly transcribed per resource row.
 
-    remaining: [R, J] (<=0 / huge marks empty); mips_eff, num_pe: [R].
-    Returns (rate [R, J], t_min [R]).
+    remaining: [R, J] (<=0 / huge marks empty); mips_eff, num_pe,
+    policy: [R] (policy 1 = space-shared: every job owns a whole PE);
+    tie: [R, J] FIFO tie-break priority (default: col index).
+    Returns (rate [R, J], t_min [R], argmin_col [R], occupancy [R]);
+    argmin_col is J for empty rows.
     """
     import numpy as np
     remaining = np.asarray(remaining, np.float64)
     mips_eff = np.asarray(mips_eff, np.float64)
     num_pe = np.asarray(num_pe, np.int64)
     r_n, j_n = remaining.shape
+    if tie is None:
+        tie = np.broadcast_to(np.arange(j_n, dtype=np.float64),
+                              (r_n, j_n))
+    else:
+        tie = np.asarray(tie, np.float64)
+    if policy is None:
+        policy = np.zeros((r_n,), np.int64)
+    else:
+        policy = np.asarray(policy, np.int64)
     rate = np.zeros((r_n, j_n))
     tmin = np.full((r_n,), 3.0e38)
+    amin = np.full((r_n,), j_n, np.int32)
+    occ = np.zeros((r_n,), np.int32)
     for r in range(r_n):
-        jobs = [(remaining[r, j], j) for j in range(j_n)
+        jobs = [(remaining[r, j], tie[r, j], j) for j in range(j_n)
                 if 0 < remaining[r, j] < 3.0e38]
         g, pe = len(jobs), int(num_pe[r])
+        occ[r] = g
         if g == 0:
             continue
         jobs.sort()
-        if g <= pe:
-            shares = {j: 1.0 for _, j in jobs}
+        if g <= pe or policy[r] == 1:
+            shares = {j: 1.0 for _, _, j in jobs}
         else:
             k, extra = g // pe, g % pe
             msc = (pe - extra) * k
             shares = {}
-            for rank, (_, j) in enumerate(jobs):
+            for rank, (_, _, j) in enumerate(jobs):
                 shares[j] = 1.0 / (k if rank < msc else k + 1)
+        best = None
         for j, sh in shares.items():
             rate[r, j] = mips_eff[r] * sh
-            tmin[r] = min(tmin[r], remaining[r, j] / rate[r, j])
+            t = remaining[r, j] / rate[r, j]
+            tmin[r] = min(tmin[r], t)
+            if best is None or (t, tie[r, j]) < best[:2]:
+                best = (t, tie[r, j], j)
+        amin[r] = best[2]
     return (jnp.asarray(rate, jnp.float32),
-            jnp.asarray(tmin, jnp.float32))
+            jnp.asarray(tmin, jnp.float32),
+            jnp.asarray(amin, jnp.int32),
+            jnp.asarray(occ, jnp.int32))

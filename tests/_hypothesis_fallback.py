@@ -1,0 +1,91 @@
+"""Minimal, dependency-free stand-in for the slice of ``hypothesis``
+this repo's property tests use.
+
+The CI image installs real hypothesis (requirements-dev.txt); containers
+without it fall back to this module so the property tests still RUN
+(seeded pseudo-random example generation) instead of erroring at
+collection.  Import through the guard used in each test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+Supported: ``@settings(max_examples=N, deadline=None)``, ``@given`` with
+keyword strategies, and ``st.integers / floats / lists / sampled_from / booleans``.
+Examples are drawn from a per-test RNG seeded by the test name, so runs
+are deterministic; shrinking and the hypothesis database are (by design)
+not reproduced.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+class strategies:  # namespace mirroring ``hypothesis.strategies``
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, *, min_size=0, max_size=10):
+        def sample(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(n)]
+        return _Strategy(sample)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Attach the example budget to the (already ``given``-wrapped) fn."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NOTE: deliberately no functools.wraps -- the wrapper must not
+        # inherit fn's signature, or pytest would treat the strategy
+        # parameters as fixtures.
+        def wrapper(*args, **fixtures):
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **fixtures, **drawn)
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {drawn!r}"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

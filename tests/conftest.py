@@ -1,0 +1,6 @@
+"""Shared test config: make the tests directory importable so the
+``_hypothesis_fallback`` shim resolves regardless of pytest rootdir."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

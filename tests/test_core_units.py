@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without dev deps: seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (calendar, des, economy, gis, gridlet, rand,
                         reservation, resource, segments, stats, types)
@@ -22,8 +25,24 @@ def test_event_queue_orders_by_time_then_fifo():
         assert bool(valid)
         order.append((float(t), int(tag)))
     assert order == [(2.0, 11), (5.0, 10), (5.0, 12)]
+    assert int(q.overflow) == 0
     q, (*_, valid) = des.pop_next(q)
     assert not bool(valid)
+
+
+def test_event_queue_full_drops_and_counts():
+    """A full calendar must not overwrite a live event (it previously
+    clobbered slot 0); the dropped schedule is counted in overflow."""
+    q = des.make_queue(2)
+    q = des.schedule(q, 1.0, 0, 0, 10)
+    q = des.schedule(q, 2.0, 0, 0, 11)
+    q = des.schedule(q, 0.5, 0, 0, 12)   # full: dropped, not slot 0
+    assert int(q.overflow) == 1
+    q, (t, *_, tag, _d, valid) = des.pop_next(q)
+    assert bool(valid) and float(t) == 1.0
+    # freeing a slot makes schedule work again, overflow is sticky
+    q = des.schedule(q, 3.0, 0, 0, 13)
+    assert int(des.size(q)) == 2 and int(q.overflow) == 1
 
 
 def test_event_queue_cancel():
@@ -46,6 +65,7 @@ def test_event_queue_pop_sorted(times):
         q, (t, *_, valid) = des.pop_next(q)
         popped.append(float(t))
     assert popped == sorted(np.float32(times).tolist())
+    assert int(q.overflow) == 0
 
 
 # ------------------------------------------------------ economy --------

@@ -1,0 +1,188 @@
+"""Superstep engine contract: golden Table 1 trace, pre-refactor
+result equivalence, engine <-> kernel <-> oracle rate agreement, and
+the job-slot / calendar overflow invariants."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without dev deps: seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import engine, gridlet, resource, simulation, types
+from repro.core.types import replace as treplace
+from repro.kernels import ops, ref
+from repro.kernels.event_scan import event_scan_xla
+
+GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__), "data",
+                                     "golden_pre_refactor.json")))
+ARRIVALS = jnp.array([0.0, 4.0, 7.0])
+
+
+# ----------------------------------------------------------------------
+# Golden event trace (paper Table 1 / Figs 9 and 12): the superstep
+# engine must reproduce the exact times, kinds and FIFO order.
+# ----------------------------------------------------------------------
+def _trace(policy):
+    g = gridlet.make_batch([10.0, 8.5, 9.5])
+    fleet = resource.table1_resource(policy)
+    res = engine.run_direct(g, fleet, 0, ARRIVALS, max_events=64)
+    tt, kind, who = (np.asarray(x) for x in res.trace)
+    m = kind >= 0
+    return res, list(zip(tt[m].tolist(), kind[m].tolist(),
+                         who[m].tolist()))
+
+
+def test_time_shared_golden_trace():
+    # kinds: 0=completion, 1=return, 2=arrival, 3=broker
+    res, trace = _trace(types.TIME_SHARED)
+    assert trace == [
+        (0.0, 2, 0), (4.0, 2, 1), (7.0, 2, 2),        # arrivals
+        (10.0, 0, 0), (10.0, 1, 0),                   # G1 done+returned
+        (14.0, 0, 1), (14.0, 1, 1),                   # G2
+        (18.0, 0, 2), (18.0, 1, 2),                   # G3
+    ]
+    # zero-delay returns fold into their completion superstep: 9 events
+    # in 6 supersteps.
+    assert int(res.n_events) == 9 and int(res.n_steps) == 6
+    assert int(res.overflow) == 0
+
+
+def test_space_shared_golden_trace():
+    res, trace = _trace(types.SPACE_SHARED)
+    assert trace == [
+        (0.0, 2, 0), (4.0, 2, 1), (7.0, 2, 2),
+        (10.0, 0, 0), (10.0, 1, 0),                   # G1 frees the PE
+        (12.5, 0, 1), (12.5, 1, 1),
+        (19.5, 0, 2), (19.5, 1, 2),                   # queued G3 last
+    ]
+    assert int(res.n_steps) == 6 and int(res.overflow) == 0
+
+
+def test_simultaneous_events_apply_in_one_superstep():
+    """4 equal jobs on 4 PEs: one arrival superstep admits all four, one
+    completion superstep completes AND returns all four (12 events)."""
+    g = gridlet.make_batch([10.0] * 4)
+    fleet = resource.make_fleet([4], 1.0, 1.0, types.TIME_SHARED)
+    res = engine.run_direct(g, fleet, 0, jnp.zeros(4), max_events=64)
+    assert int(res.n_steps) == 2
+    assert int(res.n_events) == 12
+    np.testing.assert_allclose(np.asarray(res.gridlets.finish), 10.0)
+
+
+# ----------------------------------------------------------------------
+# Pre-refactor equivalence: same ExperimentResult, fewer iterations.
+# ----------------------------------------------------------------------
+def test_matches_pre_refactor_engine_results():
+    ref_run = GOLDEN["1u_200j"]
+    fleet = resource.wwg_fleet()
+    g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=200, n_users=1)
+    r = simulation.run_experiment(g, fleet, deadline=2000.0,
+                                  budget=22000.0, opt=types.OPT_COST,
+                                  n_users=1)
+    np.testing.assert_allclose(np.asarray(r.n_done), ref_run["n_done"])
+    np.testing.assert_allclose(np.asarray(r.spent), ref_run["spent"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r.term_time),
+                               ref_run["term_time"], rtol=1e-5)
+    # batching must strictly reduce loop iterations (the 2x target on
+    # the 20-user scenario is asserted by benchmarks/engine_bench.py)
+    assert int(r.n_steps) < ref_run["iterations"]
+    assert int(r.overflow) == 0
+
+
+# ----------------------------------------------------------------------
+# Engine <-> kernel <-> oracle agreement on random [R, J] states.
+# ----------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), r=st.sampled_from([8, 16]),
+       j=st.sampled_from([8, 24]))
+def test_event_scan_paths_agree(seed, r, j):
+    """Pallas interpret, the XLA fallback (the engine's CPU hot path)
+    and the numpy oracle agree on random states with tie keys and mixed
+    policies."""
+    rng = np.random.RandomState(seed)
+    remaining = rng.exponential(50.0, (r, j)).astype(np.float32)
+    remaining[rng.rand(r, j) < 0.4] = 0.0
+    mips = rng.uniform(1.0, 500.0, (r,)).astype(np.float32)
+    pes = rng.randint(1, 9, (r,)).astype(np.int32)
+    tie = rng.permutation(r * j).reshape(r, j).astype(np.float32)
+    pol = rng.randint(0, 2, (r,)).astype(np.int32)
+    args = (jnp.asarray(remaining), jnp.asarray(mips), jnp.asarray(pes))
+    kw = dict(tie=jnp.asarray(tie), policy=jnp.asarray(pol))
+    pallas_out = ops.event_scan(*args, **kw, interpret=True)
+    xla_out = event_scan_xla(*args, **kw)
+    ref_out = ref.event_scan_ref(remaining, mips, pes, tie=tie,
+                                 policy=pol)
+    for got in (xla_out, ref_out):
+        np.testing.assert_allclose(np.asarray(pallas_out[0]),
+                                   np.asarray(got[0]), rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(pallas_out[1]),
+                                   np.asarray(got[1]), rtol=1e-4)
+        assert np.array_equal(np.asarray(pallas_out[3]),
+                              np.asarray(got[3]))
+    assert np.array_equal(np.asarray(pallas_out[2]),
+                          np.asarray(xla_out[2]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), n_jobs=st.integers(1, 24),
+       num_pe=st.integers(1, 6))
+def test_kernel_agrees_with_engine_rates(seed, n_jobs, num_pe):
+    """The kernel evaluated on the resource-major table must reproduce
+    engine._rates (the flat XLA reference the superstep loop replaced),
+    including FIFO tie-breaks on equal remaining work."""
+    rng = np.random.RandomState(seed)
+    rem = rng.randint(1, 6, (n_jobs,)).astype(np.float32)  # forces ties
+    g = gridlet.make_batch(jnp.full((n_jobs,), 100.0))
+    g = treplace(g, status=jnp.full((n_jobs,), types.RUNNING, jnp.int32),
+                 resource=jnp.zeros((n_jobs,), jnp.int32),
+                 remaining=jnp.asarray(rem))
+    fleet = resource.make_fleet([num_pe], 3.0, 1.0, types.TIME_SHARED)
+    st_ = engine.init_state(g, fleet, 1)
+    st_ = treplace(st_, g=g)
+    flat = np.asarray(engine._rates(st_, fleet, 1))
+
+    table = jnp.pad(jnp.asarray(rem).reshape(1, n_jobs),
+                    ((0, 7), (0, 0)))
+    tie = jnp.pad(
+        jnp.arange(n_jobs, dtype=jnp.float32).reshape(1, n_jobs),
+        ((0, 7), (0, 0)))
+    rate, tmin, amin, occ = ops.event_scan(
+        table, jnp.full((8,), 3.0), jnp.full((8,), num_pe, jnp.int32),
+        tie=tie, policy=jnp.zeros((8,), jnp.int32), interpret=True)
+    np.testing.assert_allclose(np.asarray(rate)[0], flat, rtol=1e-5)
+    assert int(occ[0]) == n_jobs
+    t = rem / np.maximum(flat, 1e-30)
+    assert float(tmin[0]) == pytest.approx(float(t.min()))
+    # argmin: earliest completion, FIFO among ties
+    want = min(range(n_jobs), key=lambda i: (np.float32(t[i]), i))
+    assert int(amin[0]) == want
+
+
+# ----------------------------------------------------------------------
+# Slot-table invariants.
+# ----------------------------------------------------------------------
+def test_no_slot_overflow_across_policies():
+    for policy in (types.TIME_SHARED, types.SPACE_SHARED):
+        g = gridlet.make_batch(jnp.arange(1.0, 13.0))
+        fleet = resource.make_fleet([2], 1.0, 1.0, policy)
+        res = engine.run_direct(g, fleet, 0, jnp.zeros(12),
+                                max_events=256)
+        assert int(res.overflow) == 0
+        assert np.all(np.asarray(res.gridlets.status) == types.DONE)
+
+
+def test_broker_experiment_overflow_zero():
+    fleet = resource.wwg_fleet()
+    g = gridlet.task_farm(jax.random.PRNGKey(11), n_jobs=40, n_users=2)
+    r = simulation.run_experiment(g, fleet, deadline=800.0, budget=9000.0,
+                                  opt=types.OPT_COST, n_users=2)
+    assert int(r.overflow) == 0
+    assert float(np.asarray(r.n_done).sum()) > 0
