@@ -29,14 +29,23 @@ from .common import art_path
 GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            os.pardir, "tests", "data",
                            "golden_pre_refactor.json")
-SCENARIOS = ((1, 200), (20, 100), (200, 10))
+# (n_users, n_jobs_per_user, scenario): the trailing cell re-runs the
+# 20-user workload with the failure/recovery event source live
+# (MTBF=500, MTTR=25) so the perf trajectory tracks the dynamic-
+# resource path, not just the static fleet.
+SCENARIOS = (
+    (1, 200, None),
+    (20, 100, None),
+    (200, 10, None),
+    (20, 100, simulation.Scenario(mtbf=500.0, mttr=25.0, seed=1)),
+)
 
 
-def _one(fleet, n_users, n_jobs):
+def _one(fleet, n_users, n_jobs, scenario):
     g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
                           n_users=n_users)
     kw = dict(deadline=2000.0, budget=22000.0, opt=types.OPT_COST,
-              n_users=n_users)
+              n_users=n_users, scenario=scenario)
     r = simulation.run_experiment(g, fleet, **kw)      # warmup/compile
     jax.block_until_ready(r.spent)
     t0 = time.perf_counter()
@@ -53,8 +62,8 @@ def run():
     except OSError:
         golden = {}
     report, out = {}, []
-    for n_users, n_jobs in SCENARIOS:
-        r, wall = _one(fleet, n_users, n_jobs)
+    for n_users, n_jobs, scenario in SCENARIOS:
+        r, wall = _one(fleet, n_users, n_jobs, scenario)
         events = int(np.asarray(r.n_events))
         steps = int(np.asarray(r.n_steps))
         cell = {
@@ -69,7 +78,17 @@ def run():
             "spent": float(np.asarray(r.spent).sum()),
             "overflow": int(np.asarray(r.overflow)),
         }
-        base = golden.get(f"{n_users}u_{n_jobs}j")
+        name = f"engine_{n_users}u_{n_jobs}j"
+        if scenario is not None:
+            name += "_fail"
+            cell["scenario"] = {"mtbf": float(np.asarray(scenario.mtbf)),
+                                "mttr": float(np.asarray(scenario.mttr)),
+                                "seed": scenario.seed}
+            cell["n_failed"] = int(np.asarray(r.n_failed))
+            cell["n_resubmits"] = int(np.asarray(r.n_resubmits))
+            cell["downtime_total"] = float(np.asarray(r.downtime).sum())
+        base = None if scenario is not None else \
+            golden.get(f"{n_users}u_{n_jobs}j")
         if base is not None:
             cell["pre_superstep_iterations"] = base["iterations"]
             cell["iteration_ratio"] = base["iterations"] / max(steps, 1)
@@ -79,13 +98,16 @@ def run():
                             rtol=1e-5) and
                 np.allclose(np.asarray(r.term_time), base["term_time"],
                             rtol=1e-5))
-        report[f"engine_{n_users}u_{n_jobs}j"] = cell
+        report[name] = cell
         derived = (f"events/s~{cell['events_per_sec']:.0f} "
                    f"steps={steps} done={cell['n_done']:.0f}")
         if "iteration_ratio" in cell:
             derived += (f" iters_vs_pre={cell['iteration_ratio']:.2f}x "
                         f"identical={cell['result_identical']}")
-        out.append((f"engine_{n_users}u_{n_jobs}j", wall * 1e6, derived))
+        if "n_resubmits" in cell:
+            derived += (f" failed={cell['n_failed']} "
+                        f"resub={cell['n_resubmits']}")
+        out.append((name, wall * 1e6, derived))
 
     with open(art_path("BENCH_engine.json"), "w") as f:
         json.dump(report, f, indent=1)

@@ -1,77 +1,75 @@
-"""Fault-tolerance demo: train, lose devices, shrink the mesh, resume.
+"""Failure/recovery demo: resources fail mid-run, the broker resubmits.
 
-Runs in a single process with 8 virtual devices (set before importing
-jax).  A reduced LM trains on a (4 data x 2 model) mesh with async
-checkpointing; "hosts fail", the elastic policy rebuilds the largest
-mesh that still holds a full model replica (2 x 2), the last checkpoint
-reshards onto it, and training continues -- the checkpoint/restart +
-elastic path the GridSim layer assumes when it reschedules jobs after a
-GIS deregistration.
+Drives the engine's pluggable FAILURE/RECOVERY event sources end-to-end
+(the paper's "resources are dynamic" scenario): a 3-resource grid runs a
+40-job task farm while every resource fails with MTBF = 150 time units
+and repairs with MTTR = 15.  When a resource goes down its in-flight
+Gridlets move to the FAILED state and their committed cost is refunded;
+the economic broker re-plans and re-dispatches them (billing only the
+new dispatch), so the farm still completes -- just later and, when the
+cheap resource was down at the wrong moment, at a different cost.
 
-  PYTHONPATH=src python examples/failure_recovery.py
+Prints per-resource downtime and the resubmission count, then checks the
+no-double-billing invariant: total spend == the committed cost of the
+Gridlets that completed.
+
+  PYTHONPATH=src python examples/failure_recovery.py [seed]
 """
-import os
+import sys
 
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-import jax  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro import configs  # noqa: E402
-from repro.dist import fault  # noqa: E402
-from repro.models import make  # noqa: E402
-from repro.train import checkpoint as ckpt  # noqa: E402
-from repro.train import data as data_mod  # noqa: E402
-from repro.train import loop, optimizer as opt_mod  # noqa: E402
-
-CKPT = "/tmp/repro_failure_demo"
+from repro.core import gridlet, resource, simulation, types
 
 
 def main():
-    cfg = configs.SMOKES["qwen2-7b"].scaled(d_model=128, d_ff=512,
-                                            vocab=2048)
-    api = make(cfg)
-    ocfg = opt_mod.AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=40)
-    step_fn = jax.jit(loop.make_train_step(api, ocfg))
-    data = data_mod.for_model(cfg, batch=8, seq=64, seed=0)
+    seed = int(sys.argv[1]) if len(sys.argv) > 1 else 0
 
-    monitor = fault.HealthMonitor(n_workers=8, straggler_factor=2.0)
-    saver = ckpt.AsyncCheckpointer(CKPT, keep=2)
+    fleet = resource.make_fleet(
+        num_pe=[4, 2, 2], mips_per_pe=[500.0, 400.0, 380.0],
+        cost_per_sec=[8.0, 4.0, 2.0], policy=types.TIME_SHARED,
+        baud_rate=jnp.inf)
+    farm = gridlet.task_farm(jax.random.PRNGKey(7), n_jobs=40,
+                             base_mi=10_000.0)
 
-    mesh = fault.elastic_mesh(jax.devices(), model_parallel=2)
-    print(f"phase 1: mesh {dict(mesh.shape)} "
-          f"({mesh.devices.size} devices)")
-    state = loop.init_state(api, jax.random.PRNGKey(0), ocfg)
-    state = fault.reshard(state, mesh)
-    losses = []
-    with mesh:
-        for step in range(10):
-            state, m = step_fn(state, next(data))
-            losses.append(float(m["loss"]))
-    saver.submit(10, state)
-    saver.wait()
-    print(f"  steps 1-10: loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
-          f"checkpoint saved at step 10")
+    baseline = simulation.run_experiment(
+        farm, fleet, deadline=600.0, budget=12000.0, opt=types.OPT_COST)
+    faulty = simulation.run_experiment(
+        farm, fleet, deadline=600.0, budget=12000.0, opt=types.OPT_COST,
+        scenario=simulation.Scenario(mtbf=150.0, mttr=15.0, seed=seed))
 
-    # --- 3 devices "fail" -------------------------------------------------
-    survivors = jax.devices()[:5]
-    mesh2 = fault.elastic_mesh(survivors, model_parallel=2)
-    print(f"phase 2: lost 3 devices -> elastic mesh {dict(mesh2.shape)} "
-          f"({mesh2.devices.size} devices)")
-    last = ckpt.latest_step(CKPT)
-    like = loop.init_state(api, jax.random.PRNGKey(0), ocfg)
-    state = ckpt.restore(CKPT, last, like)
-    state = fault.reshard(state, mesh2)
-    with mesh2:
-        for step in range(last, 20):
-            state, m = step_fn(state, next(data))
-            losses.append(float(m["loss"]))
-    print(f"  steps 11-20 on the shrunken mesh: loss {losses[-1]:.3f}")
-    assert int(state["opt"]["step"]) == 20
-    assert losses[-1] < losses[0]
-    saver.close()
-    print("recovered and converging: OK")
+    print("40-gridlet task farm, 3 resources, MTBF=150 MTTR=15 "
+          f"(seed {seed})\n")
+    print("resource  PEs  G$/s   downtime")
+    downtime = np.asarray(faulty.downtime)
+    for r in range(fleet.r):
+        print(f"R{r:<8d} {int(fleet.num_pe[r]):3d} "
+              f"{float(fleet.cost_per_sec[r]):5.1f} {downtime[r]:9.1f}")
+
+    for name, res in (("baseline (no failures)", baseline),
+                      ("with failures", faulty)):
+        print(f"\n{name}:")
+        print(f"  completed {int(res.n_done[0])}/40  "
+              f"spent {float(res.spent[0]):.0f} G$  "
+              f"finished at t={float(res.term_time[0]):.1f}")
+        print(f"  gridlets hit by failures: {int(res.n_failed)}, "
+              f"resubmitted: {int(res.n_resubmits)}")
+
+    # no double billing: spend equals committed cost of completed jobs
+    status = np.asarray(faulty.gridlets.status)
+    cost_done = float(np.asarray(faulty.gridlets.cost)
+                      [status == types.DONE].sum())
+    assert abs(float(faulty.spent[0]) - cost_done) < 1e-3 * max(cost_done,
+                                                                1.0)
+    # every failed gridlet was resubmitted, or (if the broker had
+    # already deactivated) refunded: abandoned FAILED gridlets carry no
+    # committed cost.
+    assert int(faulty.n_failed) > 0
+    assert np.all(np.asarray(faulty.gridlets.cost)
+                  [status == types.FAILED] == 0.0)
+    print("\nevery failed gridlet resubmitted or refunded: OK")
 
 
 if __name__ == "__main__":

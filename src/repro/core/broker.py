@@ -1,28 +1,41 @@
 """Economic grid resource broker (paper section 4.2, Figs 18-20).
 
 Each user owns a broker; a BROKER engine event runs every broker at once
-(vectorised over users).  One event performs the full Fig 20 cycle,
-split into the helper per step so each stage can be tested and profiled
-on its own:
+(vectorised over users).  All per-gridlet arrays are [N] (flat over
+every user's Gridlets), per-user [U], per-resource [R], and the
+measurement/capacity tables [U, R].  One event performs the full Fig 20
+cycle, split into the helper per step so each stage can be tested and
+profiled on its own:
 
-  ``_measure``  -- 1. resource discovery (GIS mask) + trading (cost per
-                   MI, Table 2 metric), 2. measure-and-extrapolate the
-                   per-resource job consumption rate, 3. predict
-                   per-resource job capacity by the deadline,
+  ``_measure``  -- 1. resource discovery (GIS mask, intersected with the
+                   engine's ``res_up`` so failed resources drop out until
+                   they re-register) + trading (cost per MI, Table 2
+                   metric), 2. measure-and-extrapolate the per-resource
+                   job consumption rate, 3. predict per-resource job
+                   capacity by the deadline,
   ``_release``  -- 4. release over-committed jobs back to the
                    unassigned queue,
   ``_assign``   -- 5. assign unassigned jobs to resources in policy
                    order (cost / time / cost-time / none optimisation)
-                   under the budget constraint,
+                   under the budget constraint.  FAILED Gridlets (their
+                   resource went down mid-flight; the engine refunded
+                   their committed cost) re-enter here exactly like
+                   CREATED ones -- this is the resubmission path,
   ``_dispatch`` -- 6. dispatch up to MaxGridletPerPE * num_pe staged
                    jobs per resource, committing their exact processing
-                   cost against the budget.
+                   cost against the budget (a resubmitted Gridlet is
+                   billed again only here, so a failure never double
+                   bills; ``SimState.n_resubmits`` counts these).
 
 The broker reads only the flat GridletBatch arrays plus the engine's
 ``done_on`` counters; it never touches the engine's resource-major
 job-slot table (a Gridlet's slot column is an engine implementation
 detail), which is what lets one broker event run inside a superstep at
-any point after completions and returns have been applied.
+any point after completions and returns have been applied.  BROKER is
+the lowest-priority event kind in the engine's COMPLETION > FAILURE >
+RECOVERY > RESERVATION > RETURN > ARRIVAL > CALENDAR_STEP > BROKER
+tie-break: at an equal timestamp the broker observes every other
+batch's effects.
 
 The measurement in step 2 counts fractional progress of in-flight jobs so
 the estimate ramps smoothly from the advertised rate to the observed share
@@ -41,9 +54,11 @@ import jax
 import jax.numpy as jnp
 
 from .segments import group_rank, group_prefix_sum
-from .types import (CREATED, DONE, IN_TRANSIT, INF, OPT_COST, OPT_COST_TIME,
-                    OPT_NONE, OPT_TIME, QUEUED, RETURNING, RUNNING, replace)
+from .types import (CREATED, DONE, FAILED, IN_TRANSIT, INF, OPT_COST,
+                    OPT_COST_TIME, OPT_NONE, OPT_TIME, QUEUED, RETURNING,
+                    RUNNING, replace)
 from . import calendar, network
+from . import reservation as resv_mod
 
 
 def _policy_keys(opt, cost_per_mi, est_rate, r_index):
@@ -71,9 +86,10 @@ def _policy_keys(opt, cost_per_mi, est_rate, r_index):
 
 def min_affordable_cost(g, fleet, n_users: int):
     """Cheapest possible next purchase per user: the smallest
-    still-undispatched (CREATED) Gridlet priced at the best G$/MI.
-    +inf when nothing is left to dispatch."""
-    undispatched = g.status == CREATED
+    still-undispatched (CREATED, or FAILED awaiting resubmission)
+    Gridlet priced at the best G$/MI.  +inf when nothing is left to
+    dispatch."""
+    undispatched = (g.status == CREATED) | (g.status == FAILED)
     min_mi = jax.ops.segment_min(
         jnp.where(undispatched, g.length_mi, INF), g.user,
         num_segments=n_users)
@@ -88,9 +104,13 @@ def _measure(state, fleet, params, n_users: int):
     R = fleet.r
     u_idx = g.user
 
-    registered = params.registered
+    registered = params.registered & state.res_up
+    reserved = resv_mod.active_pes(params.resv_res, params.resv_pes,
+                                   params.resv_start, params.resv_end,
+                                   t, R)
     eff = calendar.effective_mips(fleet, t)                      # [R]
-    adv_rate = eff * fleet.num_pe.astype(jnp.float32)            # MIPS
+    adv_rate = eff * jnp.maximum(fleet.num_pe - reserved,
+                                 0).astype(jnp.float32)          # MIPS
     cost_per_mi = fleet.cost_per_sec / fleet.mips_per_pe         # [R]
 
     ones = jnp.ones((g.n,), jnp.float32)
@@ -141,7 +161,8 @@ def _release(state, ctx, n_users: int, R: int):
         jnp.where(committed, ur_key, n_users * R),
         num_segments=n_users * R + 1)[:n_users * R].reshape(n_users, R)
 
-    undispatched = (g.status == CREATED) & (g.assigned >= 0)
+    undispatched = ((g.status == CREATED) | (g.status == FAILED)) & \
+        (g.assigned >= 0)
     rel_rank, n_undisp = group_rank(ur_key, undispatched, -idx,
                                     n_users * R)
     n_release = jnp.clip(n_committed - ctx["cap_jobs"], 0,
@@ -165,7 +186,8 @@ def _assign(state, ctx, assigned, n_committed, params, n_users: int,
     registered = ctx["registered"]
 
     exact_cost_now = g.length_mi * cost_per_mi[jnp.clip(assigned, 0, R - 1)]
-    planned = (assigned >= 0) & (g.status == CREATED)
+    planned = (assigned >= 0) & \
+        ((g.status == CREATED) | (g.status == FAILED))
     planned_cost = jax.ops.segment_sum(
         jnp.where(planned, exact_cost_now, 0.0), u_idx,
         num_segments=n_users)
@@ -183,7 +205,9 @@ def _assign(state, ctx, assigned, n_committed, params, n_users: int,
     slots = jnp.maximum(ctx["cap_jobs"] - n_committed, 0)        # [U,R]
     job_cost_est = ctx["avg_mi"][:, None] * cost_per_mi[None, :]  # [U,R]
 
-    unassigned = (g.status == CREATED) & (assigned < 0)
+    # FAILED gridlets (engine-refunded) resubmit like fresh CREATED ones.
+    unassigned = ((g.status == CREATED) | (g.status == FAILED)) & \
+        (assigned < 0)
     n_unassigned = jax.ops.segment_sum(
         unassigned.astype(jnp.int32), u_idx, num_segments=n_users)
     active = ctx["active"]
@@ -230,7 +254,8 @@ def _dispatch(state, fleet, ctx, params, new_assigned, inv_order,
     cost_per_mi = ctx["cost_per_mi"]
 
     ur_key2 = u_idx * R + jnp.clip(new_assigned, 0, R - 1)
-    cand = (g.status == CREATED) & (new_assigned >= 0)
+    cand = ((g.status == CREATED) | (g.status == FAILED)) & \
+        (new_assigned >= 0)
     n_inflight_ur = jax.ops.segment_sum(
         ctx["inflight"].astype(jnp.int32),
         jnp.where(ctx["inflight"], ctx["ur_res_key"], n_users * R),
@@ -261,6 +286,9 @@ def _dispatch(state, fleet, ctx, params, new_assigned, inv_order,
         resource=jnp.where(dispatch, new_assigned, g.resource),
         t_event=jnp.where(dispatch, t + in_delay, g.t_event),
         cost=jnp.where(dispatch, exact_cost, g.cost),
+        # A resubmitted FAILED gridlet restarts from scratch (a no-op
+        # for CREATED ones, whose remaining is still the full length).
+        remaining=jnp.where(dispatch, g.length_mi, g.remaining),
     )
     spent = state.spent + jax.ops.segment_sum(
         jnp.where(dispatch, exact_cost, 0.0), u_idx, num_segments=n_users)
@@ -269,8 +297,11 @@ def _dispatch(state, fleet, ctx, params, new_assigned, inv_order,
         jnp.where(dispatch, ur_key2, n_users * R),
         num_segments=n_users * R + 1)[:n_users * R].reshape(n_users, R)
     first_dispatch = jnp.minimum(state.first_dispatch, fd)
+    n_resubmits = state.n_resubmits + jnp.sum(
+        dispatch & (g.status == FAILED), dtype=jnp.int32)
     return replace(state, g=g2, spent=spent,
-                   first_dispatch=first_dispatch)
+                   first_dispatch=first_dispatch,
+                   n_resubmits=n_resubmits)
 
 
 def broker_event(state, fleet, params, n_users: int):

@@ -8,6 +8,14 @@ factor in [0, 1); effective PE capacity is ``mips * (1 - load)``.
 Simulation time is interpreted in HOURS_PER_UNIT hours for calendar
 purposes (the paper leaves the time unit abstract; experiments in section 5
 use load = 0, which is our default as well).
+
+``load`` is piecewise constant between weekday/weekend boundaries, so the
+engine integrates PE shares exactly as long as no superstep spans a
+boundary.  :func:`next_boundary` gives the first boundary strictly after
+``t`` for every resource whose weekend load is nonzero -- the engine's
+CALENDAR_STEP event source (see core.des) uses it so boundaries are
+first-class events instead of only mattering when another event happens
+to land nearby.
 """
 from __future__ import annotations
 
@@ -38,3 +46,28 @@ def load(fleet, t) -> jax.Array:
 def effective_mips(fleet, t) -> jax.Array:
     """Per-PE MIPS actually available to grid jobs at time ``t``."""
     return fleet.mips_per_pe * (1.0 - load(fleet, t))
+
+
+# Local week positions (hours since Monday 00:00) of the two load steps:
+# Saturday 00:00 (weekend load switches on) and Monday 00:00 (off).
+_WEEK = 7 * 24.0
+_SAT = float(SATURDAY) * 24.0
+
+
+def next_boundary(fleet, t) -> jax.Array:
+    """Earliest load-calendar step strictly after ``t``, per resource.
+
+    Returns f32[R]; +inf for resources whose ``weekend_load`` is zero
+    (their load never steps, so they generate no events -- this is what
+    keeps zero-rate scenarios bit-for-bit identical to runs without the
+    calendar source).  Boundaries are computed in each resource's local
+    time; the strict ``> t`` guard uses the *following* boundary whenever
+    f32 rounding would re-land the engine on the instant it just left.
+    """
+    local = jnp.asarray(t, jnp.float32) * HOURS_PER_UNIT + fleet.time_zone
+    w = jnp.mod(local, _WEEK)                       # [R] hours into week
+    dh = jnp.where(w < _SAT, _SAT - w, _WEEK - w)   # to next step
+    dh2 = jnp.where(w < _SAT, _WEEK - w, _WEEK + _SAT - w)  # the one after
+    t_b = t + dh / HOURS_PER_UNIT
+    t_b = jnp.where(t_b > t, t_b, t + dh2 / HOURS_PER_UNIT)
+    return jnp.where(fleet.weekend_load != 0.0, t_b, jnp.inf)

@@ -1,5 +1,9 @@
-"""Array discrete-event calendar -- the SimJava substitute (paper 3.2.1).
+"""Discrete-event primitives: the array calendar (the SimJava substitute,
+paper 3.2.1) and the :class:`EventSource` protocol the superstep engine
+(engine.py) enumerates its event kinds through.
 
+Array calendar
+--------------
 SimJava runs one Java thread per entity and a central timestamp-ordered
 future-event queue; ``sim_schedule`` / ``sim_hold`` / ``sim_wait`` suspend
 threads.  None of that exists under jit, so the toolkit's second layer is
@@ -18,17 +22,89 @@ paper's stale-internal-event discard rule (section 3.4); its superstep
 loop additionally pops and applies *every* event sharing the earliest
 timestamp in one iteration, where this calendar's ``pop_next`` stays
 strictly one-event-at-a-time (the paper's Fig 2 semantics).  This
-calendar is the general-purpose primitive for user-defined entities,
-tests and the reservation system.  ``EventQueue.overflow`` counts
-events dropped because the calendar was full -- callers size capacity
-so it stays 0 (asserted in tests).
+calendar is the general-purpose primitive for user-defined entities and
+tests.  ``EventQueue.overflow`` counts events dropped because the
+calendar was full -- callers size capacity so it stays 0 (asserted in
+tests).
+
+EventSource protocol
+--------------------
+The engine does not hard-code its event kinds; it takes the min over the
+``next_time`` of every registered :class:`EventSource` and applies every
+source due at the earliest timestamp in one superstep.  A source is any
+object with
+
+  * ``kind``  -- its trace code (the ``K_*`` constants below), which is
+    also its rank in the fixed tie-break priority order
+    ``PRIORITY_ORDER``:
+
+        COMPLETION > FAILURE > RECOVERY > RESERVATION > RETURN
+                   > ARRIVAL > CALENDAR_STEP > BROKER
+
+  * ``next_time(state) -> f32[]`` -- the earliest pending instant of
+    this kind (+inf when none); must be jit-traceable.
+  * ``apply(state, now) -> state`` -- apply *every* event of this kind
+    with time <= ``now``; must be jit-traceable and the identity when
+    nothing is due (zero-rate sources then cost nothing and perturb
+    no result -- the engine relies on this for bit-for-bit
+    reproducibility of scenarios that do not use a source).
+
+:class:`FnSource` is the plain-closure implementation the engine and
+user extensions build sources from; see docs/ARCHITECTURE.md for the
+"add a new event source" walkthrough.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from .types import INF, pytree_dataclass
+
+# ----------------------------------------------------------------------
+# EventSource protocol: trace codes double as tie-break priorities.
+# K_COMPLETION..K_BROKER keep the original 4-kind trace numbering so
+# pre-refactor golden traces replay unchanged.
+# ----------------------------------------------------------------------
+K_COMPLETION = 0    # forecast completion materialises
+K_RETURN = 1        # processed Gridlet reaches its broker
+K_ARRIVAL = 2       # dispatched Gridlet reaches its resource
+K_BROKER = 3        # periodic broker scheduling event
+K_FAILURE = 4       # resource goes down (MTBF stream)
+K_RECOVERY = 5      # resource comes back up (MTTR stream)
+K_RESERVATION = 6   # advance-reservation window opens/closes
+K_CALENDAR = 7      # local load calendar step (weekend boundary)
+
+# Tie-break order among sources due at the same instant.  Application
+# order inside a superstep differs in exactly one place: the engine
+# applies BROKER before ARRIVAL so the broker's zero-delay dispatches
+# arrive within the same superstep, while ARRIVAL keeps semantic
+# priority (pre-broker arrivals hold admission precedence -- see
+# engine._apply_arrivals).
+PRIORITY_ORDER = (K_COMPLETION, K_FAILURE, K_RECOVERY, K_RESERVATION,
+                  K_RETURN, K_ARRIVAL, K_CALENDAR, K_BROKER)
+
+
+@dataclasses.dataclass(frozen=True)
+class FnSource:
+    """An :class:`EventSource` built from two closures.
+
+    ``next_time``/``apply`` close over whatever static context they need
+    (fleet arrays, params, the engine's per-superstep scratch dict);
+    the engine only sees the uniform protocol.
+    """
+    kind: int
+    name: str
+    next_time_fn: Callable
+    apply_fn: Callable
+
+    def next_time(self, state) -> jax.Array:
+        return self.next_time_fn(state)
+
+    def apply(self, state, now):
+        return self.apply_fn(state, now)
 
 
 @pytree_dataclass

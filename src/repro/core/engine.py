@@ -1,62 +1,96 @@
 """The vectorised discrete-event engine (paper sections 3.4-3.5),
-refactored around a **resource-major superstep loop**.
+refactored around a **resource-major superstep loop** over pluggable
+:class:`repro.core.des.EventSource`'s.
 
-State layout
-------------
+State layout (shape/dtype conventions)
+--------------------------------------
 Gridlet state stays in the flat struct-of-arrays ``GridletBatch`` (the
-broker's natural layout), but every *executing* Gridlet additionally
-occupies one column of a resource-major ``[R_pad, J]`` job-slot table:
+broker's natural layout; every per-gridlet array is ``[N]``), but every
+*executing* Gridlet additionally occupies one column of a resource-major
+``[R_pad, J]`` i32 job-slot table (``R_pad`` = resources padded to the
+kernel block, ``J`` = job slots per resource):
 
-  ``SimState.slot[i]``          -- column of Gridlet ``i`` (-1 = none),
-  ``SimState.row_gridlet[r,j]`` -- inverse map: flat Gridlet index (-1).
+  ``SimState.slot[i]``          -- i32[N] column of Gridlet ``i`` (-1 = none),
+  ``SimState.row_gridlet[r,j]`` -- i32[R_pad, J] inverse map: flat Gridlet
+                                   index (-1 = free).
 
-Slots are allocated on admission (RUNNING) and freed on completion, so
-the table always holds exactly the running set.  Each while-loop
-iteration -- one **superstep** -- gathers ``remaining`` into the table
-and evaluates the Fig 8 PE-share + forecast math in a single call to
-``kernels.ops.event_scan`` (compiled Pallas on TPU, vectorised XLA
-fallback on CPU hosts); the kernel also emits the per-row earliest
-completion (argmin) and PE occupancy so no second pass over the state is
-needed.
+Slots are allocated on admission (RUNNING) and freed on completion or
+resource failure, so the table always holds exactly the running set.
+Each while-loop iteration -- one **superstep** -- gathers ``remaining``
+into the table and evaluates the Fig 8 PE-share + forecast math in a
+single call to ``kernels.ops.event_scan`` (compiled Pallas on TPU,
+vectorised XLA fallback on CPU hosts); the kernel also emits the per-row
+earliest completion (argmin) and PE occupancy so no second pass over the
+state is needed.  Reservation-held PEs enter the kernel as its
+``pe_blocked`` [R] input and failed resources as its ``row_ok`` mask.
+
+Per-resource failure/reservation state (all ``[R]``): ``res_up`` bool,
+``next_fail``/``next_recover``/``fail_since``/``downtime`` f32; per-user
+accounting (``spent``, ``done_on``, ...) is ``[U]`` / ``[U, R]`` f32.
 
 Superstep semantics
 -------------------
 The paper's engine (section 3.4) pops one timestamp-ordered event per
-iteration.  A superstep instead finds the earliest pending time ``t*``
-across
+iteration.  A superstep instead asks every registered event source (the
+``des.EventSource`` protocol: ``next_time(state)`` / ``apply(state,
+now)``) for its earliest pending instant:
 
-  COMPLETION -- forecast finish of the smallest-remaining-share job
-                (paper Fig 7 step 2d / Fig 10: internal events),
-  RETURN     -- processed Gridlet reaches its broker (GRIDLET_RETURN),
-  ARRIVAL    -- dispatched Gridlet reaches its resource (GRIDLET_SUBMIT),
-  BROKER     -- periodic scheduling event of the economic broker,
+  COMPLETION    -- forecast finish of the smallest-remaining-share job
+                   (paper Fig 7 step 2d / Fig 10: internal events),
+  FAILURE       -- a resource goes down (per-resource MTBF stream),
+  RECOVERY      -- a failed resource comes back up (MTTR stream),
+  RESERVATION   -- an advance-reservation window opens or closes,
+  RETURN        -- processed Gridlet reaches its broker (GRIDLET_RETURN),
+  ARRIVAL       -- dispatched Gridlet reaches its resource (GRIDLET_SUBMIT),
+  CALENDAR_STEP -- a local-load calendar boundary (weekend edge),
+  BROKER        -- periodic scheduling event of the economic broker,
 
 advances all resident jobs analytically by the PE-share algebra of Fig 8
-over ``[t, t*)``, then applies **every** event due at ``t*`` in one
-vectorised batch per kind, in the priority order COMPLETION > RETURN >
-ARRIVAL > BROKER.  Within a kind, ties are FIFO by flat Gridlet index --
-exactly the order the one-event-at-a-time loop would have produced, so
-the Table 1 / Fig 9 / Fig 12 traces are reproduced bit-for-bit.  Two
-event chains that the paper engine spreads over extra zero-dt
-iterations are folded into the same superstep because they are
-observationally simultaneous: a zero-delay RETURN of a Gridlet that
-completed at ``t*``, and the zero-delay ARRIVAL of a Gridlet the broker
-dispatched at ``t*`` (arrival application commutes with the broker
-event: it changes neither the in-flight set nor any quantity the broker
-reads).  Forecasts are recomputed from state every superstep, so the
-paper's stale-internal-event discard rule (section 3.4) holds by
-construction: a superseded forecast simply never materialises.
+over ``[t, t*)``, then applies **every** source due at the earliest
+pending ``t*`` in one vectorised batch per kind, in the fixed tie-break
+priority order
+
+  COMPLETION > FAILURE > RECOVERY > RESERVATION > RETURN > ARRIVAL
+             > CALENDAR_STEP > BROKER.
+
+Within a kind, ties are FIFO by flat Gridlet index -- exactly the order
+the one-event-at-a-time loop would have produced, so the Table 1 /
+Fig 9 / Fig 12 traces are reproduced bit-for-bit.  Application order
+inside the superstep differs from the priority order in exactly one
+place: BROKER is *applied* before ARRIVAL so that two event chains the
+paper engine spreads over extra zero-dt iterations fold into the same
+superstep -- a zero-delay RETURN of a Gridlet that completed at ``t*``,
+and the zero-delay ARRIVAL of a Gridlet the broker dispatched at ``t*``
+(arrival application commutes with the broker event; pre-broker arrivals
+keep admission precedence via the ``arr_pre`` mask, preserving the
+ARRIVAL > BROKER tie-break).  Forecasts are recomputed from state every
+superstep, so the paper's stale-internal-event discard rule (section
+3.4) holds by construction: a superseded forecast simply never
+materialises.  Sources with nothing pending report +inf and apply as
+the identity, so scenarios that leave a source unused (zero failure
+rate, empty reservation table, zero weekend load) are bit-for-bit
+identical to runs without it.
+
+Failure semantics: when a resource fails, its RUNNING and QUEUED
+Gridlets move to ``types.FAILED``, their job slots are freed and their
+committed cost is refunded (no double billing); Gridlets IN_TRANSIT to a
+down resource fail-and-refund on arrival.  The broker re-plans FAILED
+Gridlets exactly like CREATED ones (see broker._assign), re-billing only
+on the new dispatch; ``SimState.n_resubmits`` counts those re-dispatches
+and ``downtime`` accumulates per-resource down intervals.
 
 Time-shared share allocation (Fig 8): with g jobs on P PEs,
   min_jobs = g // P PEs' worth of jobs run at MaxShare = eff_mips/min_jobs,
   the rest at MinShare = eff_mips/(min_jobs+1); jobs are laid onto PEs so
   the smallest-remaining jobs receive MaxShare -- this is the unique layout
   consistent with the worked trace of Fig 9 / Table 1 (G3 joins G2's PE at
-  t=7, G1 keeps a whole PE and finishes at 10).
+  t=7, G1 keeps a whole PE and finishes at 10).  Reservation windows
+  shrink P to the unreserved PE count.
 
 Space-shared (Figs 10-12): dedicated PE per job, FCFS (or SJF) queue;
 PE identity never affects the trace (all PEs of a resource are equal
 rated), so only the per-resource occupancy count is tracked.
+Reservations gate admission (never preempt residents).
 
 ``SimState.n_events`` counts applied events, ``n_steps`` counts
 supersteps (while-loop iterations); ``overflow`` counts job-slot
@@ -71,13 +105,14 @@ import jax
 import jax.numpy as jnp
 
 from . import broker as broker_mod
-from . import calendar, network
+from . import calendar, des, network, rand
+from . import reservation as resv_mod
 from ..kernels import ops as kernel_ops
 from ..kernels.event_scan import BIG as _BIG  # empty-slot sentinel
 from .segments import group_rank
-from .types import (CREATED, DONE, EV_ARRIVAL, EV_BROKER, EV_COMPLETION,
-                    EV_RETURN, FCFS, IN_TRANSIT, INF, QUEUED, RETURNING,
-                    RUNNING, SJF, SPACE_SHARED, TIME_SHARED, pytree_dataclass)
+from .types import (CREATED, DONE, FAILED, FCFS, IN_TRANSIT, INF, QUEUED,
+                    RETURNING, RUNNING, SJF, SPACE_SHARED, TIME_SHARED,
+                    pytree_dataclass)
 
 TRACE_LEN = 64
 BLOCK_R = 8          # event_scan row blocking; resource axis padded to it
@@ -94,13 +129,36 @@ class SimParams:
     sched_frac: jax.Array          # f32[] fraction of deadline-left (0.01)
     measure_alpha: jax.Array       # f32[] measurement smoothing
     registered: jax.Array          # bool[R] GIS availability mask
+    mtbf: jax.Array            # f32[R] mean time between failures (0 = off)
+    mttr: jax.Array            # f32[R] mean time to recovery
+    fail_key: jax.Array        # PRNG key seeding the MTBF/MTTR streams
+    resv_res: jax.Array        # i32[K] reservation -> resource
+    resv_pes: jax.Array        # i32[K] PEs held
+    resv_start: jax.Array      # f32[K] window start (inclusive)
+    resv_end: jax.Array        # f32[K] window end (exclusive)
 
 
 def default_params(deadline, budget, opt, n_users: int,
-                   n_resources: int = 1, registered=None) -> SimParams:
+                   n_resources: int = 1, registered=None, mtbf=None,
+                   mttr=None, reservations=None,
+                   fail_key=None) -> SimParams:
+    """``mtbf``/``mttr`` broadcast to [R]; 0 disables the failure source.
+    ``reservations`` is a ReservationBook, an iterable of (resource,
+    pes, start, end) tuples, or the 4-array table itself."""
     f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n_users,))
+    r = lambda x: jnp.broadcast_to(jnp.asarray(
+        0.0 if x is None else x, jnp.float32), (n_resources,))
     if registered is None:
         registered = jnp.ones((n_resources,), bool)
+    if reservations is None:
+        resv = resv_mod.empty_tables()
+    elif hasattr(reservations, "as_tables"):
+        resv = reservations.as_tables()
+    elif (isinstance(reservations, tuple) and len(reservations) == 4
+          and all(hasattr(x, "dtype") for x in reservations)):
+        resv = reservations
+    else:
+        resv = resv_mod.as_tables(reservations)
     return SimParams(
         deadline=f(deadline), budget=f(budget),
         opt=jnp.broadcast_to(jnp.asarray(opt, jnp.int32), (n_users,)),
@@ -109,6 +167,10 @@ def default_params(deadline, budget, opt, n_users: int,
         sched_frac=jnp.asarray(0.01, jnp.float32),
         measure_alpha=jnp.asarray(0.5, jnp.float32),
         registered=registered,
+        mtbf=r(mtbf), mttr=r(mttr),
+        fail_key=(jax.random.PRNGKey(0) if fail_key is None else fail_key),
+        resv_res=resv[0], resv_pes=resv[1],
+        resv_start=resv[2], resv_end=resv[3],
     )
 
 
@@ -123,12 +185,20 @@ class SimState:
     first_dispatch: jax.Array  # f32[U,R] first dispatch instant (inf)
     next_sched: jax.Array      # f32 next broker event
     term_time: jax.Array       # f32[U] broker termination instant
+    res_up: jax.Array          # bool[R] resource currently up
+    next_fail: jax.Array       # f32[R] scheduled failure instant (inf = none)
+    next_recover: jax.Array    # f32[R] scheduled recovery instant
+    fail_since: jax.Array      # f32[R] instant the resource went down
+    downtime: jax.Array        # f32[R] accumulated down intervals
+    rng_key: jax.Array         # PRNG key for the MTBF/MTTR streams
     n_events: jax.Array        # i32 applied events (batched kinds summed)
     n_steps: jax.Array         # i32 supersteps (while-loop iterations)
     n_trace: jax.Array         # i32 trace entries written
+    n_failed: jax.Array        # i32 gridlets hit by a failure
+    n_resubmits: jax.Array     # i32 FAILED gridlets re-dispatched
     overflow: jax.Array        # i32 job-slot allocation failures (== 0)
     trace_t: jax.Array         # f32[TRACE_LEN]
-    trace_kind: jax.Array      # i32[TRACE_LEN]
+    trace_kind: jax.Array      # i32[TRACE_LEN] des.K_* codes
     trace_who: jax.Array       # i32[TRACE_LEN]
 
 
@@ -140,6 +210,9 @@ class SimResult(NamedTuple):
     trace: tuple
     n_steps: jax.Array
     overflow: jax.Array
+    n_failed: jax.Array
+    n_resubmits: jax.Array
+    downtime: jax.Array
 
 
 # ----------------------------------------------------------------------
@@ -177,13 +250,21 @@ def _rates(state, fleet, n_resources):
     return jnp.where(running, rate, 0.0)
 
 
-def _scan_events(state, fleet, n_resources, r_pad):
+def _reserved_pes(params, t, n_resources):
+    """PEs blocked by committed reservation windows at ``t``: i32[R]."""
+    return resv_mod.active_pes(params.resv_res, params.resv_pes,
+                               params.resv_start, params.resv_end, t,
+                               n_resources)
+
+
+def _scan_events(state, fleet, params, n_resources, r_pad):
     """Resource-major Fig 8 scan through kernels.ops.event_scan.
 
     Gathers ``remaining`` into the [R_pad, J] job-slot table (flat
     gridlet index as the FIFO tie-break key) and returns the kernel
     outputs (rate [R_pad, J], t_min [R_pad], argmin col [R_pad],
-    occupancy [R_pad]).
+    occupancy [R_pad]).  Reservation-held PEs and down resources enter
+    as the kernel's ``pe_blocked`` / ``row_ok`` masks.
     """
     g = state.g
     rg = state.row_gridlet
@@ -203,7 +284,13 @@ def _scan_events(state, fleet, n_resources, r_pad):
                   constant_values=1.0)
     npe = jnp.pad(fleet.num_pe, (0, pad), constant_values=1)
     pol = jnp.pad(fleet.policy, (0, pad))
-    return kernel_ops.event_scan(rem_rj, eff, npe, tie=tie_rj, policy=pol)
+    blocked = jnp.pad(
+        _reserved_pes(params, state.t, n_resources).astype(jnp.float32),
+        (0, pad))
+    row_ok = jnp.pad(state.res_up, (0, pad), constant_values=True)
+    return kernel_ops.event_scan(rem_rj, eff, npe, tie=tie_rj, policy=pol,
+                                 pe_blocked=blocked,
+                                 row_ok=row_ok.astype(jnp.float32))
 
 
 # ----------------------------------------------------------------------
@@ -307,9 +394,32 @@ def _apply_returns(state, fleet, t_next, n_users, n_resources):
     return replace(state, g=g, done_on=done_on), ret_due
 
 
-def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_resources):
+def _fail_gridlets(state, victims, n_users):
+    """The fail-and-refund invariant, shared by the FAILURE source and
+    the down-resource arrival path: ``victims`` move to FAILED, drop
+    their broker assignment and pending event, and their committed cost
+    is refunded (the broker re-bills only on the resubmission
+    dispatch)."""
+    from .types import replace
+    g = state.g
+    refund = jax.ops.segment_sum(jnp.where(victims, g.cost, 0.0),
+                                 g.user, num_segments=n_users)
+    g = replace(
+        g,
+        status=jnp.where(victims, FAILED, g.status),
+        assigned=jnp.where(victims, -1, g.assigned),
+        t_event=jnp.where(victims, INF, g.t_event),
+        cost=jnp.where(victims, 0.0, g.cost),
+    )
+    return replace(
+        state, g=g, spent=state.spent - refund,
+        n_failed=state.n_failed + jnp.sum(victims, dtype=jnp.int32))
+
+
+def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_users,
+                    n_resources):
     """IN_TRANSIT & due -> RUNNING (time-shared / free PE) or QUEUED,
-    for the whole batch.
+    for the whole batch; arrivals at a *down* resource fail-and-refund.
 
     All time-shared arrivals commute (every resident job just
     re-shares).  Space-shared arrivals fill the ``free_pe`` PEs left
@@ -326,15 +436,19 @@ def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_resources):
     res = jnp.clip(g.resource, 0, n_resources - 1)
     idx = jnp.arange(g.n, dtype=jnp.int32)
     arr_due = (g.status == IN_TRANSIT) & (g.t_event <= t_next)
+    arr_fail = arr_due & ~state.res_up[res]
+    arr_live = arr_due & ~arr_fail
     is_ss = fleet.policy[res] == SPACE_SHARED
-    arr_ss = arr_due & is_ss
+    arr_ss = arr_live & is_ss
     order = jnp.where(arr_pre, idx, idx + g.n)
     rank = jax.lax.cond(
         arr_ss.any(),
         lambda: group_rank(res, arr_ss, order, n_resources)[0],
         lambda: jnp.full((g.n,), jnp.int32(2 ** 30)))
-    arr_run = arr_due & (~is_ss | (rank < free_pe[res]))
+    arr_run = arr_live & (~is_ss | (rank < free_pe[res]))
     arr_queue = arr_ss & ~arr_run
+    state = _fail_gridlets(state, arr_fail, n_users)
+    g = state.g
     g = replace(
         g,
         status=jnp.where(arr_run, RUNNING,
@@ -348,6 +462,240 @@ def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_resources):
     return replace(state, g=g), arr_due, arr_run
 
 
+def _apply_failures(state, fleet, params, due_r, now, n_users,
+                    n_resources, r_pad):
+    """Down the resources in ``due_r``: RUNNING/QUEUED residents move to
+    FAILED, their slots are freed and their committed cost refunded; the
+    MTTR stream schedules each resource's recovery."""
+    from .types import replace
+    g = state.g
+    key, k1 = jax.random.split(state.rng_key)
+    repair = jnp.where(params.mttr > 0.0,
+                       rand.exponential(k1, params.mttr), 0.0)
+    on_r = jnp.clip(g.resource, 0, n_resources - 1)
+    victim = ((g.status == RUNNING) | (g.status == QUEUED)) & due_r[on_r]
+    state = _fail_gridlets(state, victim, n_users)
+    state = replace(
+        state, rng_key=key,
+        res_up=state.res_up & ~due_r,
+        next_fail=jnp.where(due_r, INF, state.next_fail),
+        next_recover=jnp.where(due_r, now + repair, state.next_recover),
+        fail_since=jnp.where(due_r, now, state.fail_since),
+        # Reset the brokers' measurement window for the failed resource:
+        # the failure wiped its in-flight progress, and a measured rate
+        # of 0/elapsed would otherwise predict zero capacity forever.
+        # After recovery the broker re-trusts the advertised rate, as a
+        # fresh GIS registration would.
+        first_dispatch=jnp.where(due_r[None, :], INF,
+                                 state.first_dispatch))
+    return _free_slots(state, victim & (state.slot >= 0), on_r, r_pad)
+
+
+def _apply_recoveries(state, params, due_r, now):
+    """Bring the resources in ``due_r`` back up (GIS re-registration);
+    the MTBF stream schedules each one's next failure."""
+    from .types import replace
+    key, k1 = jax.random.split(state.rng_key)
+    uptime = rand.exponential(k1, params.mtbf)     # inf where mtbf <= 0
+    return replace(
+        state, rng_key=key,
+        res_up=state.res_up | due_r,
+        next_fail=jnp.where(due_r, now + uptime, state.next_fail),
+        next_recover=jnp.where(due_r, INF, state.next_recover),
+        downtime=state.downtime +
+        jnp.where(due_r, now - state.fail_since, 0.0),
+        fail_since=jnp.where(due_r, INF, state.fail_since))
+
+
+def _admit_after_reservation(state, fleet, params, now, n_resources):
+    """A reservation boundary changed the blocked-PE counts: re-admit
+    queued work onto whatever space-shared capacity is now free."""
+    g = state.g
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    busy = jax.ops.segment_sum(
+        (g.status == RUNNING).astype(jnp.int32), res,
+        num_segments=n_resources)
+    avail = fleet.num_pe - _reserved_pes(params, now, n_resources) - busy
+    free_pe = jnp.where((fleet.policy == SPACE_SHARED) & state.res_up,
+                        jnp.maximum(avail, 0), 0)
+    return _admit_queued(state, fleet, free_pe, now, n_resources)
+
+
+# ----------------------------------------------------------------------
+# Event sources (des.EventSource protocol)
+# ----------------------------------------------------------------------
+
+def _make_sources(fleet, params, n_users, ctx):
+    """The engine's registered event sources, ordered by
+    des.PRIORITY_ORDER.  ``ctx`` is the per-superstep scratch dict the
+    built-in sources share (kernel scan outputs, event masks, the
+    remaining free-PE budget); sources communicate through it only
+    *outside* lax.cond branches.  To plug in a new kind, build a
+    des.FnSource with a fresh K_* code and splice it into this tuple at
+    its priority rank (docs/ARCHITECTURE.md walks through an example);
+    ``step`` derives all index wiring (apply order, fired flags, event
+    counts, trace rows) from each ``source.kind``, so splicing never
+    renumbers the built-ins.  A source that batches several events per
+    superstep reports them via ``ctx[("count", kind)]`` (and optionally
+    a representative ``ctx[("who", kind)]`` for the trace); otherwise
+    the engine counts 1 per firing.
+    """
+    n_resources = fleet.r
+
+    # -- COMPLETION: the kernel scan IS the next_time computation -------
+    def completion_next(state):
+        r_pad = state.row_gridlet.shape[0]
+        ctx["scan"] = _scan_events(state, fleet, params, n_resources,
+                                   r_pad)
+        tmin = ctx["scan"][1].min()
+        return jnp.where(tmin < _BIG, state.t + tmin, INF)
+
+    def completion_apply(state, now):
+        r_pad = state.row_gridlet.shape[0]
+        completes, res = ctx["completes"], ctx["res"]
+        occ_rows = ctx["scan"][3]
+        state = _apply_completions(state, fleet, completes, now,
+                                   n_resources, r_pad)
+        # Freed PEs admit queued Gridlets.  Queued jobs only exist while
+        # every unreserved PE is busy, so the kernel occupancy minus
+        # this batch's completions is the exact busy count.
+        n_comp_r = jax.ops.segment_sum(completes.astype(jnp.int32), res,
+                                       num_segments=n_resources)
+        avail = fleet.num_pe - _reserved_pes(params, now, n_resources)
+        free_pe = jnp.maximum(avail - (occ_rows[:n_resources] - n_comp_r),
+                              0)
+        free_pe = jnp.where((fleet.policy == SPACE_SHARED) & state.res_up,
+                            free_pe, 0)
+        ss_freed = completes & (fleet.policy[res] == SPACE_SHARED)
+        state, admitq = jax.lax.cond(
+            ss_freed.any(),
+            lambda s: _admit_queued(s, fleet, free_pe, now, n_resources),
+            lambda s: (s, jnp.zeros_like(completes)), state)
+        ctx["free_pe"] = free_pe - jax.ops.segment_sum(
+            admitq.astype(jnp.int32), res, num_segments=n_resources)
+        ctx["newly"] = admitq
+        ctx[("count", des.K_COMPLETION)] = jnp.sum(completes,
+                                                   dtype=jnp.int32)
+        return state
+
+    # -- FAILURE / RECOVERY: MTBF/MTTR renewal streams ------------------
+    def failure_apply(state, now):
+        r_pad = state.row_gridlet.shape[0]
+        due_r = jnp.isfinite(state.next_fail) & (state.next_fail <= now)
+        ctx[("count", des.K_FAILURE)] = jnp.sum(due_r, dtype=jnp.int32)
+        ctx[("who", des.K_FAILURE)] = jnp.argmax(due_r).astype(jnp.int32)
+        return jax.lax.cond(
+            due_r.any(),
+            lambda s: _apply_failures(s, fleet, params, due_r, now,
+                                      n_users, n_resources, r_pad),
+            lambda s: s, state)
+
+    def recovery_apply(state, now):
+        due_r = jnp.isfinite(state.next_recover) & \
+            (state.next_recover <= now)
+        ctx[("count", des.K_RECOVERY)] = jnp.sum(due_r, dtype=jnp.int32)
+        ctx[("who", des.K_RECOVERY)] = jnp.argmax(due_r).astype(jnp.int32)
+        return jax.lax.cond(
+            due_r.any(),
+            lambda s: _apply_recoveries(s, params, due_r, now),
+            lambda s: s, state)
+
+    # -- RESERVATION: windows open/close at params.resv_* boundaries ----
+    def reservation_next(state):
+        return resv_mod.next_boundary(params.resv_start, params.resv_end,
+                                      state.t)
+
+    def reservation_apply(state, now):
+        fired = ctx["fired_resv"]
+        queued_any = (state.g.status == QUEUED).any()
+        state, admitq = jax.lax.cond(
+            fired & queued_any,
+            lambda s: _admit_after_reservation(s, fleet, params, now,
+                                               n_resources),
+            lambda s: (s, jnp.zeros((s.g.n,), bool)), state)
+        ctx["newly"] = ctx["newly"] | admitq
+        ctx["free_pe"] = ctx["free_pe"] - jax.ops.segment_sum(
+            admitq.astype(jnp.int32),
+            jnp.clip(state.g.resource, 0, n_resources - 1),
+            num_segments=n_resources)
+        return state
+
+    # -- RETURN / ARRIVAL / CALENDAR / BROKER ---------------------------
+    def return_next(state):
+        g = state.g
+        return jnp.where(g.status == RETURNING, g.t_event, INF).min()
+
+    def return_apply(state, now):
+        state, ret_due = _apply_returns(state, fleet, now, n_users,
+                                        n_resources)
+        ctx[("count", des.K_RETURN)] = jnp.sum(ret_due, dtype=jnp.int32)
+        ctx[("who", des.K_RETURN)] = jnp.argmax(ret_due).astype(jnp.int32)
+        return state
+
+    def arrival_next(state):
+        g = state.g
+        return jnp.where(g.status == IN_TRANSIT, g.t_event, INF).min()
+
+    def arrival_apply(state, now):
+        state, arr_due, arr_run = _apply_arrivals(
+            state, fleet, ctx["free_pe"], ctx["arr_pre"], now, n_users,
+            n_resources)
+        ctx[("count", des.K_ARRIVAL)] = jnp.sum(arr_due, dtype=jnp.int32)
+        ctx[("who", des.K_ARRIVAL)] = jnp.argmax(arr_due).astype(jnp.int32)
+        ctx["newly"] = ctx["newly"] | arr_run
+        return state
+
+    def calendar_next(state):
+        return calendar.next_boundary(fleet, state.t).min()
+
+    def calendar_apply(state, now):
+        # The boundary itself is the event: landing a superstep on it
+        # makes the piecewise-constant load integrate exactly (shares
+        # are recomputed from the new load next scan).
+        return state
+
+    def broker_next(state):
+        active, _ = _user_flags(state, params, fleet, n_users)
+        # max(next_sched, t): a failure refund can re-activate a broker
+        # whose poll instant already passed; never step time backwards.
+        return jnp.where(active.any(),
+                         jnp.maximum(state.next_sched, state.t), INF)
+
+    def broker_apply(state, now):
+        # Pre-broker arrivals hold admission precedence over the
+        # broker's zero-delay dispatches (the ARRIVAL > BROKER
+        # tie-break), recorded before the dispatch batch runs.
+        g = state.g
+        ctx["arr_pre"] = (g.status == IN_TRANSIT) & (g.t_event <= now)
+        return jax.lax.cond(
+            ctx["fired_b"],
+            lambda s: broker_mod.broker_event(s, fleet, params, n_users),
+            lambda s: s, state)
+
+    sources = (
+        des.FnSource(des.K_COMPLETION, "completion", completion_next,
+                     completion_apply),
+        des.FnSource(des.K_FAILURE, "failure",
+                     lambda s: s.next_fail.min(), failure_apply),
+        des.FnSource(des.K_RECOVERY, "recovery",
+                     lambda s: s.next_recover.min(), recovery_apply),
+        des.FnSource(des.K_RESERVATION, "reservation", reservation_next,
+                     reservation_apply),
+        des.FnSource(des.K_RETURN, "return", return_next, return_apply),
+        des.FnSource(des.K_ARRIVAL, "arrival", arrival_next,
+                     arrival_apply),
+        des.FnSource(des.K_CALENDAR, "calendar_step", calendar_next,
+                     calendar_apply),
+        des.FnSource(des.K_BROKER, "broker", broker_next, broker_apply),
+    )
+    # des.PRIORITY_ORDER is the single source of truth for the tie-break
+    # ranking; a spliced-in source must be added there too (trace-time
+    # check, free under jit).
+    assert tuple(s.kind for s in sources) == des.PRIORITY_ORDER, \
+        "engine sources out of sync with des.PRIORITY_ORDER"
+    return sources
+
+
 # ----------------------------------------------------------------------
 # Main loop
 # ----------------------------------------------------------------------
@@ -356,11 +704,11 @@ def _user_flags(state, params, fleet, n_users):
     """(active, finished) per user -- paper 4.2.1 step 7 semantics.
 
     A broker stays active only while its cheapest possible purchase --
-    the user's smallest still-undispatched Gridlet priced at the best
-    G$/MI on the grid -- fits in the remaining budget.  With nothing
-    left to dispatch the broker goes inactive (every further poll would
-    be a no-op); the user is finished once inactive with nothing in
-    flight.
+    the user's smallest still-undispatched (CREATED or FAILED) Gridlet
+    priced at the best G$/MI on the grid -- fits in the remaining
+    budget.  With nothing left to dispatch the broker goes inactive
+    (every further poll would be a no-op); the user is finished once
+    inactive with nothing in flight.
     """
     g = state.g
     u = g.user
@@ -380,43 +728,31 @@ def _user_flags(state, params, fleet, n_users):
 
 
 def step(state: SimState, fleet, params: SimParams, n_users: int):
-    """One superstep: scan once, pick earliest time t*, advance, apply
-    ALL events due at t* in priority order."""
+    """One superstep: ask every source for its next time, pick the
+    earliest t*, advance the Fig 8 share algebra over [t, t*), apply
+    every source due at t*."""
     from .types import replace
     n_resources = fleet.r
     r_pad = state.row_gridlet.shape[0]
     g = state.g
     j_cap = state.row_gridlet.shape[1]
 
-    # ---- one kernel scan: rates, forecasts, argmin, occupancy --------
-    rate_rj, tmin_rows, amin_rows, occ_rows = _scan_events(
-        state, fleet, n_resources, r_pad)
+    # ---- every source's earliest pending instant (priority order) ----
+    ctx = {}
+    sources = _make_sources(fleet, params, n_users, ctx)
+    times = jnp.stack([s.next_time(state) for s in sources])
+    t_min_all = times.min()
+    any_event = jnp.isfinite(t_min_all)
+    t_next = jnp.where(any_event, t_min_all, state.t)
+
+    # ---- advance every running job analytically over [t, t_next) -----
+    rate_rj, tmin_rows, amin_rows, _ = ctx["scan"]
     res = jnp.clip(g.resource, 0, n_resources - 1)
     has_slot = (g.status == RUNNING) & (state.slot >= 0)
     rate = jnp.where(has_slot,
                      rate_rj[res, jnp.clip(state.slot, 0, j_cap - 1)], 0.0)
     rel = jnp.where(has_slot,
                     g.remaining / jnp.maximum(rate, 1e-30), INF)
-
-    tmin = tmin_rows.min()
-    t_complete = jnp.where(tmin < _BIG, state.t + tmin, INF)
-
-    ret_t = jnp.where(g.status == RETURNING, g.t_event, INF)
-    t_return = ret_t.min()
-    arr_t = jnp.where(g.status == IN_TRANSIT, g.t_event, INF)
-    t_arrive = arr_t.min()
-    active, _ = _user_flags(state, params, fleet, n_users)
-    t_broker = jnp.where(active.any(), state.next_sched, INF)
-
-    # Priority among simultaneous events: COMPLETION, RETURN, ARRIVAL,
-    # BROKER -- every kind due at t* fires this superstep, applied in
-    # that order.
-    times = jnp.stack([t_complete, t_return, t_arrive, t_broker])
-    t_min_all = times.min()
-    any_event = jnp.isfinite(t_min_all)
-    t_next = jnp.where(any_event, t_min_all, state.t)
-
-    # Advance every running job analytically over [t, t_next).
     dt = jnp.maximum(t_next - state.t, 0.0)
     completes = has_slot & any_event & (state.t + rel <= t_next)
     new_remaining = jnp.where(
@@ -427,51 +763,29 @@ def step(state: SimState, fleet, params: SimParams, n_users: int):
     who_c = state.row_gridlet[
         r_star, jnp.clip(amin_rows[r_star], 0, j_cap - 1)]
     state = replace(state, g=replace(g, remaining=new_remaining), t=t_next)
+    ctx["completes"], ctx["res"] = completes, res
+    ctx[("who", des.K_COMPLETION)] = who_c
+    # All index wiring below is derived from source.kind, so splicing a
+    # new source into _make_sources never renumbers the built-ins.
+    pos_of = {s.kind: i for i, s in enumerate(sources)}
+    fired_t = [jnp.isfinite(times[i]) & (times[i] <= t_next)
+               for i in range(len(sources))]
+    ctx["fired_resv"] = fired_t[pos_of[des.K_RESERVATION]]
+    ctx["fired_b"] = fired_t[pos_of[des.K_BROKER]]
 
-    # ---- COMPLETION batch (+ space-shared queue admission) -----------
-    state = _apply_completions(state, fleet, completes, t_next,
-                               n_resources, r_pad)
-    # Freed PEs admit queued Gridlets.  Queued jobs only exist while
-    # every PE is busy, so the kernel occupancy minus this batch's
-    # completions is the exact busy count.
-    n_comp_r = jax.ops.segment_sum(completes.astype(jnp.int32), res,
-                                   num_segments=n_resources)
-    free_pe = jnp.maximum(
-        fleet.num_pe - (occ_rows[:n_resources] - n_comp_r), 0)
-    free_pe = jnp.where(fleet.policy == SPACE_SHARED, free_pe, 0)
-    ss_freed = completes & (fleet.policy[res] == SPACE_SHARED)
-    state, admitq = jax.lax.cond(
-        ss_freed.any(),
-        lambda s: _admit_queued(s, fleet, free_pe, t_next, n_resources),
-        lambda s: (s, jnp.zeros_like(completes)), state)
-    free_pe = free_pe - jax.ops.segment_sum(
-        admitq.astype(jnp.int32), res, num_segments=n_resources)
-
-    # ---- RETURN batch ------------------------------------------------
-    state, ret_due = _apply_returns(state, fleet, t_next, n_users,
-                                    n_resources)
-    who_r = jnp.argmax(ret_due).astype(jnp.int32)
-
-    # Arrivals already due before the broker fires hold admission
-    # priority over its zero-delay dispatches (ARRIVAL > BROKER).
-    arr_pre = (state.g.status == IN_TRANSIT) & (state.g.t_event <= t_next)
-
-    # ---- BROKER event ------------------------------------------------
-    fired_b = jnp.isfinite(t_broker) & (t_broker <= t_next)
-    state = jax.lax.cond(
-        fired_b,
-        lambda s: broker_mod.broker_event(s, fleet, params, n_users),
-        lambda s: s, state)
-
-    # ---- ARRIVAL batch (incl. zero-delay arrivals of this superstep's
-    # dispatches; commutes with the broker event) ----------------------
-    state, arr_due, arr_run = _apply_arrivals(state, fleet, free_pe,
-                                              arr_pre, t_next,
-                                              n_resources)
-    who_a = jnp.argmax(arr_due).astype(jnp.int32)
+    # ---- apply every due source: priority order, except BROKER before
+    # ARRIVAL (see module docstring) -----------------------------------
+    order = list(range(len(sources)))
+    order.remove(pos_of[des.K_BROKER])
+    order.insert(order.index(pos_of[des.K_ARRIVAL]), pos_of[des.K_BROKER])
+    for i in order:
+        state = sources[i].apply(state, t_next)
 
     # ---- allocate job slots for everything newly RUNNING -------------
-    newly = admitq | arr_run
+    # Re-check status: a same-instant FAILURE may have killed a gridlet
+    # completion_apply just admitted (it had no slot yet, so the failure
+    # freed nothing) -- allocating for it would leak a ghost slot.
+    newly = ctx["newly"] & (state.g.status == RUNNING)
     res_now = jnp.clip(state.g.resource, 0, n_resources - 1)
     state = jax.lax.cond(
         newly.any(),
@@ -483,20 +797,22 @@ def step(state: SimState, fleet, params: SimParams, n_users: int):
     term = jnp.where(finished & ~jnp.isfinite(state.term_time),
                      t_next, state.term_time)
 
-    n_comp = jnp.sum(completes, dtype=jnp.int32)
-    n_ret = jnp.sum(ret_due, dtype=jnp.int32)
-    n_arr = jnp.sum(arr_due, dtype=jnp.int32)
-    fired = jnp.stack([n_comp > 0, n_ret > 0, n_arr > 0, fired_b])
-    whos = jnp.stack([who_c, who_r, who_a, jnp.asarray(-1, jnp.int32)])
+    # Per-source event counts: a batching source reported its own count
+    # through ctx[("count", kind)]; the rest count 1 per firing.
+    no_who = jnp.asarray(-1, jnp.int32)
+    counts = jnp.stack([
+        ctx.get(("count", s.kind), fired_t[i].astype(jnp.int32))
+        for i, s in enumerate(sources)])
+    fired = counts > 0
+    whos = jnp.stack([ctx.get(("who", s.kind), no_who) for s in sources])
     off = jnp.cumsum(fired.astype(jnp.int32)) - fired.astype(jnp.int32)
     # Out-of-range positions (unfired kinds / full trace) are dropped.
     pos = jnp.where(fired, state.n_trace + off, TRACE_LEN)
-    kinds = jnp.arange(4, dtype=jnp.int32)
+    kinds = jnp.asarray([s.kind for s in sources], jnp.int32)
     state = replace(
         state,
         term_time=term,
-        n_events=state.n_events + n_comp + n_ret + n_arr +
-        fired_b.astype(jnp.int32),
+        n_events=state.n_events + jnp.sum(counts),
         n_steps=state.n_steps + 1,
         n_trace=state.n_trace + jnp.sum(fired, dtype=jnp.int32),
         trace_t=state.trace_t.at[pos].set(t_next, mode="drop"),
@@ -512,12 +828,20 @@ def _continue(state, fleet, params, n_users, max_events):
 
 
 def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
-               max_jobs: int | None = None) -> SimState:
+               max_jobs: int | None = None,
+               params: SimParams | None = None) -> SimState:
     """``max_jobs`` bounds concurrently RUNNING gridlets per resource
-    (the J axis of the job-slot table); defaults to the safe bound N."""
+    (the J axis of the job-slot table); defaults to the safe bound N.
+    ``params`` seeds the failure stream (no failures when omitted)."""
     n = gridlets.n
     j_cap = n if max_jobs is None else min(max_jobs, n)
     r_pad = -(-fleet.r // BLOCK_R) * BLOCK_R
+    if params is None:
+        key = jax.random.PRNGKey(0)
+        next_fail = jnp.full((fleet.r,), INF, jnp.float32)
+    else:
+        key, k1 = jax.random.split(params.fail_key)
+        next_fail = rand.exponential(k1, params.mtbf)  # inf if mtbf <= 0
     return SimState(
         t=jnp.asarray(0.0, jnp.float32),
         g=gridlets,
@@ -528,9 +852,17 @@ def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
         first_dispatch=jnp.full((n_users, fleet.r), INF, jnp.float32),
         next_sched=jnp.asarray(first_sched, jnp.float32),
         term_time=jnp.full((n_users,), INF, jnp.float32),
+        res_up=jnp.ones((fleet.r,), bool),
+        next_fail=next_fail,
+        next_recover=jnp.full((fleet.r,), INF, jnp.float32),
+        fail_since=jnp.full((fleet.r,), INF, jnp.float32),
+        downtime=jnp.zeros((fleet.r,), jnp.float32),
+        rng_key=key,
         n_events=jnp.asarray(0, jnp.int32),
         n_steps=jnp.asarray(0, jnp.int32),
         n_trace=jnp.asarray(0, jnp.int32),
+        n_failed=jnp.asarray(0, jnp.int32),
+        n_resubmits=jnp.asarray(0, jnp.int32),
         overflow=jnp.asarray(0, jnp.int32),
         trace_t=jnp.full((TRACE_LEN,), INF, jnp.float32),
         trace_kind=jnp.full((TRACE_LEN,), -1, jnp.int32),
@@ -542,17 +874,23 @@ def _finalize(state: SimState) -> SimResult:
     # Users that never started (e.g. zero budget) terminate at final t.
     term = jnp.where(jnp.isfinite(state.term_time), state.term_time,
                      state.t)
+    # Resources still down at the end accrue downtime to the final t.
+    downtime = state.downtime + jnp.where(
+        state.res_up, 0.0, state.t - state.fail_since)
     return SimResult(gridlets=state.g, spent=state.spent, term_time=term,
                      n_events=state.n_events,
                      trace=(state.trace_t, state.trace_kind,
                             state.trace_who),
-                     n_steps=state.n_steps, overflow=state.overflow)
+                     n_steps=state.n_steps, overflow=state.overflow,
+                     n_failed=state.n_failed,
+                     n_resubmits=state.n_resubmits, downtime=downtime)
 
 
 @functools.partial(jax.jit, static_argnames=("n_users", "max_events",
                                              "max_jobs"))
 def _run_jit(gridlets, fleet, params, n_users, max_events, max_jobs):
-    state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs)
+    state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
+                       params=params)
     state = jax.lax.while_loop(
         lambda s: _continue(s, fleet, params, n_users, max_events),
         lambda s: step(s, fleet, params, n_users),
@@ -571,7 +909,8 @@ def run_inner(gridlets, fleet, params: SimParams, n_users: int,
               max_events: int,
               max_jobs: int | None = None) -> SimResult:
     """Unjitted variant for use under an outer vmap/jit (sweep)."""
-    state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs)
+    state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
+                       params=params)
     state = jax.lax.while_loop(
         lambda s: _continue(s, fleet, params, n_users, max_events),
         lambda s: step(s, fleet, params, n_users),
@@ -580,10 +919,11 @@ def run_inner(gridlets, fleet, params: SimParams, n_users: int,
 
 
 def run_direct(gridlets, fleet, resource_idx, dispatch_time,
-               max_events: int) -> SimResult:
+               max_events: int, reservations=None) -> SimResult:
     """Broker-less mode: Gridlets are pre-routed to ``resource_idx`` and
     enter the network at ``dispatch_time`` -- the paper's Table 1 / Figs 9
-    and 12 scenario (arrivals straight into one resource).
+    and 12 scenario (arrivals straight into one resource).  Optional
+    ``reservations`` block PEs exactly as in the broker-driven mode.
     """
     from .types import replace
     n = gridlets.n
@@ -594,5 +934,6 @@ def run_direct(gridlets, fleet, resource_idx, dispatch_time,
                 status=jnp.full((n,), IN_TRANSIT, jnp.int32),
                 resource=r, assigned=r, t_event=t0 + delay)
     params = default_params(jnp.asarray(-1.0), jnp.asarray(0.0),
-                            jnp.asarray(0), 1, fleet.r)  # brokers inert
+                            jnp.asarray(0), 1, fleet.r,
+                            reservations=reservations)  # brokers inert
     return _run_jit(g, fleet, params, 1, max_events, None)

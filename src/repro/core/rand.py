@@ -31,3 +31,19 @@ def real(key: jax.Array, d, f_low, f_more):
 def real_named(key: jax.Array, d, situation: str = "exec"):
     f_low, f_more = FACTORS[situation]
     return real(key, d, f_low, f_more)
+
+
+def exponential(key: jax.Array, mean):
+    """Memoryless interval stream: one draw per element of ``mean``.
+
+    The engine's failure/recovery event source models per-resource
+    uptime (MTBF) and repair time (MTTR) as exponential holding times,
+    the standard renewal model the paper's "resources are dynamic"
+    scenarios call for.  ``mean`` may be any shaped array; a
+    non-positive mean yields +inf (the stream is disabled), which is how
+    zero-rate scenarios stay bit-for-bit identical to runs without the
+    source registered.
+    """
+    mean = jnp.asarray(mean, jnp.float32)
+    draw = mean * jax.random.exponential(key, mean.shape, jnp.float32)
+    return jnp.where(mean > 0.0, draw, jnp.inf)

@@ -1,8 +1,22 @@
 """Advance reservation (paper feature list: "Resources can be booked").
 
-Launch-level (non-jit) capacity calendar: bookings hold PEs on a resource
-over [start, end).  The engine consumes reservations as a background-load
-term; the launcher uses it to hold slices for scheduled jobs.
+Two layers:
+
+* ``ReservationBook`` -- the launch-level (non-jit) booking calendar with
+  conflict detection.  Drivers build bookings here, then export them with
+  :meth:`ReservationBook.as_tables` / :func:`as_tables`.
+* jit-side helpers over the exported ``(resource, pes, start, end)``
+  arrays (shape ``[K]`` each, ``K`` may be 0).  The engine's RESERVATION
+  event source (see core.des) uses :func:`next_boundary` to wake the
+  superstep loop exactly when a committed window opens or closes, and
+  :func:`active_pes` to know how many PEs are blocked *now*: blocked PEs
+  are subtracted from the capacity the ``[R, J]`` job-slot table exposes
+  -- time-shared rows compute Fig 8 shares over the unreserved PEs
+  (kernels.event_scan's ``pe_blocked`` input), space-shared rows admit
+  only onto unreserved PEs.  Windows are half-open ``[start, end)``.
+  Reservations gate *admission*; jobs already running when a window
+  opens are not preempted (drivers that need a hard guarantee size
+  bookings against ``peak_usage`` before the run).
 """
 from __future__ import annotations
 
@@ -10,6 +24,9 @@ import bisect
 import dataclasses
 import itertools
 from typing import List
+
+import jax
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,3 +87,49 @@ class ReservationBook:
     def load_factor(self, resource: int, t: float) -> float:
         """Reservation-induced load for calendar.effective_mips."""
         return self.reserved_pes(resource, t) / max(self.num_pe[resource], 1)
+
+    def as_tables(self):
+        """Export all bookings as the engine's (res, pes, start, end)
+        i32/i32/f32/f32 arrays, each shape [K]."""
+        rows = sorted((r for per in self._by_resource for r in per),
+                      key=lambda r: (r.start, r.rid))
+        return as_tables([(r.resource, r.pes, r.start, r.end)
+                          for r in rows])
+
+
+def as_tables(bookings):
+    """(resource, pes, start, end) tuples -> the engine's array form."""
+    bookings = list(bookings or [])
+    res = jnp.asarray([b[0] for b in bookings], jnp.int32)
+    pes = jnp.asarray([b[1] for b in bookings], jnp.int32)
+    start = jnp.asarray([b[2] for b in bookings], jnp.float32)
+    end = jnp.asarray([b[3] for b in bookings], jnp.float32)
+    return res, pes, start, end
+
+
+def empty_tables():
+    """The K=0 no-reservations table (the default scenario)."""
+    return as_tables([])
+
+
+def active_pes(resv_res, resv_pes, resv_start, resv_end, t,
+               n_resources: int) -> jax.Array:
+    """PEs blocked by committed windows at time ``t``: i32[R].
+
+    Windows are half-open, so at exactly ``t == end`` the PEs are free
+    again (the engine's RESERVATION event at ``end`` re-admits queued
+    work at that instant).  K = 0 returns all-zeros.
+    """
+    active = (resv_start <= t) & (t < resv_end)
+    return jax.ops.segment_sum(
+        jnp.where(active, resv_pes, 0),
+        jnp.clip(resv_res, 0, n_resources - 1),
+        num_segments=n_resources)
+
+
+def next_boundary(resv_start, resv_end, t) -> jax.Array:
+    """Earliest window open/close instant strictly after ``t`` (f32 scalar;
+    +inf when no boundary remains -- in particular for the K=0 table)."""
+    cand = jnp.concatenate([resv_start, resv_end,
+                            jnp.full((1,), jnp.inf, jnp.float32)])
+    return jnp.where(cand > t, cand, jnp.inf).min()

@@ -4,17 +4,43 @@
 collect statistics -- one call, one jit.  `sweep` vmaps a whole grid of
 (deadline, budget) scenarios, which is how the repo regenerates the
 paper's Figures 21-38 in seconds instead of one simulation per point.
+
+`Scenario` bundles the dynamic-resource knobs the pluggable event
+sources consume: per-resource MTBF/MTTR failure streams, advance
+reservations, and the RNG seed for the failure draws.  The default
+(all-zero) scenario registers every source with nothing to do, which is
+bit-for-bit identical to not registering them at all -- asserted by
+tests/test_superstep.py.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from . import economy, engine, gridlet
 from .types import DONE, OPT_COST
+
+
+class Scenario(NamedTuple):
+    """Dynamic-resource scenario knobs (all optional).
+
+    mtbf: per-resource mean time between failures (scalar or [R]);
+        0 or None disables the failure source entirely,
+    mttr: per-resource mean time to recovery; 0 or None means instant
+        recovery (failures still kill, refund and resubmit the
+        resource's in-flight gridlets -- zero-downtime "blips"),
+    reservations: a reservation.ReservationBook, an iterable of
+        (resource, pes, start, end) tuples, or the exported 4-array
+        table,
+    seed: PRNG seed for the MTBF/MTTR streams.
+    """
+    mtbf: Any = None
+    mttr: Any = None
+    reservations: Any = None
+    seed: int = 0
 
 
 class ExperimentResult(NamedTuple):
@@ -28,16 +54,25 @@ class ExperimentResult(NamedTuple):
     n_events: jax.Array      # i32 events applied by the engine
     n_steps: jax.Array       # i32 engine supersteps (loop iterations)
     overflow: jax.Array      # i32 job-slot allocation failures (== 0)
+    n_failed: jax.Array      # i32 gridlets hit by a resource failure
+    n_resubmits: jax.Array   # i32 FAILED gridlets re-dispatched
+    downtime: jax.Array      # f32[R] accumulated down intervals
+    truncated: jax.Array     # bool: loop hit max_events before finishing
 
 
 def _max_events(n_gridlets: int, n_users: int, horizon: float,
                 min_period: float) -> int:
     # 4 events per gridlet lifecycle + broker polls over the horizon.
+    # Failure scenarios can repeat lifecycles (fail -> refund ->
+    # resubmit); the horizon term usually dominates, but failure-heavy
+    # runs should pass an explicit max_events and check
+    # ExperimentResult.truncated.
     return int(4 * n_gridlets + horizon / max(min_period, 1e-6) + 64)
 
 
 def summarize(res: engine.SimResult, params, n_users: int,
-              n_resources: int) -> ExperimentResult:
+              n_resources: int,
+              max_events: int | None = None) -> ExperimentResult:
     g = res.gridlets
     done = (g.status == DONE).astype(jnp.float32)
     n_done = jax.ops.segment_sum(done, g.user, num_segments=n_users)
@@ -56,6 +91,11 @@ def summarize(res: engine.SimResult, params, n_users: int,
         n_events=res.n_events,
         n_steps=res.n_steps,
         overflow=res.overflow,
+        n_failed=res.n_failed,
+        n_resubmits=res.n_resubmits,
+        downtime=res.downtime,
+        truncated=(res.n_steps >= max_events if max_events is not None
+                   else jnp.asarray(False)),
     )
 
 
@@ -68,31 +108,44 @@ def safe_max_jobs(gridlets_batch, params, fleet) -> int:
     return min(gridlets_batch.n, params.deadline.shape[0] * limit)
 
 
+def _scenario_params(fleet, deadline, budget, opt, n_users,
+                     scenario: Scenario | None) -> engine.SimParams:
+    s = scenario or Scenario()
+    return engine.default_params(
+        deadline, budget, opt, n_users, fleet.r,
+        mtbf=s.mtbf, mttr=s.mttr, reservations=s.reservations,
+        fail_key=jax.random.PRNGKey(s.seed))
+
+
 def run_experiment(gridlets_batch, fleet, deadline, budget,
                    opt=OPT_COST, n_users: int = 1,
-                   max_events: int | None = None) -> ExperimentResult:
-    params = engine.default_params(deadline, budget, opt, n_users, fleet.r)
+                   max_events: int | None = None,
+                   scenario: Scenario | None = None) -> ExperimentResult:
+    params = _scenario_params(fleet, deadline, budget, opt, n_users,
+                              scenario)
     if max_events is None:
         horizon = float(jnp.max(params.deadline)) * 2.0 + 100.0
         max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
     res = engine.run(gridlets_batch, fleet, params, n_users, max_events,
                      max_jobs=safe_max_jobs(gridlets_batch, params, fleet))
-    return summarize(res, params, n_users, fleet.r)
+    return summarize(res, params, n_users, fleet.r, max_events)
 
 
 def run_experiment_factors(gridlets_batch, fleet, d_factor, b_factor,
                            opt=OPT_COST, n_users: int = 1,
-                           max_events: int | None = None):
+                           max_events: int | None = None,
+                           scenario: Scenario | None = None):
     """Paper 4.2.3: derive absolute deadline/budget from D-/B-factors."""
     total_mi = gridlets_batch.length_mi.sum()
     deadline = economy.deadline_from_factor(fleet, total_mi, d_factor)
     budget = economy.budget_from_factor(fleet, total_mi, b_factor)
     return run_experiment(gridlets_batch, fleet, deadline, budget, opt,
-                          n_users, max_events), (deadline, budget)
+                          n_users, max_events, scenario), (deadline, budget)
 
 
 def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
-          n_users: int = 1, max_events: int | None = None):
+          n_users: int = 1, max_events: int | None = None,
+          scenario: Scenario | None = None):
     """vmap over the full deadline x budget grid (paper Figs 21-24).
 
     deadlines: [D], budgets: [B] -> every field gains leading [D, B] dims.
@@ -106,10 +159,10 @@ def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
     max_jobs = safe_max_jobs(gridlets_batch, params0, fleet)  # static
 
     def one(d, b):
-        params = engine.default_params(d, b, opt, n_users, fleet.r)
+        params = _scenario_params(fleet, d, b, opt, n_users, scenario)
         res = engine.run_inner(gridlets_batch, fleet, params, n_users,
                                max_events, max_jobs)
-        return summarize(res, params, n_users, fleet.r)
+        return summarize(res, params, n_users, fleet.r, max_events)
 
     f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
     return jax.jit(f)(deadlines, budgets)

@@ -44,6 +44,8 @@ EV_COMPLETION = 2   # internal completion forecast      (paper section 3.5)
 EV_RETURN = 3       # Gridlet back at the broker        (GRIDLET_RETURN)
 EV_BROKER = 4       # periodic scheduling event         (EXPERIMENT)
 EV_END = 5          # END_OF_SIMULATION
+# The engine's own event kinds (incl. FAILURE/RECOVERY/RESERVATION/
+# CALENDAR_STEP) are the des.K_* trace codes -- see core/des.py.
 
 INF = float("inf")
 

@@ -6,7 +6,8 @@ This is the simulator's hot spot at fleet scale: the superstep engine
 resource-major ``[R, J]`` job-slot table.  Per resource row:
 
   rank_j  = |{j' : (rem_j', tie_j') < (rem_j, tie_j)}|  (within the row)
-  k       = g // P,  extra = g % P,  msc = (P - extra) * k
+  P_eff   = num_pe - pe_blocked                      (reservation windows)
+  k       = g // P_eff,  extra = g % P_eff,  msc = (P_eff - extra) * k
   rate_j  = eff_mips / (k + [rank_j >= msc])        (Fig 8 shares; a
             space-shared row instead grants every job a whole PE)
   t_j     = remaining_j / rate_j
@@ -14,13 +15,33 @@ resource-major ``[R, J]`` job-slot table.  Per resource row:
   argmin  = col of the earliest completion, ties broken by tie key
   occ     = number of occupied job slots (space-shared PE occupancy)
 
+Shape/dtype conventions: ``remaining``/``tie``/``rate`` are f32[R, J]
+(J = job slots per resource, R padded to the block size); ``mips_eff``,
+``num_pe``, ``policy``, ``pe_blocked``, ``row_ok`` are per-row [R]
+vectors; ``t_min`` is f32[R], ``argmin_col``/``occupancy`` i32[R].
+
+Masking inputs (both optional, identity when omitted):
+
+  ``pe_blocked`` [R] f32 -- PEs held by advance-reservation windows.
+      Time-shared rows compute Fig 8 shares over the remaining
+      ``num_pe - pe_blocked`` PEs; a fully-reserved time-shared row
+      contributes nothing (rate 0, excluded from argmin/occupancy).
+      Space-shared rows are unaffected here: the engine enforces
+      reservations at admission and never preempts residents.
+  ``row_ok``     [R] bool -- resource up/registered mask (failures).
+      A down row's slots are masked out of the rate, argmin and
+      occupancy outputs entirely.
+
 The per-row argmin and occupancy outputs exist so the engine needs no
 second pass over the state to locate the completing job or to count busy
 PEs for queue admission.
 
 The ``tie`` input carries the engine's FIFO tie-break priority (the flat
 gridlet index): equal-remaining jobs must receive MaxShare in submission
-order for the Fig 9 / Table 1 trace to be reproduced exactly.
+order for the Fig 9 / Table 1 trace to be reproduced exactly.  (Across
+event *kinds* the engine orders same-time batches COMPLETION > FAILURE >
+RECOVERY > RESERVATION > RETURN > ARRIVAL > CALENDAR_STEP > BROKER; this
+kernel only produces the COMPLETION forecasts.)
 
 Tiling: grid over resource blocks; each block holds [block_r, J] state in
 VMEM (J <= 256 -> <=256 KB fp32).  Ranking uses an explicit [J, J]
@@ -43,15 +64,23 @@ BIG = 3.0e38
 
 
 def _kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
-            rate_ref, tmin_ref, amin_ref, occ_ref):
+            blocked_ref, ok_ref, rate_ref, tmin_ref, amin_ref, occ_ref):
     rem = remaining_ref[...]                       # [R, J] f32
     tie = tie_ref[...]                             # [R, J] f32
     mips = mips_ref[...]                           # [R, 1]
     npe = pe_ref[...]                              # [R, 1] f32
     pol = policy_ref[...]                          # [R, 1] f32 (1 = space)
+    blk = blocked_ref[...]                         # [R, 1] f32 reserved PEs
+    ok = ok_ref[...]                               # [R, 1] f32 (1 = up)
     r, j = rem.shape
 
-    valid = (rem > 0.0) & (rem < BIG)
+    # Reservation windows shrink the PE pool of time-shared rows; a down
+    # (row_ok == 0) row, or a fully-reserved time-shared row, is dead:
+    # every slot masked out of the rate / argmin / occupancy outputs.
+    npe_e = jnp.maximum(npe - blk, 0.0)
+    dead = (ok < 0.5) | ((pol < 0.5) & (npe_e < 0.5))
+
+    valid = (rem > 0.0) & (rem < BIG) & ~dead
     g = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)  # [R,1]
 
     # rank within row by (remaining, tie): pairwise comparison matrix
@@ -63,12 +92,12 @@ def _kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
     rank = jnp.sum((lt | tie_lt) & valid[:, None, :],
                    axis=2).astype(jnp.float32)     # [R, J]
 
-    k = jnp.floor(g / jnp.maximum(npe, 1.0))       # [R,1] min jobs per PE
-    extra = g - k * jnp.maximum(npe, 1.0)
-    msc = (npe - extra) * k                        # max-share count
+    k = jnp.floor(g / jnp.maximum(npe_e, 1.0))     # [R,1] min jobs per PE
+    extra = g - k * jnp.maximum(npe_e, 1.0)
+    msc = (npe_e - extra) * k                      # max-share count
     divisor = k + (rank >= msc).astype(jnp.float32)
-    # g <= P: everyone gets a full PE
-    divisor = jnp.where(g <= npe, 1.0, divisor)
+    # g <= P_eff: everyone gets a full PE
+    divisor = jnp.where(g <= npe_e, 1.0, divisor)
     # space-shared rows: every resident job owns a whole PE
     divisor = jnp.where(pol > 0.5, 1.0, divisor)
     rate = jnp.where(valid, mips / jnp.maximum(divisor, 1.0), 0.0)
@@ -89,27 +118,37 @@ def _kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
     occ_ref[...] = g.astype(jnp.int32)
 
 
-def _default_inputs(remaining, tie, policy):
+def _default_inputs(remaining, tie, policy, pe_blocked, row_ok):
     r, j = remaining.shape
     if tie is None:
         tie = jnp.broadcast_to(
             jnp.arange(j, dtype=jnp.float32)[None, :], (r, j))
     if policy is None:
         policy = jnp.zeros((r,), jnp.float32)
+    if pe_blocked is None:
+        pe_blocked = jnp.zeros((r,), jnp.float32)
+    if row_ok is None:
+        row_ok = jnp.ones((r,), jnp.float32)
     return (remaining.astype(jnp.float32), jnp.asarray(tie, jnp.float32),
-            jnp.asarray(policy, jnp.float32).reshape(r))
+            jnp.asarray(policy, jnp.float32).reshape(r),
+            jnp.asarray(pe_blocked, jnp.float32).reshape(r),
+            jnp.asarray(row_ok, jnp.float32).reshape(r))
 
 
-def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None, *,
+def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None,
+               pe_blocked=None, row_ok=None, *,
                block_r: int = 8, interpret: bool = False):
     """remaining: [R, J] (<=0 or >=BIG marks empty slots); tie: [R, J]
     FIFO tie-break priority (defaults to the col index); mips_eff,
-    num_pe, policy: [R] (policy 0 = time-shared, 1 = space-shared).
-    Returns (rate [R, J], t_min [R], argmin_col [R] i32, occupancy [R]
-    i32); argmin_col is J for empty rows.
+    num_pe, policy: [R] (policy 0 = time-shared, 1 = space-shared);
+    pe_blocked: [R] reservation-held PEs (default 0); row_ok: [R]
+    up-mask (default all-up).  Returns (rate [R, J], t_min [R],
+    argmin_col [R] i32, occupancy [R] i32); argmin_col is J for empty
+    (or dead) rows.
     """
     r, j = remaining.shape
-    remaining, tie, policy = _default_inputs(remaining, tie, policy)
+    remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
+        remaining, tie, policy, pe_blocked, row_ok)
     block_r = min(block_r, r)
     assert r % block_r == 0, "pad the resource axis upstream"
 
@@ -119,6 +158,8 @@ def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None, *,
         in_specs=[
             pl.BlockSpec((block_r, j), lambda i: (i, 0)),
             pl.BlockSpec((block_r, j), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
@@ -139,11 +180,14 @@ def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None, *,
     )(remaining, tie,
       mips_eff.astype(jnp.float32).reshape(r, 1),
       num_pe.astype(jnp.float32).reshape(r, 1),
-      policy.reshape(r, 1))
+      policy.reshape(r, 1),
+      pe_blocked.reshape(r, 1),
+      row_ok.reshape(r, 1))
     return rate, tmin[:, 0], amin[:, 0], occ[:, 0]
 
 
-def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None):
+def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None,
+                   pe_blocked=None, row_ok=None):
     """Vectorised jnp fallback with identical semantics to the kernel.
 
     The per-row O(J log J) lexsort replaces the kernel's O(J^2) pairwise
@@ -151,12 +195,18 @@ def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None):
     run interpreted.  Bitwise-identical share arithmetic to ``_kernel``.
     """
     r, j = remaining.shape
-    remaining, tie, policy = _default_inputs(remaining, tie, policy)
+    remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
+        remaining, tie, policy, pe_blocked, row_ok)
     mips = mips_eff.astype(jnp.float32)[:, None]
     npe = num_pe.astype(jnp.float32)[:, None]
     pol = policy[:, None]
+    blk = pe_blocked[:, None]
+    ok = row_ok[:, None]
 
-    valid = (remaining > 0.0) & (remaining < BIG)
+    npe_e = jnp.maximum(npe - blk, 0.0)
+    dead = (ok < 0.5) | ((pol < 0.5) & (npe_e < 0.5))
+
+    valid = (remaining > 0.0) & (remaining < BIG) & ~dead
     g = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
 
     key = jnp.where(valid, remaining, BIG)
@@ -164,11 +214,11 @@ def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None):
     order = jnp.lexsort((tkey, key), axis=-1)       # cols by (rem, tie)
     rank = jnp.argsort(order, axis=-1).astype(jnp.float32)  # inverse perm
 
-    k = jnp.floor(g / jnp.maximum(npe, 1.0))
-    extra = g - k * jnp.maximum(npe, 1.0)
-    msc = (npe - extra) * k
+    k = jnp.floor(g / jnp.maximum(npe_e, 1.0))
+    extra = g - k * jnp.maximum(npe_e, 1.0)
+    msc = (npe_e - extra) * k
     divisor = k + (rank >= msc).astype(jnp.float32)
-    divisor = jnp.where(g <= npe, 1.0, divisor)
+    divisor = jnp.where(g <= npe_e, 1.0, divisor)
     divisor = jnp.where(pol > 0.5, 1.0, divisor)
     rate = jnp.where(valid, mips / jnp.maximum(divisor, 1.0), 0.0)
 

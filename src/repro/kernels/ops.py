@@ -45,11 +45,15 @@ def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk=256, block_h=8,
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
-def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None, *,
-               block_r=8, interpret=None):
+def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None,
+               pe_blocked=None, row_ok=None, *, block_r=8,
+               interpret=None):
     """GridSim Fig 8 share allocation + completion forecast.
 
-    Returns (rate [R, J], t_min [R], argmin_col [R], occupancy [R]).
+    ``pe_blocked`` [R] masks reservation-held PEs out of the share pool;
+    ``row_ok`` [R] masks failed resources out of every output (see
+    kernels.event_scan).  Returns (rate [R, J], t_min [R], argmin_col
+    [R], occupancy [R]).
     Routing: compiled Pallas on TPU (interpret=None/False); the
     vectorised XLA fallback on non-TPU hosts (interpret=None), so the
     engine hot path stays fast on CPU; Pallas interpret mode only when
@@ -57,7 +61,10 @@ def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None, *,
     """
     if interpret is None and jax.default_backend() != "tpu":
         return _event.event_scan_xla(remaining, mips_eff, num_pe,
-                                     tie=tie, policy=policy)
+                                     tie=tie, policy=policy,
+                                     pe_blocked=pe_blocked,
+                                     row_ok=row_ok)
     return _event.event_scan(remaining, mips_eff, num_pe, tie=tie,
-                             policy=policy, block_r=block_r,
+                             policy=policy, pe_blocked=pe_blocked,
+                             row_ok=row_ok, block_r=block_r,
                              interpret=_auto_interpret(interpret))

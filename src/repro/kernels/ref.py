@@ -58,14 +58,18 @@ def ssd_ref(x, dt, a, b_mat, c_mat):
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
 
 
-def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None):
+def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None,
+                   pe_blocked=None, row_ok=None):
     """Paper Fig 8, directly transcribed per resource row.
 
     remaining: [R, J] (<=0 / huge marks empty); mips_eff, num_pe,
     policy: [R] (policy 1 = space-shared: every job owns a whole PE);
-    tie: [R, J] FIFO tie-break priority (default: col index).
+    tie: [R, J] FIFO tie-break priority (default: col index);
+    pe_blocked: [R] PEs held by reservation windows (shrink the
+    time-shared share pool; space-shared admission is enforced by the
+    engine); row_ok: [R] up-mask -- a down row contributes nothing.
     Returns (rate [R, J], t_min [R], argmin_col [R], occupancy [R]);
-    argmin_col is J for empty rows.
+    argmin_col is J for empty (or dead) rows.
     """
     import numpy as np
     remaining = np.asarray(remaining, np.float64)
@@ -81,14 +85,25 @@ def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None):
         policy = np.zeros((r_n,), np.int64)
     else:
         policy = np.asarray(policy, np.int64)
+    if pe_blocked is None:
+        pe_blocked = np.zeros((r_n,), np.float64)
+    else:
+        pe_blocked = np.asarray(pe_blocked, np.float64)
+    if row_ok is None:
+        row_ok = np.ones((r_n,), bool)
+    else:
+        row_ok = np.asarray(row_ok, np.float64) > 0.5
     rate = np.zeros((r_n, j_n))
     tmin = np.full((r_n,), 3.0e38)
     amin = np.full((r_n,), j_n, np.int32)
     occ = np.zeros((r_n,), np.int32)
     for r in range(r_n):
+        pe = int(num_pe[r]) - int(pe_blocked[r])
+        if not row_ok[r] or (policy[r] == 0 and pe <= 0):
+            continue                       # dead row: masked entirely
         jobs = [(remaining[r, j], tie[r, j], j) for j in range(j_n)
                 if 0 < remaining[r, j] < 3.0e38]
-        g, pe = len(jobs), int(num_pe[r])
+        g = len(jobs)
         occ[r] = g
         if g == 0:
             continue

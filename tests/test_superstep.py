@@ -1,6 +1,7 @@
 """Superstep engine contract: golden Table 1 trace, pre-refactor
-result equivalence, engine <-> kernel <-> oracle rate agreement, and
-the job-slot / calendar overflow invariants."""
+result equivalence, engine <-> kernel <-> oracle rate agreement, the
+job-slot / calendar overflow invariants, and the pluggable event
+sources (failure/recovery, calendar load steps, reservations)."""
 import json
 import os
 
@@ -14,7 +15,7 @@ try:
 except ImportError:  # container without dev deps: seeded fallback
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core import engine, gridlet, resource, simulation, types
+from repro.core import des, engine, gridlet, resource, simulation, types
 from repro.core.types import replace as treplace
 from repro.kernels import ops, ref
 from repro.kernels.event_scan import event_scan_xla
@@ -186,3 +187,141 @@ def test_broker_experiment_overflow_zero():
                                   opt=types.OPT_COST, n_users=2)
     assert int(r.overflow) == 0
     assert float(np.asarray(r.n_done).sum()) > 0
+
+
+# ----------------------------------------------------------------------
+# Pluggable event sources.
+# ----------------------------------------------------------------------
+def test_zero_rate_sources_reproduce_golden():
+    """With all three new sources registered but their rates zero/empty,
+    the 20-user WWG scenario is bit-for-bit identical to a run without
+    any scenario (which itself must match the pre-refactor golden)."""
+    ref_run = GOLDEN["20u_100j"]
+    fleet = resource.wwg_fleet()
+    g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=100, n_users=20)
+    kw = dict(deadline=2000.0, budget=22000.0, opt=types.OPT_COST,
+              n_users=20)
+    base = simulation.run_experiment(g, fleet, **kw)
+    zero = simulation.run_experiment(
+        g, fleet, **kw,
+        scenario=simulation.Scenario(mtbf=0.0, mttr=0.0,
+                                     reservations=[], seed=123))
+    for f in ("n_done", "spent", "term_time", "n_steps", "n_events"):
+        assert np.array_equal(np.asarray(getattr(base, f)),
+                              np.asarray(getattr(zero, f))), f
+    assert int(zero.n_failed) == 0 and int(zero.n_resubmits) == 0
+    np.testing.assert_allclose(np.asarray(zero.n_done), ref_run["n_done"])
+    np.testing.assert_allclose(np.asarray(zero.spent), ref_run["spent"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(zero.term_time),
+                               ref_run["term_time"], rtol=1e-5)
+
+
+def test_failure_resubmits_without_double_billing():
+    """Failures mid-execution move gridlets to FAILED with a refund; the
+    broker resubmits them and the total spend is exactly the sum of the
+    committed costs of the jobs that eventually completed."""
+    fleet = resource.make_fleet([2, 2], [1.0, 1.0], [1.0, 2.0],
+                                types.TIME_SHARED)
+    g = gridlet.make_batch(jnp.full((12,), 30.0))
+    sc = simulation.Scenario(mtbf=60.0, mttr=10.0, seed=0)
+    r = simulation.run_experiment(g, fleet, deadline=2000.0,
+                                  budget=100000.0, opt=types.OPT_COST,
+                                  n_users=1, scenario=sc)
+    status = np.asarray(r.gridlets.status)
+    assert int(r.n_failed) > 0                  # seed 0 produces failures
+    # every FAILED gridlet was eventually resubmitted and completed
+    assert np.all(status == types.DONE)
+    assert int(r.n_resubmits) >= int(r.n_failed) > 0
+    # no double billing: spend == committed cost of completed gridlets
+    cost_done = float(np.asarray(r.gridlets.cost)[status ==
+                                                  types.DONE].sum())
+    assert float(r.spent[0]) == pytest.approx(cost_done, rel=1e-6)
+    assert float(np.asarray(r.downtime).sum()) > 0.0
+    assert int(r.overflow) == 0
+
+
+def test_calendar_step_alone_advances_time():
+    """A weekend boundary is a first-class event: the engine lands a
+    superstep on it with no other event due, and the piecewise-constant
+    load integrates exactly (200 MI at rate 1 until t=120, rate 0.5 over
+    the 48 h weekend, rate 1 after t=168 -> finish at 224)."""
+    fleet = resource.make_fleet([1], 1.0, 1.0, types.TIME_SHARED,
+                                weekend_load=0.5, baud_rate=jnp.inf)
+    g = gridlet.make_batch([200.0])
+    r = engine.run_direct(g, fleet, 0, 0.0, max_events=64)
+    assert float(r.gridlets.finish[0]) == 224.0
+    tt, kind, _ = (np.asarray(x) for x in r.trace)
+    m = kind >= 0
+    steps = tt[kind == des.K_CALENDAR]
+    np.testing.assert_allclose(steps[:2], [120.0, 168.0])
+    # the two boundary supersteps carry ONLY the calendar event
+    assert list(zip(tt[m].tolist(), kind[m].tolist())) == [
+        (0.0, des.K_ARRIVAL), (120.0, des.K_CALENDAR),
+        (168.0, des.K_CALENDAR), (224.0, des.K_COMPLETION),
+        (224.0, des.K_RETURN)]
+
+
+def test_reservation_blocks_reserved_pes():
+    """A [0, 12) window holding 2 of 4 space-shared PEs admits only two
+    of four simultaneous arrivals; the other two run when the window
+    closes (a RESERVATION event re-admits them at t=12)."""
+    fleet = resource.make_fleet([4], 1.0, 1.0, types.SPACE_SHARED,
+                                baud_rate=jnp.inf)
+    g = gridlet.make_batch([20.0] * 4)
+    r = engine.run_direct(g, fleet, 0, 0.0, max_events=64,
+                          reservations=[(0, 2, 0.0, 12.0)])
+    np.testing.assert_allclose(sorted(np.asarray(r.gridlets.finish)),
+                               [20.0, 20.0, 32.0, 32.0])
+    tt, kind, _ = (np.asarray(x) for x in r.trace)
+    assert 12.0 in tt[kind == des.K_RESERVATION]
+    # without the reservation all four PEs admit immediately
+    r0 = engine.run_direct(g, fleet, 0, 0.0, max_events=64)
+    np.testing.assert_allclose(np.asarray(r0.gridlets.finish), 20.0)
+    assert int(r.overflow) == 0
+
+
+def test_reservation_shrinks_time_shared_shares():
+    """Blocked PEs leave the time-shared share pool: 2 equal jobs on a
+    2-PE resource with 1 PE reserved run at half speed each."""
+    fleet = resource.make_fleet([2], 1.0, 1.0, types.TIME_SHARED,
+                                baud_rate=jnp.inf)
+    g = gridlet.make_batch([10.0, 10.0])
+    r = engine.run_direct(g, fleet, 0, 0.0, max_events=64,
+                          reservations=[(0, 1, 0.0, 100.0)])
+    np.testing.assert_allclose(np.asarray(r.gridlets.finish), 20.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_event_scan_mask_paths_agree(seed):
+    """The pe_blocked / row_ok masking agrees across Pallas interpret,
+    the XLA fallback and the numpy oracle."""
+    rng = np.random.RandomState(seed)
+    r, j = 8, 12
+    remaining = rng.exponential(50.0, (r, j)).astype(np.float32)
+    remaining[rng.rand(r, j) < 0.3] = 0.0
+    mips = rng.uniform(1.0, 500.0, (r,)).astype(np.float32)
+    pes = rng.randint(1, 9, (r,)).astype(np.int32)
+    tie = rng.permutation(r * j).reshape(r, j).astype(np.float32)
+    pol = rng.randint(0, 2, (r,)).astype(np.int32)
+    blocked = rng.randint(0, 9, (r,)).astype(np.float32)
+    ok = (rng.rand(r) < 0.7).astype(np.float32)
+    args = (jnp.asarray(remaining), jnp.asarray(mips), jnp.asarray(pes))
+    kw = dict(tie=jnp.asarray(tie), policy=jnp.asarray(pol),
+              pe_blocked=jnp.asarray(blocked), row_ok=jnp.asarray(ok))
+    pallas_out = ops.event_scan(*args, **kw, interpret=True)
+    xla_out = event_scan_xla(*args, **kw)
+    ref_out = ref.event_scan_ref(remaining, mips, pes, tie=tie,
+                                 policy=pol, pe_blocked=blocked,
+                                 row_ok=ok)
+    for got in (xla_out, ref_out):
+        np.testing.assert_allclose(np.asarray(pallas_out[0]),
+                                   np.asarray(got[0]), rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(pallas_out[1]),
+                                   np.asarray(got[1]), rtol=1e-4)
+        assert np.array_equal(np.asarray(pallas_out[3]),
+                              np.asarray(got[3]))
+    assert np.array_equal(np.asarray(pallas_out[2]),
+                          np.asarray(xla_out[2]))
