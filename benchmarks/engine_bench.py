@@ -2,16 +2,23 @@
 
 The 2002 toolkit ran one JVM thread per entity; the array engine's cost
 is events/second at fleet scale.  Three WWG scenarios (1 / 20 / 200
-users) are timed and written to ``benchmarks/artifacts/BENCH_engine.json``
-with events/sec, supersteps and wall-clock, so future PRs have a perf
-trajectory.  The 20-user cell is also compared against the recorded
-pre-superstep engine (tests/data/golden_pre_refactor.json): the
-superstep refactor must keep the ExperimentResult identical while
-running >= 2x fewer while-loop iterations.
+users) plus a failure scenario are timed and written to
+``benchmarks/artifacts/BENCH_engine.json`` with events/sec, while-loop
+iterations and wall-clock, so future PRs have a perf trajectory (the
+full schema and the PR-over-PR table live in docs/PERFORMANCE.md).
+
+Each scenario runs twice: once with the k-step speculative superstep
+batching that is the engine default (``engine.DEFAULT_BATCH``) -- the
+timed run -- and once with ``batch=1`` to record the iteration-count
+baseline and assert the two runs are bit-for-bit identical
+(``batched_identical``).  The 20-user cell is additionally compared
+against the recorded pre-superstep engine
+(tests/data/golden_pre_refactor.json): results must stay identical
+while while-loop iterations keep shrinking (``iteration_ratio``).
 
 Sized for the 1-core CPU container (the kernel routes through its XLA
 fallback there); the same jit'd program is the TPU-target workload for
-kernels.event_scan.
+kernels.event_scan / event_scan_slab.
 """
 from __future__ import annotations
 
@@ -22,7 +29,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import gridlet, resource, simulation, types
+from repro.core import engine, gridlet, resource, simulation, types
 
 from .common import art_path
 
@@ -32,7 +39,8 @@ GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # (n_users, n_jobs_per_user, scenario): the trailing cell re-runs the
 # 20-user workload with the failure/recovery event source live
 # (MTBF=500, MTTR=25) so the perf trajectory tracks the dynamic-
-# resource path, not just the static fleet.
+# resource path -- including how far dense interference degrades the
+# speculation horizon -- not just the static fleet.
 SCENARIOS = (
     (1, 200, None),
     (20, 100, None),
@@ -41,13 +49,15 @@ SCENARIOS = (
 )
 
 
-def _one(fleet, n_users, n_jobs, scenario):
+def _one(fleet, n_users, n_jobs, scenario, batch, timed=True):
     g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
                           n_users=n_users)
     kw = dict(deadline=2000.0, budget=22000.0, opt=types.OPT_COST,
-              n_users=n_users, scenario=scenario)
+              n_users=n_users, scenario=scenario, batch=batch)
     r = simulation.run_experiment(g, fleet, **kw)      # warmup/compile
     jax.block_until_ready(r.spent)
+    if not timed:       # baseline pass: results only, skip the re-run
+        return r, float("nan")
     t0 = time.perf_counter()
     r = simulation.run_experiment(g, fleet, **kw)
     jax.block_until_ready(r.spent)
@@ -63,15 +73,30 @@ def run():
         golden = {}
     report, out = {}, []
     for n_users, n_jobs, scenario in SCENARIOS:
-        r, wall = _one(fleet, n_users, n_jobs, scenario)
+        r, wall = _one(fleet, n_users, n_jobs, scenario,
+                       engine.DEFAULT_BATCH)
+        r1, _ = _one(fleet, n_users, n_jobs, scenario, 1, timed=False)
         events = int(np.asarray(r.n_events))
         steps = int(np.asarray(r.n_steps))
+        steps_k1 = int(np.asarray(r1.n_steps))
         cell = {
             "n_users": n_users,
             "n_jobs_per_user": n_jobs,
+            "batch": engine.DEFAULT_BATCH,
             "wall_s": wall,
             "events": events,
             "supersteps": steps,
+            "spec_supersteps": int(np.asarray(r.n_spec)),
+            "supersteps_k1": steps_k1,
+            "batch_iteration_ratio": steps_k1 / max(steps, 1),
+            "batched_identical": bool(
+                np.array_equal(np.asarray(r.n_done),
+                               np.asarray(r1.n_done)) and
+                np.array_equal(np.asarray(r.spent),
+                               np.asarray(r1.spent)) and
+                np.array_equal(np.asarray(r.term_time),
+                               np.asarray(r1.term_time)) and
+                int(np.asarray(r.n_events)) == int(np.asarray(r1.n_events))),
             "events_per_sec": events / max(wall, 1e-9),
             "events_per_superstep": events / max(steps, 1),
             "n_done": float(np.asarray(r.n_done).sum()),
@@ -100,10 +125,12 @@ def run():
                             rtol=1e-5))
         report[name] = cell
         derived = (f"events/s~{cell['events_per_sec']:.0f} "
-                   f"steps={steps} done={cell['n_done']:.0f}")
+                   f"steps={steps} (k1={steps_k1}, "
+                   f"{cell['batch_iteration_ratio']:.2f}x) "
+                   f"done={cell['n_done']:.0f} "
+                   f"identical={cell['batched_identical']}")
         if "iteration_ratio" in cell:
-            derived += (f" iters_vs_pre={cell['iteration_ratio']:.2f}x "
-                        f"identical={cell['result_identical']}")
+            derived += f" iters_vs_pre={cell['iteration_ratio']:.2f}x"
         if "n_resubmits" in cell:
             derived += (f" failed={cell['n_failed']} "
                         f"resub={cell['n_resubmits']}")

@@ -1,0 +1,78 @@
+"""Render ``BENCH_engine.json`` as a GitHub-flavoured markdown table.
+
+Used by CI to surface the engine perf trajectory in the Actions job
+summary (``$GITHUB_STEP_SUMMARY``) so events/sec or batching regressions
+are visible directly in the PR checks:
+
+  # committed artifact only
+  python benchmarks/render_bench.py benchmarks/artifacts/BENCH_engine.json
+
+  # fresh run vs the committed artifact (delta columns)
+  python benchmarks/render_bench.py fresh.json --baseline committed.json
+
+Pure stdlib; schema documented in docs/PERFORMANCE.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _fmt(v, nd=0):
+    if v is None:
+        return "--"
+    return f"{v:.{nd}f}"
+
+
+def _delta(new, old):
+    """Signed percentage delta; positive = new is larger."""
+    if new is None or old in (None, 0):
+        return "--"
+    pct = 100.0 * (new - old) / old
+    return f"{pct:+.1f}%"
+
+
+def render(report: dict, baseline: dict | None = None) -> str:
+    cols = ["scenario", "events/sec", "while-loop iters",
+            "events/superstep", "events", "identical"]
+    if baseline is not None:
+        cols += ["Δ events/sec", "Δ events/superstep"]
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "---|" * len(cols)]
+    for name, cell in sorted(report.items()):
+        eps = cell.get("events_per_sec")
+        epb = cell.get("events_per_superstep")
+        ident = cell.get("batched_identical",
+                         cell.get("result_identical"))
+        row = [name, _fmt(eps), _fmt(cell.get("supersteps")),
+               _fmt(epb, 2), _fmt(cell.get("events")),
+               "--" if ident is None else ("yes" if ident else "**NO**")]
+        if baseline is not None:
+            base = baseline.get(name, {})
+            row += [_delta(eps, base.get("events_per_sec")),
+                    _delta(epb, base.get("events_per_superstep"))]
+        lines.append("| " + " | ".join(row) + " |")
+    if baseline is not None:
+        lines.append("")
+        lines.append("Δ columns compare against the committed artifact "
+                     "(wall-clock varies with runner load; "
+                     "events/superstep is deterministic).")
+    return "\n".join(lines)
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("artifact", help="BENCH_engine.json to render")
+    p.add_argument("--baseline", default=None,
+                   help="optional baseline BENCH_engine.json for deltas")
+    p.add_argument("--title", default="Engine throughput "
+                   "(benchmarks/artifacts/BENCH_engine.json)")
+    args = p.parse_args()
+    report = json.load(open(args.artifact))
+    baseline = json.load(open(args.baseline)) if args.baseline else None
+    print(f"### {args.title}\n")
+    print(render(report, baseline))
+
+
+if __name__ == "__main__":
+    main()

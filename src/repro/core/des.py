@@ -48,10 +48,26 @@ object with
     nothing is due (zero-rate sources then cost nothing and perturb
     no result -- the engine relies on this for bit-for-bit
     reproducibility of scenarios that do not use a source).
+  * ``horizon(state, t_max) -> f32[]`` -- the **speculation-safety
+    hook** (optional; defaults to ``next_time(state)``).  The engine's
+    k-step batched superstep (engine.step_batched) speculatively
+    applies several consecutive event timestamps inside one while-loop
+    iteration; ``horizon`` must return a lower bound on every instant
+    at which this source could fire -- or otherwise invalidate
+    speculation -- during ``(state.t, t_max]``, *given that only
+    speculation-safe events apply in between*.  The default (the
+    source's own ``next_time``) is always safe because the batched path
+    cuts speculation strictly before the earliest horizon: the source
+    is then guaranteed to be applied by the ordinary superstep
+    machinery, never skipped over.  A source whose firings commute with
+    speculation (COMPLETION and RETURN: they change no other source's
+    pending instant to an earlier value) overrides it with
+    :func:`no_interference` to keep the horizon open.
 
 :class:`FnSource` is the plain-closure implementation the engine and
 user extensions build sources from; see docs/ARCHITECTURE.md for the
-"add a new event source" walkthrough.
+"add a new event source" walkthrough (including the ``horizon`` hook)
+and docs/PERFORMANCE.md for the speculation-horizon safety argument.
 """
 from __future__ import annotations
 
@@ -87,24 +103,44 @@ PRIORITY_ORDER = (K_COMPLETION, K_FAILURE, K_RECOVERY, K_RESERVATION,
                   K_RETURN, K_ARRIVAL, K_CALENDAR, K_BROKER)
 
 
+def no_interference(state, t_max) -> jax.Array:
+    """``horizon_fn`` for speculation-safe sources: never cuts the
+    speculation horizon.  Correct only for sources whose firings cannot
+    pull any *other* source's pending instant earlier (COMPLETION and
+    RETURN satisfy this; see docs/PERFORMANCE.md for the argument)."""
+    return INF
+
+
 @dataclasses.dataclass(frozen=True)
 class FnSource:
-    """An :class:`EventSource` built from two closures.
+    """An :class:`EventSource` built from closures.
 
     ``next_time``/``apply`` close over whatever static context they need
     (fleet arrays, params, the engine's per-superstep scratch dict);
-    the engine only sees the uniform protocol.
+    the engine only sees the uniform protocol.  ``horizon_fn`` is
+    optional: when omitted, ``horizon`` falls back to ``next_time`` --
+    the conservative choice that makes any firing of this source cut
+    the k-step speculation horizon.
     """
     kind: int
     name: str
     next_time_fn: Callable
     apply_fn: Callable
+    horizon_fn: Callable | None = None
 
     def next_time(self, state) -> jax.Array:
         return self.next_time_fn(state)
 
     def apply(self, state, now):
         return self.apply_fn(state, now)
+
+    def horizon(self, state, t_max) -> jax.Array:
+        """Earliest instant in ``(state.t, t_max]`` at which this source
+        could interfere with speculative multi-timestamp batching; +inf
+        when it cannot.  Defaults to ``next_time`` (conservative)."""
+        if self.horizon_fn is None:
+            return self.next_time_fn(state)
+        return self.horizon_fn(state, t_max)
 
 
 @pytree_dataclass

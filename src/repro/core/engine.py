@@ -92,9 +92,32 @@ PE identity never affects the trace (all PEs of a resource are equal
 rated), so only the per-resource occupancy count is tracked.
 Reservations gate admission (never preempt residents).
 
+Speculative k-step batching
+---------------------------
+One while-loop iteration can commit more than one superstep: after the
+committing superstep, :func:`step_batched` derives a **speculation
+horizon** ``t_safe`` -- the min over every registered source's
+``horizon(state, t_max)`` hook (des.EventSource) -- and applies up to
+``k - 1`` further COMPLETION/RETURN supersteps whose instants lie
+*strictly* below it.  COMPLETION and RETURN are speculation-safe
+(applying them never pulls another source's pending instant earlier);
+FAILURE, RECOVERY, RESERVATION, ARRIVAL, CALENDAR_STEP and BROKER all
+cut the horizon at their own next instant, so the first timestamp where
+any of them could intervene ends the slab and the next committing
+superstep handles it with the full priority/tie-break machinery.  Each
+speculative superstep is the exact COMPLETION/RETURN slice of the
+general superstep, so results, traces and counters are bit-for-bit
+identical for every ``batch`` value -- only the iteration count (and
+the per-iteration dispatch constant) changes.  Dense-interference
+scenarios (failures every superstep) degrade gracefully: every
+micro-step declines and the loop behaves like ``batch=1``.  See
+docs/PERFORMANCE.md for the safety argument and measurements.
+
 ``SimState.n_events`` counts applied events, ``n_steps`` counts
-supersteps (while-loop iterations); ``overflow`` counts job-slot
-allocation failures and must stay 0 (drivers size ``J`` accordingly).
+while-loop iterations (committing supersteps), ``n_spec`` counts the
+speculative supersteps the batched path folded into them; ``overflow``
+counts job-slot allocation failures and must stay 0 (drivers size ``J``
+accordingly).
 """
 from __future__ import annotations
 
@@ -116,6 +139,7 @@ from .types import (CREATED, DONE, FAILED, FCFS, IN_TRANSIT, INF, QUEUED,
 
 TRACE_LEN = 64
 BLOCK_R = 8          # event_scan row blocking; resource axis padded to it
+DEFAULT_BATCH = 8    # superstep batching factor k (see step_batched)
 
 
 @pytree_dataclass
@@ -192,7 +216,10 @@ class SimState:
     downtime: jax.Array        # f32[R] accumulated down intervals
     rng_key: jax.Array         # PRNG key for the MTBF/MTTR streams
     n_events: jax.Array        # i32 applied events (batched kinds summed)
-    n_steps: jax.Array         # i32 supersteps (while-loop iterations)
+    n_steps: jax.Array         # i32 while-loop iterations (committing
+                               #     supersteps; speculative ones excluded)
+    n_spec: jax.Array          # i32 speculative supersteps applied by the
+                               #     k-step batched path
     n_trace: jax.Array         # i32 trace entries written
     n_failed: jax.Array        # i32 gridlets hit by a failure
     n_resubmits: jax.Array     # i32 FAILED gridlets re-dispatched
@@ -213,6 +240,7 @@ class SimResult(NamedTuple):
     n_failed: jax.Array
     n_resubmits: jax.Array
     downtime: jax.Array
+    n_spec: jax.Array
 
 
 # ----------------------------------------------------------------------
@@ -672,16 +700,21 @@ def _make_sources(fleet, params, n_users, ctx):
             lambda s: broker_mod.broker_event(s, fleet, params, n_users),
             lambda s: s, state)
 
+    # COMPLETION and RETURN are speculation-safe (horizon_fn): applying
+    # them never pulls another source's pending instant earlier, so they
+    # keep the k-step batching horizon open.  Every other source keeps
+    # the conservative default -- its own next_time cuts the horizon.
     sources = (
         des.FnSource(des.K_COMPLETION, "completion", completion_next,
-                     completion_apply),
+                     completion_apply, horizon_fn=des.no_interference),
         des.FnSource(des.K_FAILURE, "failure",
                      lambda s: s.next_fail.min(), failure_apply),
         des.FnSource(des.K_RECOVERY, "recovery",
                      lambda s: s.next_recover.min(), recovery_apply),
         des.FnSource(des.K_RESERVATION, "reservation", reservation_next,
                      reservation_apply),
-        des.FnSource(des.K_RETURN, "return", return_next, return_apply),
+        des.FnSource(des.K_RETURN, "return", return_next, return_apply,
+                     horizon_fn=des.no_interference),
         des.FnSource(des.K_ARRIVAL, "arrival", arrival_next,
                      arrival_apply),
         des.FnSource(des.K_CALENDAR, "calendar_step", calendar_next,
@@ -727,25 +760,14 @@ def _user_flags(state, params, fleet, n_users):
     return active, finished
 
 
-def step(state: SimState, fleet, params: SimParams, n_users: int):
-    """One superstep: ask every source for its next time, pick the
-    earliest t*, advance the Fig 8 share algebra over [t, t*), apply
-    every source due at t*."""
+def _advance_jobs(state, ctx, t_next, any_event, n_resources):
+    """Advance every running job analytically over [t, t_next) by the
+    kernel rates in ``ctx["scan"]``; records the completion batch
+    (``completes``/``res``) and its trace representative in ``ctx`` and
+    moves the clock to ``t_next``."""
     from .types import replace
-    n_resources = fleet.r
-    r_pad = state.row_gridlet.shape[0]
     g = state.g
     j_cap = state.row_gridlet.shape[1]
-
-    # ---- every source's earliest pending instant (priority order) ----
-    ctx = {}
-    sources = _make_sources(fleet, params, n_users, ctx)
-    times = jnp.stack([s.next_time(state) for s in sources])
-    t_min_all = times.min()
-    any_event = jnp.isfinite(t_min_all)
-    t_next = jnp.where(any_event, t_min_all, state.t)
-
-    # ---- advance every running job analytically over [t, t_next) -----
     rate_rj, tmin_rows, amin_rows, _ = ctx["scan"]
     res = jnp.clip(g.resource, 0, n_resources - 1)
     has_slot = (g.status == RUNNING) & (state.slot >= 0)
@@ -762,9 +784,68 @@ def step(state: SimState, fleet, params: SimParams, n_users: int):
     r_star = jnp.argmin(tmin_rows)
     who_c = state.row_gridlet[
         r_star, jnp.clip(amin_rows[r_star], 0, j_cap - 1)]
-    state = replace(state, g=replace(g, remaining=new_remaining), t=t_next)
     ctx["completes"], ctx["res"] = completes, res
     ctx[("who", des.K_COMPLETION)] = who_c
+    return replace(state, g=replace(g, remaining=new_remaining), t=t_next)
+
+
+def _alloc_newly(state, ctx, n_resources, r_pad):
+    """Allocate job slots for everything newly RUNNING this superstep.
+
+    Re-check status: a same-instant FAILURE may have killed a gridlet
+    completion_apply just admitted (it had no slot yet, so the failure
+    freed nothing) -- allocating for it would leak a ghost slot."""
+    newly = ctx["newly"] & (state.g.status == RUNNING)
+    res_now = jnp.clip(state.g.resource, 0, n_resources - 1)
+    return jax.lax.cond(
+        newly.any(),
+        lambda s: _alloc_slots(s, newly, res_now, n_resources, r_pad),
+        lambda s: s, state)
+
+
+def _bookkeep(state, fleet, params, n_users, kinds, counts, whos, t_next):
+    """Record termination instants, trace rows and the event counter for
+    one (full or speculative) superstep.  ``kinds``/``counts``/``whos``
+    are aligned [S] vectors in priority order; a kind with count 0
+    writes no trace row.  ``n_steps`` is NOT bumped here -- it counts
+    while-loop iterations and is owned by :func:`step`."""
+    from .types import replace
+    _, finished = _user_flags(state, params, fleet, n_users)
+    term = jnp.where(finished & ~jnp.isfinite(state.term_time),
+                     t_next, state.term_time)
+    fired = counts > 0
+    off = jnp.cumsum(fired.astype(jnp.int32)) - fired.astype(jnp.int32)
+    # Out-of-range positions (unfired kinds / full trace) are dropped.
+    pos = jnp.where(fired, state.n_trace + off, TRACE_LEN)
+    return replace(
+        state,
+        term_time=term,
+        n_events=state.n_events + jnp.sum(counts),
+        n_trace=state.n_trace + jnp.sum(fired, dtype=jnp.int32),
+        trace_t=state.trace_t.at[pos].set(t_next, mode="drop"),
+        trace_kind=state.trace_kind.at[pos].set(kinds, mode="drop"),
+        trace_who=state.trace_who.at[pos].set(whos, mode="drop"),
+    )
+
+
+def step(state: SimState, fleet, params: SimParams, n_users: int):
+    """One committing superstep: ask every source for its next time,
+    pick the earliest t*, advance the Fig 8 share algebra over [t, t*),
+    apply every source due at t*."""
+    from .types import replace
+    n_resources = fleet.r
+    r_pad = state.row_gridlet.shape[0]
+
+    # ---- every source's earliest pending instant (priority order) ----
+    ctx = {}
+    sources = _make_sources(fleet, params, n_users, ctx)
+    times = jnp.stack([s.next_time(state) for s in sources])
+    t_min_all = times.min()
+    any_event = jnp.isfinite(t_min_all)
+    t_next = jnp.where(any_event, t_min_all, state.t)
+
+    # ---- advance every running job analytically over [t, t_next) -----
+    state = _advance_jobs(state, ctx, t_next, any_event, n_resources)
     # All index wiring below is derived from source.kind, so splicing a
     # new source into _make_sources never renumbers the built-ins.
     pos_of = {s.kind: i for i, s in enumerate(sources)}
@@ -782,49 +863,122 @@ def step(state: SimState, fleet, params: SimParams, n_users: int):
         state = sources[i].apply(state, t_next)
 
     # ---- allocate job slots for everything newly RUNNING -------------
-    # Re-check status: a same-instant FAILURE may have killed a gridlet
-    # completion_apply just admitted (it had no slot yet, so the failure
-    # freed nothing) -- allocating for it would leak a ghost slot.
-    newly = ctx["newly"] & (state.g.status == RUNNING)
-    res_now = jnp.clip(state.g.resource, 0, n_resources - 1)
-    state = jax.lax.cond(
-        newly.any(),
-        lambda s: _alloc_slots(s, newly, res_now, n_resources, r_pad),
-        lambda s: s, state)
+    state = _alloc_newly(state, ctx, n_resources, r_pad)
 
     # ---- bookkeeping: termination instants, trace, counters ----------
-    _, finished = _user_flags(state, params, fleet, n_users)
-    term = jnp.where(finished & ~jnp.isfinite(state.term_time),
-                     t_next, state.term_time)
-
     # Per-source event counts: a batching source reported its own count
     # through ctx[("count", kind)]; the rest count 1 per firing.
     no_who = jnp.asarray(-1, jnp.int32)
     counts = jnp.stack([
         ctx.get(("count", s.kind), fired_t[i].astype(jnp.int32))
         for i, s in enumerate(sources)])
-    fired = counts > 0
     whos = jnp.stack([ctx.get(("who", s.kind), no_who) for s in sources])
-    off = jnp.cumsum(fired.astype(jnp.int32)) - fired.astype(jnp.int32)
-    # Out-of-range positions (unfired kinds / full trace) are dropped.
-    pos = jnp.where(fired, state.n_trace + off, TRACE_LEN)
     kinds = jnp.asarray([s.kind for s in sources], jnp.int32)
-    state = replace(
-        state,
-        term_time=term,
-        n_events=state.n_events + jnp.sum(counts),
-        n_steps=state.n_steps + 1,
-        n_trace=state.n_trace + jnp.sum(fired, dtype=jnp.int32),
-        trace_t=state.trace_t.at[pos].set(t_next, mode="drop"),
-        trace_kind=state.trace_kind.at[pos].set(kinds, mode="drop"),
-        trace_who=state.trace_who.at[pos].set(whos, mode="drop"),
-    )
+    state = _bookkeep(state, fleet, params, n_users, kinds, counts, whos,
+                      t_next)
+    return replace(state, n_steps=state.n_steps + 1)
+
+
+def _speculative_step(state, fleet, params, n_users, t_safe):
+    """One speculative micro-superstep of the k-step batched path.
+
+    Applies the earliest pending COMPLETION/RETURN batch if -- and only
+    if -- it lies *strictly* inside the speculation horizon ``t_safe``.
+    Inside the horizon no other source can fire (see
+    :func:`_speculation_horizon`), so the global earliest pending
+    instant is min(completion, return) and the full superstep machinery
+    reduces to exactly the COMPLETION/RETURN slice applied here -- the
+    resulting state, trace rows and counters are bit-for-bit what
+    :func:`step` would have produced.  Returns ``(state, fired)``;
+    ``fired`` False means the state was returned untouched (the caller
+    stops speculating: pending times only move when events apply).
+    """
+    n_resources = fleet.r
+    r_pad = state.row_gridlet.shape[0]
+    ctx = {}
+    sources = _make_sources(fleet, params, n_users, ctx)
+    by_kind = {s.kind: s for s in sources}
+    comp, ret = by_kind[des.K_COMPLETION], by_kind[des.K_RETURN]
+    t_next = jnp.minimum(comp.next_time(state), ret.next_time(state))
+    fire = jnp.isfinite(t_next) & (t_next < t_safe)
+
+    def live(s):
+        from .types import replace
+        s = _advance_jobs(s, ctx, t_next, fire, n_resources)
+        s = comp.apply(s, t_next)     # completions + queue admissions
+        s = ret.apply(s, t_next)      # incl. zero-delay returns
+        s = _alloc_newly(s, ctx, n_resources, r_pad)
+        kinds = jnp.asarray([des.K_COMPLETION, des.K_RETURN], jnp.int32)
+        counts = jnp.stack([ctx[("count", des.K_COMPLETION)],
+                            ctx[("count", des.K_RETURN)]])
+        whos = jnp.stack([ctx[("who", des.K_COMPLETION)],
+                          ctx[("who", des.K_RETURN)]])
+        s = _bookkeep(s, fleet, params, n_users, kinds, counts, whos,
+                      t_next)
+        return replace(s, n_spec=s.n_spec + 1)
+
+    return jax.lax.cond(fire, live, lambda s: s, state), fire
+
+
+def _speculation_horizon(state, fleet, params, n_users):
+    """Earliest instant at which any source could interfere with
+    speculative COMPLETION/RETURN batching, derived from the registered
+    sources' ``horizon`` hooks (des.EventSource) -- the safety condition
+    is owned by the sources, not hard-coded here.
+
+    COMPLETION and RETURN report +inf (their firings never pull another
+    source's pending instant earlier); every other source conservatively
+    reports its own ``next_time``.  The derived cut is safe because
+    within the slab only completions/returns apply, and none of them can
+    (re-)activate a broker, schedule a failure/recovery, move a
+    reservation or calendar boundary, or put a gridlet in transit.
+    """
+    ctx = {}
+    sources = _make_sources(fleet, params, n_users, ctx)
+    return jnp.stack([s.horizon(state, INF) for s in sources]).min()
+
+
+def step_batched(state: SimState, fleet, params: SimParams, n_users: int,
+                 batch: int):
+    """One batched while-loop iteration: a committing :func:`step`
+    (which handles whatever is due next, at full priority/tie-break
+    generality) followed by up to ``batch - 1`` speculative
+    COMPLETION/RETURN supersteps strictly inside the safety horizon.
+
+    When the horizon is empty (an interfering source is due immediately
+    -- dense failure scenarios, broker polls every superstep) every
+    micro-step declines and the iteration degrades gracefully to the
+    single-step path; ``batch=1`` skips the speculation machinery
+    entirely and IS the single-step path.
+    """
+    state = step(state, fleet, params, n_users)
+    if batch <= 1:
+        return state
+    t_safe = _speculation_horizon(state, fleet, params, n_users)
+
+    def micro(_, carry):
+        s, alive = carry
+
+        def go(s):
+            return _speculative_step(s, fleet, params, n_users, t_safe)
+
+        # Once a micro-step declines, every later one would too (the
+        # state, hence every pending time, is unchanged): short-circuit.
+        return jax.lax.cond(
+            alive, go, lambda s: (s, jnp.asarray(False)), s)
+
+    state, _ = jax.lax.fori_loop(
+        0, batch - 1, micro, (state, jnp.asarray(True)))
     return state
 
 
 def _continue(state, fleet, params, n_users, max_events):
+    # Bound TOTAL supersteps (committing + speculative) so the budget
+    # means the same thing for every batch value; a truncated batch=k
+    # run stops within k-1 supersteps of the batch=1 run (check
+    # ExperimentResult.truncated before comparing truncated runs).
     _, finished = _user_flags(state, params, fleet, n_users)
-    return (~finished.all()) & (state.n_steps < max_events)
+    return (~finished.all()) & (state.n_steps + state.n_spec < max_events)
 
 
 def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
@@ -860,6 +1014,7 @@ def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
         rng_key=key,
         n_events=jnp.asarray(0, jnp.int32),
         n_steps=jnp.asarray(0, jnp.int32),
+        n_spec=jnp.asarray(0, jnp.int32),
         n_trace=jnp.asarray(0, jnp.int32),
         n_failed=jnp.asarray(0, jnp.int32),
         n_resubmits=jnp.asarray(0, jnp.int32),
@@ -883,47 +1038,88 @@ def _finalize(state: SimState) -> SimResult:
                             state.trace_who),
                      n_steps=state.n_steps, overflow=state.overflow,
                      n_failed=state.n_failed,
-                     n_resubmits=state.n_resubmits, downtime=downtime)
+                     n_resubmits=state.n_resubmits, downtime=downtime,
+                     n_spec=state.n_spec)
 
 
 @functools.partial(jax.jit, static_argnames=("n_users", "max_events",
-                                             "max_jobs"))
-def _run_jit(gridlets, fleet, params, n_users, max_events, max_jobs):
+                                             "max_jobs", "batch"))
+def _run_jit(gridlets, fleet, params, n_users, max_events, max_jobs,
+             batch):
     state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
                        params=params)
     state = jax.lax.while_loop(
         lambda s: _continue(s, fleet, params, n_users, max_events),
-        lambda s: step(s, fleet, params, n_users),
+        lambda s: step_batched(s, fleet, params, n_users, batch),
         state)
     return _finalize(state)
 
 
 def run(gridlets, fleet, params: SimParams, n_users: int,
-        max_events: int, max_jobs: int | None = None) -> SimResult:
-    """Run a full experiment: broker-driven scheduling + execution."""
+        max_events: int, max_jobs: int | None = None,
+        batch: int = DEFAULT_BATCH) -> SimResult:
+    """Run a full experiment: broker-driven scheduling + execution.
+
+    ``batch`` (static) is the superstep batching factor k: each
+    while-loop iteration commits one superstep and then speculatively
+    applies up to k-1 further COMPLETION/RETURN supersteps inside the
+    safety horizon (see :func:`step_batched`).  ``batch=1`` is the
+    single-step path; any k produces bit-for-bit identical results for
+    runs that finish within ``max_events`` total supersteps (a
+    truncated run stops within k-1 supersteps of the k=1 cut -- check
+    ``truncated`` before comparing).
+    """
     return _run_jit(gridlets, fleet, params, n_users, max_events,
-                    max_jobs)
+                    max_jobs, batch)
 
 
 def run_inner(gridlets, fleet, params: SimParams, n_users: int,
-              max_events: int,
-              max_jobs: int | None = None) -> SimResult:
-    """Unjitted variant for use under an outer vmap/jit (sweep)."""
+              max_events: int, max_jobs: int | None = None,
+              batch: int = 1) -> SimResult:
+    """Unjitted variant for use under an outer vmap/jit (sweep).
+
+    ``batch`` defaults to 1 here: under vmap the speculative path's
+    conditionals lower to selects that evaluate both branches, so
+    batching saves no work for swept grids (results stay identical
+    either way).
+    """
     state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
                        params=params)
     state = jax.lax.while_loop(
         lambda s: _continue(s, fleet, params, n_users, max_events),
-        lambda s: step(s, fleet, params, n_users),
+        lambda s: step_batched(s, fleet, params, n_users, batch),
         state)
     return _finalize(state)
 
 
 def run_direct(gridlets, fleet, resource_idx, dispatch_time,
-               max_events: int, reservations=None) -> SimResult:
-    """Broker-less mode: Gridlets are pre-routed to ``resource_idx`` and
-    enter the network at ``dispatch_time`` -- the paper's Table 1 / Figs 9
-    and 12 scenario (arrivals straight into one resource).  Optional
-    ``reservations`` block PEs exactly as in the broker-driven mode.
+               max_events: int, reservations=None,
+               batch: int = DEFAULT_BATCH) -> SimResult:
+    """Broker-less mode: Gridlets are pre-routed into the fleet and the
+    brokers stay inert -- the paper's Table 1 / Figs 9 and 12 scenario
+    (arrivals straight into one resource).
+
+    Parameters
+    ----------
+    gridlets : GridletBatch
+        The jobs to run; status/resource/t_event are overwritten here.
+    fleet : resource.Fleet
+        Resource tables (policies, PEs, rates, load calendars).
+    resource_idx : int or i32[N]
+        Destination resource per gridlet (broadcast from a scalar).
+    dispatch_time : float or f32[N]
+        Instant each gridlet enters the network; it arrives after the
+        input-file transfer delay at the resource's baud rate.
+    max_events : int
+        Total-superstep bound (committing + speculative, not raw
+        events) -- batch-independent.
+    reservations : optional
+        Advance-reservation windows -- a ReservationBook, an iterable of
+        ``(resource, pes, start, end)`` tuples, or the 4-array table --
+        blocking PE capacity exactly as in the broker-driven mode.
+    batch : int, static
+        Superstep batching factor k (see :func:`step_batched`); results
+        are bit-for-bit identical for every k, k=1 disables speculation.
     """
     from .types import replace
     n = gridlets.n
@@ -936,4 +1132,4 @@ def run_direct(gridlets, fleet, resource_idx, dispatch_time,
     params = default_params(jnp.asarray(-1.0), jnp.asarray(0.0),
                             jnp.asarray(0), 1, fleet.r,
                             reservations=reservations)  # brokers inert
-    return _run_jit(g, fleet, params, 1, max_events, None)
+    return _run_jit(g, fleet, params, 1, max_events, None, batch)

@@ -3,7 +3,26 @@
 The paper's per-entity loops ("for each Gridlet on this resource ...")
 become segmented ranks / prefix sums over one global table.  All helpers
 are O(N log N) via one stable lexsort -- the TPU-friendly replacement for
-pointer-chasing per-resource job lists.
+pointer-chasing per-resource job lists.  (The engine's k-step batched
+hot path goes further still: ``kernels.event_scan_slab`` amortises one
+rank pass over a whole slab of supersteps; these helpers remain the
+general-purpose primitive for broker-side grouping.)
+
+Shape/dtype conventions
+-----------------------
+All inputs are flat per-element arrays over one global table of ``N``
+elements partitioned into ``n_groups`` segments:
+
+  ``group_key``   -- i32[N] (any int dtype; cast to i32) segment id of
+                     each element, values in ``[0, n_groups)``,
+  ``member_mask`` -- bool[N]; non-members never perturb member results,
+  ``order_key``   -- [N] any sortable dtype; ordering inside a segment
+                     is (order_key, index) -- index breaks ties FIFO,
+  ``values``      -- f32[N] (``group_prefix_sum`` only), must be >= 0.
+
+Returns: ``group_rank`` -> (rank i32[N] -- BIG for non-members,
+counts i32[n_groups]); ``group_prefix_sum`` -> f32[N] exclusive prefix
+sums (0 for non-members).
 """
 from __future__ import annotations
 

@@ -52,12 +52,14 @@ class ExperimentResult(NamedTuple):
     per_resource_done: jax.Array  # f32[U,R] completions by resource
     gridlets: object
     n_events: jax.Array      # i32 events applied by the engine
-    n_steps: jax.Array       # i32 engine supersteps (loop iterations)
+    n_steps: jax.Array       # i32 engine while-loop iterations
     overflow: jax.Array      # i32 job-slot allocation failures (== 0)
     n_failed: jax.Array      # i32 gridlets hit by a resource failure
     n_resubmits: jax.Array   # i32 FAILED gridlets re-dispatched
     downtime: jax.Array      # f32[R] accumulated down intervals
     truncated: jax.Array     # bool: loop hit max_events before finishing
+    n_spec: jax.Array        # i32 speculative supersteps folded into
+                             #     the n_steps iterations (k-step batch)
 
 
 def _max_events(n_gridlets: int, n_users: int, horizon: float,
@@ -94,8 +96,9 @@ def summarize(res: engine.SimResult, params, n_users: int,
         n_failed=res.n_failed,
         n_resubmits=res.n_resubmits,
         downtime=res.downtime,
-        truncated=(res.n_steps >= max_events if max_events is not None
-                   else jnp.asarray(False)),
+        truncated=(res.n_steps + res.n_spec >= max_events
+                   if max_events is not None else jnp.asarray(False)),
+        n_spec=res.n_spec,
     )
 
 
@@ -120,14 +123,19 @@ def _scenario_params(fleet, deadline, budget, opt, n_users,
 def run_experiment(gridlets_batch, fleet, deadline, budget,
                    opt=OPT_COST, n_users: int = 1,
                    max_events: int | None = None,
-                   scenario: Scenario | None = None) -> ExperimentResult:
+                   scenario: Scenario | None = None,
+                   batch: int = engine.DEFAULT_BATCH) -> ExperimentResult:
+    """``batch`` is the engine's k-step superstep batching factor
+    (static; see engine.step_batched) -- results are bit-for-bit
+    identical for every value, ``batch=1`` disables speculation."""
     params = _scenario_params(fleet, deadline, budget, opt, n_users,
                               scenario)
     if max_events is None:
         horizon = float(jnp.max(params.deadline)) * 2.0 + 100.0
         max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
     res = engine.run(gridlets_batch, fleet, params, n_users, max_events,
-                     max_jobs=safe_max_jobs(gridlets_batch, params, fleet))
+                     max_jobs=safe_max_jobs(gridlets_batch, params, fleet),
+                     batch=batch)
     return summarize(res, params, n_users, fleet.r, max_events)
 
 
@@ -145,10 +153,13 @@ def run_experiment_factors(gridlets_batch, fleet, d_factor, b_factor,
 
 def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
           n_users: int = 1, max_events: int | None = None,
-          scenario: Scenario | None = None):
+          scenario: Scenario | None = None, batch: int = 1):
     """vmap over the full deadline x budget grid (paper Figs 21-24).
 
     deadlines: [D], budgets: [B] -> every field gains leading [D, B] dims.
+    ``batch`` defaults to 1 (no superstep speculation): under vmap the
+    speculative path lowers to selects that evaluate both branches, so
+    k > 1 saves nothing for swept grids; results are identical anyway.
     """
     deadlines = jnp.asarray(deadlines, jnp.float32)
     budgets = jnp.asarray(budgets, jnp.float32)
@@ -161,7 +172,7 @@ def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
     def one(d, b):
         params = _scenario_params(fleet, d, b, opt, n_users, scenario)
         res = engine.run_inner(gridlets_batch, fleet, params, n_users,
-                               max_events, max_jobs)
+                               max_events, max_jobs, batch=batch)
         return summarize(res, params, n_users, fleet.r, max_events)
 
     f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))

@@ -3,6 +3,17 @@
 Accumulator keeps (count, sum, sum of squares, min, max) so mean/std/
 extrema queries are O(1); it is a pytree so it can be threaded through jit
 and updated inside lax loops (the RECORD_STATISTICS event of Fig 14).
+
+Shape/dtype conventions
+-----------------------
+Every Accumulator field is a scalar f32 (``count`` is a float weight sum
+so weighted inserts stay exact under jit; ``vmin``/``vmax`` start at
++/-inf).  ``add`` takes scalar ``value``/``weight``; ``add_many`` takes
+``values`` f32[N] with an optional ``mask`` (bool[N] or f32[N] weights)
+and performs one fused update -- the natural companion of the engine's
+batched supersteps, which retire whole event cohorts per iteration.
+Accumulators broadcast like any pytree: vmapping a sweep yields [D, B]
+leaves that ``mean``/``std`` reduce elementwise.
 """
 from __future__ import annotations
 

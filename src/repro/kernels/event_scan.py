@@ -63,6 +63,58 @@ from jax.experimental import pallas as pl
 BIG = 3.0e38
 
 
+def _row_masks(rem, npe, pol, blk, ok):
+    """Shared masking prologue of every scan variant.
+
+    Reservation windows shrink the PE pool of time-shared rows; a down
+    (row_ok == 0) row, or a fully-reserved time-shared row, is dead:
+    every slot masked out of all outputs.  Returns (npe_e [R,1] f32
+    effective PE pool, valid [R,J] bool, g [R,1] f32 job count).
+    """
+    npe_e = jnp.maximum(npe - blk, 0.0)
+    dead = (ok < 0.5) | ((pol < 0.5) & (npe_e < 0.5))
+    valid = (rem > 0.0) & (rem < BIG) & ~dead
+    g = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
+    return npe_e, valid, g
+
+
+def _pairwise_rank(rem, tie, valid):
+    """Within-row (remaining, tie) rank via the [J, J] comparison matrix
+    -- the Pallas-side ranking (O(J^2) VPU work, fully data-parallel).
+    Returns (rank [R,J] f32, key, tkey) with invalid slots keyed BIG."""
+    key = jnp.where(valid, rem, BIG)
+    tkey = jnp.where(valid, tie, BIG)
+    lt = key[:, :, None] > key[:, None, :]         # j strictly after j'
+    tie_lt = (key[:, :, None] == key[:, None, :]) & \
+        (tkey[:, :, None] > tkey[:, None, :])
+    rank = jnp.sum((lt | tie_lt) & valid[:, None, :],
+                   axis=2).astype(jnp.float32)
+    return rank, key, tkey
+
+
+def _lexsort_rank(rem, tie, valid):
+    """Same rank contract as :func:`_pairwise_rank` via one stable
+    O(J log J) lexsort -- the XLA-fallback ranking."""
+    key = jnp.where(valid, rem, BIG)
+    tkey = jnp.where(valid, tie, BIG)
+    order = jnp.lexsort((tkey, key), axis=-1)       # cols by (rem, tie)
+    rank = jnp.argsort(order, axis=-1).astype(jnp.float32)  # inverse perm
+    return rank, key, tkey
+
+
+def _fig8_rates(rem, rank, valid, g, mips, npe_e, pol):
+    """Fig 8 share divisor -> per-slot rate, shared by all variants."""
+    k = jnp.floor(g / jnp.maximum(npe_e, 1.0))     # [R,1] min jobs per PE
+    extra = g - k * jnp.maximum(npe_e, 1.0)
+    msc = (npe_e - extra) * k                      # max-share count
+    divisor = k + (rank >= msc).astype(jnp.float32)
+    # g <= P_eff: everyone gets a full PE
+    divisor = jnp.where(g <= npe_e, 1.0, divisor)
+    # space-shared rows: every resident job owns a whole PE
+    divisor = jnp.where(pol > 0.5, 1.0, divisor)
+    return jnp.where(valid, mips / jnp.maximum(divisor, 1.0), 0.0)
+
+
 def _kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
             blocked_ref, ok_ref, rate_ref, tmin_ref, amin_ref, occ_ref):
     rem = remaining_ref[...]                       # [R, J] f32
@@ -74,33 +126,9 @@ def _kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
     ok = ok_ref[...]                               # [R, 1] f32 (1 = up)
     r, j = rem.shape
 
-    # Reservation windows shrink the PE pool of time-shared rows; a down
-    # (row_ok == 0) row, or a fully-reserved time-shared row, is dead:
-    # every slot masked out of the rate / argmin / occupancy outputs.
-    npe_e = jnp.maximum(npe - blk, 0.0)
-    dead = (ok < 0.5) | ((pol < 0.5) & (npe_e < 0.5))
-
-    valid = (rem > 0.0) & (rem < BIG) & ~dead
-    g = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)  # [R,1]
-
-    # rank within row by (remaining, tie): pairwise comparison matrix
-    key = jnp.where(valid, rem, BIG)
-    tkey = jnp.where(valid, tie, BIG)
-    lt = key[:, :, None] > key[:, None, :]         # j strictly after j'
-    tie_lt = (key[:, :, None] == key[:, None, :]) & \
-        (tkey[:, :, None] > tkey[:, None, :])
-    rank = jnp.sum((lt | tie_lt) & valid[:, None, :],
-                   axis=2).astype(jnp.float32)     # [R, J]
-
-    k = jnp.floor(g / jnp.maximum(npe_e, 1.0))     # [R,1] min jobs per PE
-    extra = g - k * jnp.maximum(npe_e, 1.0)
-    msc = (npe_e - extra) * k                      # max-share count
-    divisor = k + (rank >= msc).astype(jnp.float32)
-    # g <= P_eff: everyone gets a full PE
-    divisor = jnp.where(g <= npe_e, 1.0, divisor)
-    # space-shared rows: every resident job owns a whole PE
-    divisor = jnp.where(pol > 0.5, 1.0, divisor)
-    rate = jnp.where(valid, mips / jnp.maximum(divisor, 1.0), 0.0)
+    npe_e, valid, g = _row_masks(rem, npe, pol, blk, ok)
+    rank, key, tkey = _pairwise_rank(rem, tie, valid)
+    rate = _fig8_rates(rem, rank, valid, g, mips, npe_e, pol)
     rate_ref[...] = rate
 
     t = jnp.where(valid, rem / jnp.maximum(rate, 1e-30), BIG)
@@ -203,24 +231,9 @@ def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None,
     blk = pe_blocked[:, None]
     ok = row_ok[:, None]
 
-    npe_e = jnp.maximum(npe - blk, 0.0)
-    dead = (ok < 0.5) | ((pol < 0.5) & (npe_e < 0.5))
-
-    valid = (remaining > 0.0) & (remaining < BIG) & ~dead
-    g = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
-
-    key = jnp.where(valid, remaining, BIG)
-    tkey = jnp.where(valid, tie, BIG)
-    order = jnp.lexsort((tkey, key), axis=-1)       # cols by (rem, tie)
-    rank = jnp.argsort(order, axis=-1).astype(jnp.float32)  # inverse perm
-
-    k = jnp.floor(g / jnp.maximum(npe_e, 1.0))
-    extra = g - k * jnp.maximum(npe_e, 1.0)
-    msc = (npe_e - extra) * k
-    divisor = k + (rank >= msc).astype(jnp.float32)
-    divisor = jnp.where(g <= npe_e, 1.0, divisor)
-    divisor = jnp.where(pol > 0.5, 1.0, divisor)
-    rate = jnp.where(valid, mips / jnp.maximum(divisor, 1.0), 0.0)
+    npe_e, valid, g = _row_masks(remaining, npe, pol, blk, ok)
+    rank, key, tkey = _lexsort_rank(remaining, tie, valid)
+    rate = _fig8_rates(remaining, rank, valid, g, mips, npe_e, pol)
 
     t = jnp.where(valid, remaining / jnp.maximum(rate, 1e-30), BIG)
     tmin = jnp.min(t, axis=1, keepdims=True)
@@ -230,3 +243,149 @@ def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None,
     col = jnp.broadcast_to(jnp.arange(j, dtype=jnp.int32)[None, :], (r, j))
     amin = jnp.min(jnp.where(at_min & (cand <= tie_min), col, j), axis=1)
     return rate, tmin[:, 0], amin, jnp.sum(valid, axis=1, dtype=jnp.int32)
+
+
+# ----------------------------------------------------------------------
+# k-wave time-slab forecast: the next k completions per row in ONE pass.
+# ----------------------------------------------------------------------
+#
+# The key fact making a whole slab computable from a single rank pass:
+# within a row evolving under uninterrupted Fig 8 dynamics, jobs finish
+# exactly in (remaining, tie) sort order.  The rank-0 job holds MaxShare
+# and the smallest remaining, so it finishes first; after it leaves, the
+# order among the survivors is preserved (smaller-remaining jobs always
+# hold a rate at least as high, so gaps never close).  Ranks therefore
+# never need re-sorting between waves -- wave w completes the rank-w job
+# -- and the per-superstep cost of 3 segmented sorts collapses into one
+# rank pass followed by k cheap analytic advance steps.
+
+def _slab_waves(rem, rank, valid, g, mips, npe_e, pol, col, k):
+    """Shared wave recurrence of the slab forecast (jnp ops only, so the
+    Pallas kernel body and the XLA fallback run the same arithmetic).
+
+    rem/rank [R, J] f32, valid [R, J] bool, col [R, J] i32 (col index);
+    g/mips/npe_e/pol [R, 1] f32.  Returns (t_wave f32[R, k] -- time from
+    now of the row's w-th completion, BIG-padded; col_wave i32[R, k] --
+    completing column, J-padded).  Wave 0 equals event_scan's
+    (t_min, argmin_col).
+    """
+    r, j = rem.shape
+    t_acc = jnp.zeros((r, 1), jnp.float32)
+    ts, cols = [], []
+    for w in range(k):
+        # wave w = the single-scan share formula over the survivors,
+        # with job count and ranks shifted by the w departed heads
+        active = valid & (rank >= w)
+        rate = _fig8_rates(rem, rank - w, active, g - w, mips, npe_e,
+                           pol)
+        head = valid & (rank == w)
+        has = jnp.sum(head.astype(jnp.float32), axis=1, keepdims=True) > 0
+        dt = jnp.sum(jnp.where(head, rem / jnp.maximum(rate, 1e-30), 0.0),
+                     axis=1, keepdims=True)
+        t_acc = t_acc + jnp.where(has, dt, 0.0)
+        ts.append(jnp.where(has, t_acc, BIG))
+        cols.append(jnp.where(
+            has, jnp.sum(jnp.where(head, col, 0), axis=1, keepdims=True),
+            j).astype(jnp.int32))
+        # advance the survivors; the head leaves the table (a tied
+        # neighbour may round below 0 -- clamped, it emits a dt=0 wave)
+        rem = jnp.where(head, 0.0, jnp.where(
+            active, jnp.maximum(rem - rate * dt, 0.0), rem))
+    return jnp.concatenate(ts, axis=1), jnp.concatenate(cols, axis=1)
+
+
+def _slab_kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
+                 blocked_ref, ok_ref, t_ref, col_ref, *, k):
+    rem = remaining_ref[...]
+    tie = tie_ref[...]
+    mips = mips_ref[...]
+    npe = pe_ref[...]
+    pol = policy_ref[...]
+    blk = blocked_ref[...]
+    ok = ok_ref[...]
+    r, j = rem.shape
+
+    npe_e, valid, g = _row_masks(rem, npe, pol, blk, ok)
+    # one pairwise (remaining, tie) rank pass for the whole slab
+    rank, _, _ = _pairwise_rank(rem, tie, valid)
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, j), 1)
+    t_w, col_w = _slab_waves(rem, rank, valid, g, mips, npe_e, pol, col, k)
+    t_ref[...] = t_w
+    col_ref[...] = col_w
+
+
+def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
+                    pe_blocked=None, row_ok=None, *,
+                    block_r: int = 8, interpret: bool = False):
+    """Forecast each row's next ``k`` completions in one kernel call.
+
+    Same inputs/masking as :func:`event_scan` plus the static slab depth
+    ``k``.  Returns ``(t_wave f32[R, k], col_wave i32[R, k])``: the time
+    from now (NOT absolute time) and column of the row's w-th completion
+    under uninterrupted Fig 8 dynamics -- shares recomputed in-register
+    after every wave -- with BIG / J padding past the row's job count.
+    Wave 0 is exactly ``event_scan``'s ``(t_min, argmin_col)``; wave
+    ``w`` equals ``event_scan`` re-applied after removing the previous
+    heads and advancing the survivors (the oracle iterates exactly
+    that).  Space-shared rows free their PE on completion but admit
+    nothing (queue admission is engine policy, not kernel math), so for
+    them the slab is a forecast, not a commitment, as soon as a queue
+    exists.  The [R_pad, J] state stays resident in VMEM across all k
+    waves -- one rank pass amortised over the slab, instead of 3
+    segmented sorts per superstep.
+    """
+    r, j = remaining.shape
+    remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
+        remaining, tie, policy, pe_blocked, row_ok)
+    block_r = min(block_r, r)
+    assert r % block_r == 0, "pad the resource axis upstream"
+    assert k >= 1
+
+    t_w, col_w = pl.pallas_call(
+        functools.partial(_slab_kernel, k=k),
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, k), jnp.float32),
+            jax.ShapeDtypeStruct((r, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(remaining, tie,
+      mips_eff.astype(jnp.float32).reshape(r, 1),
+      num_pe.astype(jnp.float32).reshape(r, 1),
+      policy.reshape(r, 1),
+      pe_blocked.reshape(r, 1),
+      row_ok.reshape(r, 1))
+    return t_w, col_w
+
+
+def event_scan_slab_xla(remaining, mips_eff, num_pe, k, tie=None,
+                        policy=None, pe_blocked=None, row_ok=None):
+    """Vectorised jnp fallback for :func:`event_scan_slab` -- identical
+    wave arithmetic (shared ``_slab_waves``), with the kernel's O(J^2)
+    pairwise rank replaced by one O(J log J) lexsort."""
+    r, j = remaining.shape
+    remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
+        remaining, tie, policy, pe_blocked, row_ok)
+    mips = mips_eff.astype(jnp.float32)[:, None]
+    npe = num_pe.astype(jnp.float32)[:, None]
+    pol = policy[:, None]
+    blk = pe_blocked[:, None]
+    ok = row_ok[:, None]
+
+    npe_e, valid, g = _row_masks(remaining, npe, pol, blk, ok)
+    rank, _, _ = _lexsort_rank(remaining, tie, valid)
+    col = jnp.broadcast_to(jnp.arange(j, dtype=jnp.int32)[None, :], (r, j))
+    return _slab_waves(remaining, rank, valid, g, mips, npe_e, pol, col, k)

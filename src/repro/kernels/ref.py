@@ -128,3 +128,42 @@ def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None,
             jnp.asarray(tmin, jnp.float32),
             jnp.asarray(amin, jnp.int32),
             jnp.asarray(occ, jnp.int32))
+
+
+def event_scan_slab_ref(remaining, mips_eff, num_pe, k, tie=None,
+                        policy=None, pe_blocked=None, row_ok=None):
+    """Oracle for the k-wave slab forecast: literally iterate
+    :func:`event_scan_ref` k times, after each wave advancing every job
+    of a row by its own rate over that row's head completion interval
+    and removing the completed column.  Rows evolve independently (each
+    by its own wave clock), matching the slab kernel's row-local
+    semantics.  Returns (t_wave f32[R, k] -- time from now, BIG-padded;
+    col_wave i32[R, k], J-padded).
+    """
+    import numpy as np
+    rem = np.array(remaining, np.float64)
+    r_n, j_n = rem.shape
+    t_acc = np.zeros((r_n,))
+    t_out = np.full((r_n, k), 3.0e38)
+    col_out = np.full((r_n, k), j_n, np.int32)
+    for w in range(k):
+        rate, tmin, amin, _ = (np.asarray(x, np.float64) for x in
+                               event_scan_ref(rem, mips_eff, num_pe,
+                                              tie=tie, policy=policy,
+                                              pe_blocked=pe_blocked,
+                                              row_ok=row_ok))
+        live = amin < j_n
+        dt = np.where(live, tmin, 0.0)
+        t_acc = t_acc + dt
+        t_out[:, w] = np.where(live, t_acc, 3.0e38)
+        col_out[:, w] = amin.astype(np.int32)
+        # Advance survivors, clamped to a tiny epsilon: a job tied with
+        # the head rounds to 0 here but must stay visible (the kernel
+        # freezes validity at wave 0), emitting its own dt~0 wave next.
+        was_valid = (rem > 0.0) & (rem < 3.0e38)
+        adv = np.maximum(rem - rate * dt[:, None], 1e-30)
+        rem = np.where(was_valid, adv, rem)
+        rem[np.arange(r_n)[live.astype(bool)],
+            amin[live.astype(bool)].astype(int)] = 0.0
+    return (jnp.asarray(t_out, jnp.float32),
+            jnp.asarray(col_out, jnp.int32))

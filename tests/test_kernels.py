@@ -177,3 +177,70 @@ def test_event_scan_capacity_conservation(seed):
     expect = np.minimum(jobs, pes) * mips
     np.testing.assert_allclose(np.asarray(rate).sum(axis=1), expect,
                                rtol=1e-4)
+
+
+# ------------------------------------------------------------------
+# event scan slab (k-wave completion forecast, one fused call)
+# ------------------------------------------------------------------
+def _random_slab_case(seed, r=8, j=12):
+    rng = np.random.RandomState(seed)
+    remaining = rng.exponential(50.0, (r, j)).astype(np.float32)
+    remaining[rng.rand(r, j) < 0.3] = 0.0
+    if seed % 2:  # integer remainings force ties within and across rows
+        remaining = np.where(
+            remaining > 0, rng.randint(1, 5, (r, j)).astype(np.float32),
+            0.0)
+    mips = rng.uniform(1.0, 500.0, (r,)).astype(np.float32)
+    pes = rng.randint(1, 9, (r,)).astype(np.int32)
+    kw = dict(tie=rng.permutation(r * j).reshape(r, j).astype(np.float32),
+              policy=rng.randint(0, 2, (r,)).astype(np.int32),
+              pe_blocked=rng.randint(0, 4, (r,)).astype(np.float32),
+              row_ok=(rng.rand(r) < 0.8).astype(np.float32))
+    return remaining, mips, pes, kw
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 999), k=st.sampled_from([1, 4, 6]))
+def test_event_scan_slab_paths_agree(seed, k):
+    """Pallas interpret, the XLA fallback and the iterated-single-scan
+    oracle agree on the k-wave forecast, masks and tie keys included."""
+    remaining, mips, pes, kw = _random_slab_case(seed)
+    jkw = {a: jnp.asarray(v) for a, v in kw.items()}
+    args = (jnp.asarray(remaining), jnp.asarray(mips), jnp.asarray(pes))
+    pallas_out = ops.event_scan_slab(*args, k, **jkw, interpret=True)
+    xla_out = ops.event_scan_slab(*args, k, **jkw)
+    ref_out = ref.event_scan_slab_ref(remaining, mips, pes, k, **kw)
+    for got, name in ((xla_out, "xla"), (ref_out, "oracle")):
+        np.testing.assert_allclose(
+            np.asarray(pallas_out[0]), np.asarray(got[0]), rtol=2e-3,
+            atol=1e-3, err_msg=f"t_wave vs {name}")
+        assert np.array_equal(np.asarray(pallas_out[1]),
+                              np.asarray(got[1])), f"col_wave vs {name}"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_event_scan_slab_wave0_is_event_scan(seed):
+    """Wave 0 of the slab is exactly the single scan's forecast -- the
+    slab is a strict generalisation of event_scan."""
+    remaining, mips, pes, kw = _random_slab_case(seed)
+    jkw = {a: jnp.asarray(v) for a, v in kw.items()}
+    args = (jnp.asarray(remaining), jnp.asarray(mips), jnp.asarray(pes))
+    t_w, col_w = ops.event_scan_slab(*args, 3, **jkw)
+    _, tmin, amin, _ = ops.event_scan(*args, **jkw)
+    np.testing.assert_allclose(np.asarray(t_w[:, 0]), np.asarray(tmin),
+                               rtol=1e-5)
+    assert np.array_equal(np.asarray(col_w[:, 0]), np.asarray(amin))
+    # waves are non-decreasing in time per row (BIG pads stay last)
+    tw = np.asarray(t_w)
+    assert np.all(np.diff(tw, axis=1) >= -1e-3)
+
+
+def test_event_scan_slab_lowers_for_tpu_shapes():
+    """The slab kernel must trace/lower at fleet scale (R=256, J=128,
+    k=8) -- the TPU-target workload of the batched superstep engine."""
+    r, j = 256, 128
+    rem = jax.ShapeDtypeStruct((r, j), jnp.float32)
+    v = jax.ShapeDtypeStruct((r,), jnp.float32)
+    jax.eval_shape(lambda a, m, p: ops.event_scan_slab(
+        a, m, p, 8, interpret=True), rem, v, v)

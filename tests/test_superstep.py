@@ -1,7 +1,8 @@
 """Superstep engine contract: golden Table 1 trace, pre-refactor
 result equivalence, engine <-> kernel <-> oracle rate agreement, the
-job-slot / calendar overflow invariants, and the pluggable event
-sources (failure/recovery, calendar load steps, reservations)."""
+job-slot / calendar overflow invariants, the pluggable event sources
+(failure/recovery, calendar load steps, reservations), and the k-step
+speculative batching path (bit-identity with k=1, horizon cuts)."""
 import json
 import os
 
@@ -29,33 +30,48 @@ ARRIVALS = jnp.array([0.0, 4.0, 7.0])
 # Golden event trace (paper Table 1 / Figs 9 and 12): the superstep
 # engine must reproduce the exact times, kinds and FIFO order.
 # ----------------------------------------------------------------------
-def _trace(policy):
+def _trace(policy, batch=engine.DEFAULT_BATCH):
     g = gridlet.make_batch([10.0, 8.5, 9.5])
     fleet = resource.table1_resource(policy)
-    res = engine.run_direct(g, fleet, 0, ARRIVALS, max_events=64)
+    res = engine.run_direct(g, fleet, 0, ARRIVALS, max_events=64,
+                            batch=batch)
     tt, kind, who = (np.asarray(x) for x in res.trace)
     m = kind >= 0
     return res, list(zip(tt[m].tolist(), kind[m].tolist(),
                          who[m].tolist()))
 
 
+GOLDEN_TS_TRACE = [
+    (0.0, 2, 0), (4.0, 2, 1), (7.0, 2, 2),        # arrivals
+    (10.0, 0, 0), (10.0, 1, 0),                   # G1 done+returned
+    (14.0, 0, 1), (14.0, 1, 1),                   # G2
+    (18.0, 0, 2), (18.0, 1, 2),                   # G3
+]
+
+
 def test_time_shared_golden_trace():
     # kinds: 0=completion, 1=return, 2=arrival, 3=broker
-    res, trace = _trace(types.TIME_SHARED)
-    assert trace == [
-        (0.0, 2, 0), (4.0, 2, 1), (7.0, 2, 2),        # arrivals
-        (10.0, 0, 0), (10.0, 1, 0),                   # G1 done+returned
-        (14.0, 0, 1), (14.0, 1, 1),                   # G2
-        (18.0, 0, 2), (18.0, 1, 2),                   # G3
-    ]
+    res, trace = _trace(types.TIME_SHARED, batch=1)
+    assert trace == GOLDEN_TS_TRACE
     # zero-delay returns fold into their completion superstep: 9 events
     # in 6 supersteps.
     assert int(res.n_events) == 9 and int(res.n_steps) == 6
+    assert int(res.overflow) == 0 and int(res.n_spec) == 0
+
+
+def test_time_shared_golden_trace_batched():
+    """The k-step batched path replays the identical golden trace; the
+    three completion supersteps (10/14/18: no arrival, broker or
+    boundary can intervene) speculate into the t=7 arrival iteration."""
+    res, trace = _trace(types.TIME_SHARED)          # default batch
+    assert trace == GOLDEN_TS_TRACE
+    assert int(res.n_events) == 9
+    assert int(res.n_steps) == 3 and int(res.n_spec) == 3
     assert int(res.overflow) == 0
 
 
 def test_space_shared_golden_trace():
-    res, trace = _trace(types.SPACE_SHARED)
+    res, trace = _trace(types.SPACE_SHARED, batch=1)
     assert trace == [
         (0.0, 2, 0), (4.0, 2, 1), (7.0, 2, 2),
         (10.0, 0, 0), (10.0, 1, 0),                   # G1 frees the PE
@@ -63,6 +79,11 @@ def test_space_shared_golden_trace():
         (19.5, 0, 2), (19.5, 1, 2),                   # queued G3 last
     ]
     assert int(res.n_steps) == 6 and int(res.overflow) == 0
+    # batched: same trace (queue admissions are speculation-safe: they
+    # ride inside the completion superstep), half the iterations
+    res_b, trace_b = _trace(types.SPACE_SHARED)
+    assert trace_b == trace
+    assert int(res_b.n_steps) == 3 and int(res_b.n_spec) == 3
 
 
 def test_simultaneous_events_apply_in_one_superstep():
@@ -70,10 +91,16 @@ def test_simultaneous_events_apply_in_one_superstep():
     completion superstep completes AND returns all four (12 events)."""
     g = gridlet.make_batch([10.0] * 4)
     fleet = resource.make_fleet([4], 1.0, 1.0, types.TIME_SHARED)
-    res = engine.run_direct(g, fleet, 0, jnp.zeros(4), max_events=64)
+    res = engine.run_direct(g, fleet, 0, jnp.zeros(4), max_events=64,
+                            batch=1)
     assert int(res.n_steps) == 2
     assert int(res.n_events) == 12
     np.testing.assert_allclose(np.asarray(res.gridlets.finish), 10.0)
+    # batched: the completion superstep speculates into the arrival
+    # iteration -- 12 events in ONE while-loop iteration
+    res_b = engine.run_direct(g, fleet, 0, jnp.zeros(4), max_events=64)
+    assert int(res_b.n_steps) == 1 and int(res_b.n_spec) == 1
+    assert int(res_b.n_events) == 12
 
 
 # ----------------------------------------------------------------------
@@ -206,7 +233,8 @@ def test_zero_rate_sources_reproduce_golden():
         g, fleet, **kw,
         scenario=simulation.Scenario(mtbf=0.0, mttr=0.0,
                                      reservations=[], seed=123))
-    for f in ("n_done", "spent", "term_time", "n_steps", "n_events"):
+    for f in ("n_done", "spent", "term_time", "n_steps", "n_spec",
+              "n_events"):
         assert np.array_equal(np.asarray(getattr(base, f)),
                               np.asarray(getattr(zero, f))), f
     assert int(zero.n_failed) == 0 and int(zero.n_resubmits) == 0
@@ -290,6 +318,90 @@ def test_reservation_shrinks_time_shared_shares():
     r = engine.run_direct(g, fleet, 0, 0.0, max_events=64,
                           reservations=[(0, 1, 0.0, 100.0)])
     np.testing.assert_allclose(np.asarray(r.gridlets.finish), 20.0)
+
+
+# ----------------------------------------------------------------------
+# k-step speculative batching (engine.step_batched).
+# ----------------------------------------------------------------------
+def _assert_same_run(r1, rk, check_failures=False):
+    fields = ["n_done", "spent", "term_time", "n_events", "overflow"]
+    if check_failures:
+        fields += ["n_failed", "n_resubmits"]
+    for f in fields:
+        assert np.array_equal(np.asarray(getattr(r1, f)),
+                              np.asarray(getattr(rk, f))), f
+    np.testing.assert_allclose(np.asarray(r1.downtime),
+                               np.asarray(rk.downtime))
+    for f in ("status", "finish", "returned", "cost", "resource"):
+        assert np.array_equal(np.asarray(getattr(r1.gridlets, f)),
+                              np.asarray(getattr(rk.gridlets, f))), f
+
+
+def test_batched_engine_bit_identical_on_golden_and_failure():
+    """The acceptance contract of the k-step path: on the golden
+    20-user WWG scenario AND on the seeded failure scenario, batch=k is
+    bit-for-bit identical to batch=1 while running >= 1.5x fewer
+    while-loop iterations; the supersteps merely repartition
+    (n_steps_k1 == n_steps_k + n_spec_k)."""
+    fleet = resource.wwg_fleet()
+    g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=100, n_users=20)
+    kw = dict(deadline=2000.0, budget=22000.0, opt=types.OPT_COST,
+              n_users=20)
+    for sc in (None, simulation.Scenario(mtbf=500.0, mttr=25.0, seed=1)):
+        r1 = simulation.run_experiment(g, fleet, **kw, scenario=sc,
+                                       batch=1)
+        rk = simulation.run_experiment(g, fleet, **kw, scenario=sc)
+        _assert_same_run(r1, rk, check_failures=sc is not None)
+        assert int(r1.n_spec) == 0
+        assert int(r1.n_steps) == int(rk.n_steps) + int(rk.n_spec)
+        assert int(r1.n_steps) >= 1.5 * int(rk.n_steps), \
+            (int(r1.n_steps), int(rk.n_steps))
+
+
+@settings(max_examples=4, deadline=None)
+@given(batch=st.sampled_from([2, 3, 5, 8]), seed=st.integers(0, 99))
+def test_batched_engine_property_identical(batch, seed):
+    """Property form: for random failure seeds and odd batch depths the
+    full event trace (times, kinds, actors) is identical to k=1."""
+    fleet = resource.make_fleet([2, 2], [1.0, 1.0], [1.0, 2.0],
+                                types.TIME_SHARED)
+    g = gridlet.make_batch(jnp.full((10,), 25.0))
+    sc = simulation.Scenario(mtbf=80.0, mttr=8.0, seed=seed)
+    kw = dict(deadline=1000.0, budget=50000.0, opt=types.OPT_COST,
+              n_users=1, scenario=sc)
+    r1 = simulation.run_experiment(g, fleet, **kw, batch=1)
+    rk = simulation.run_experiment(g, fleet, **kw, batch=batch)
+    _assert_same_run(r1, rk, check_failures=True)
+    assert int(r1.n_steps) == int(rk.n_steps) + int(rk.n_spec)
+
+
+def test_reservation_boundary_cuts_speculation():
+    """Horizon-boundary contract: a reservation window opening mid-slab
+    is an interference point.  3 jobs on a 1-PE time-shared resource
+    finish at 30/55/65 around a [40, 45) full-capacity hold; without the
+    window the whole run folds into one iteration, with it the engine
+    must commit both boundaries (and the completions they displace) in
+    separate iterations -- while staying bit-identical to k=1."""
+    fleet = resource.make_fleet([1], 1.0, 1.0, types.TIME_SHARED,
+                                baud_rate=jnp.inf)
+    g = gridlet.make_batch([10.0, 20.0, 30.0])
+    resv = [(0, 1, 40.0, 45.0)]
+    free = engine.run_direct(g, fleet, 0, 0.0, max_events=64)
+    assert int(free.n_steps) == 1          # arrivals + 3 speculated waves
+    r1 = engine.run_direct(g, fleet, 0, 0.0, max_events=64,
+                           reservations=resv, batch=1)
+    rk = engine.run_direct(g, fleet, 0, 0.0, max_events=64,
+                           reservations=resv)
+    np.testing.assert_allclose(np.asarray(rk.gridlets.finish),
+                               [30.0, 55.0, 65.0])
+    for a, b in zip(r1.trace, rk.trace):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert int(r1.n_steps) == int(rk.n_steps) + int(rk.n_spec)
+    # the two boundary commits forced >= 3 iterations (vs 1 unreserved)
+    assert int(rk.n_steps) >= 3
+    tt, kind, _ = (np.asarray(x) for x in rk.trace)
+    np.testing.assert_allclose(tt[kind == des.K_RESERVATION],
+                               [40.0, 45.0])
 
 
 @settings(max_examples=10, deadline=None)
