@@ -2,19 +2,37 @@
 
 The 2002 toolkit ran one JVM thread per entity; the array engine's cost
 is events/second at fleet scale.  Three WWG scenarios (1 / 20 / 200
-users) plus a failure scenario are timed and written to
-``benchmarks/artifacts/BENCH_engine.json`` with events/sec, while-loop
-iterations and wall-clock, so future PRs have a perf trajectory (the
-full schema and the PR-over-PR table live in docs/PERFORMANCE.md).
+users), a failure scenario and a large-J deep-queue scenario are timed
+and written to ``benchmarks/artifacts/BENCH_engine.json`` with
+steady-state events/sec, compile time, while-loop iterations and
+wall-clock, so future PRs have a perf trajectory (the full schema and
+the PR-over-PR table live in docs/PERFORMANCE.md).
 
-Each scenario runs twice: once with the k-step speculative superstep
-batching that is the engine default (``engine.DEFAULT_BATCH``) -- the
-timed run -- and once with ``batch=1`` to record the iteration-count
-baseline and assert the two runs are bit-for-bit identical
-(``batched_identical``).  The 20-user cell is additionally compared
-against the recorded pre-superstep engine
+Timing discipline: the first call is timed separately (``compile_s`` --
+jit tracing + XLA compile + the first run) from the steady-state run
+that follows (``wall_s``/``events_per_sec``).  Folding compilation into
+the throughput number hides the real per-iteration constant, which is
+what the engine work optimises.
+
+Each scenario runs twice more: once with the k-step speculative
+superstep batching that is the engine default
+(``engine.DEFAULT_BATCH``) -- the timed run -- and once with
+``batch=1`` to record the iteration-count baseline and assert the two
+runs are bit-for-bit identical (``batched_identical``).  The 20-user
+cell is additionally compared against the recorded pre-superstep engine
 (tests/data/golden_pre_refactor.json): results must stay identical
 while while-loop iterations keep shrinking (``iteration_ratio``).
+
+Two microbench sections ride along under the ``_`` prefix (skipped by
+the per-scenario renderer columns, rendered as their own tables):
+
+* ``_rank_crossover`` -- XLA-compiled wall-clock of the three exact
+  in-kernel ranking algorithms (pairwise O(J^2), bitonic O(J log^2 J),
+  lexsort O(J log J)) across J, measuring the
+  ``event_scan.RANK_BITONIC_MIN_J`` crossover claim;
+* ``_sweep_vmap`` -- ``simulation.sweep`` (vmapped grid) at batch=1 vs
+  the engine default, documenting why ``sweep``/``run_inner`` keep
+  ``batch=1`` (under vmap, conds lower to selects: both branches run).
 
 Sized for the 1-core CPU container (the kernel routes through its XLA
 fallback there); the same jit'd program is the TPU-target workload for
@@ -27,55 +45,148 @@ import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, gridlet, resource, simulation, types
+from repro.kernels import event_scan as event_scan_mod
 
 from .common import art_path
 
 GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            os.pardir, "tests", "data",
                            "golden_pre_refactor.json")
-# (n_users, n_jobs_per_user, scenario): the trailing cell re-runs the
-# 20-user workload with the failure/recovery event source live
-# (MTBF=500, MTTR=25) so the perf trajectory tracks the dynamic-
-# resource path -- including how far dense interference degrades the
-# speculation horizon -- not just the static fleet.
+
+
+def _deep_fleet():
+    """Few resources, deep per-resource job tables: 2 x 80-PE
+    time-shared resources.  With 4 users the broker stages up to
+    ``4 * 2 * 80 = 640`` concurrent jobs per resource, so the job-slot
+    axis J reaches 640 -- strictly past RANK_BITONIC_MIN_J = 512, so
+    Pallas lane-pads it to 1024 and selects the bitonic in-kernel rank
+    on TPU; on CPU it is the widest lexsort the XLA fallback sees."""
+    return resource.make_fleet([80, 80], [100.0, 120.0], [1.0, 2.0],
+                               types.TIME_SHARED)
+
+
+# (n_users, n_jobs_per_user, scenario, fleet_fn, deadline, budget):
+# the failure cell re-runs the 20-user workload with the
+# failure/recovery event source live (MTBF=500, MTTR=25) so the perf
+# trajectory tracks the dynamic-resource path -- including how far
+# dense interference degrades the speculation horizon -- not just the
+# static fleet; the 4-user cell is the large-J rank-crossover workload.
 SCENARIOS = (
-    (1, 200, None),
-    (20, 100, None),
-    (200, 10, None),
-    (20, 100, simulation.Scenario(mtbf=500.0, mttr=25.0, seed=1)),
+    (1, 200, None, None, 2000.0, 22000.0),
+    (20, 100, None, None, 2000.0, 22000.0),
+    (200, 10, None, None, 2000.0, 22000.0),
+    (20, 100, simulation.Scenario(mtbf=500.0, mttr=25.0, seed=1), None,
+     2000.0, 22000.0),
+    (4, 512, None, _deep_fleet, 2000.0, 500000.0),
 )
 
 
-def _one(fleet, n_users, n_jobs, scenario, batch, timed=True):
+def _one(fleet, n_users, n_jobs, scenario, batch, deadline, budget,
+         timed=True):
     g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
                           n_users=n_users)
-    kw = dict(deadline=2000.0, budget=22000.0, opt=types.OPT_COST,
+    kw = dict(deadline=deadline, budget=budget, opt=types.OPT_COST,
               n_users=n_users, scenario=scenario, batch=batch)
-    r = simulation.run_experiment(g, fleet, **kw)      # warmup/compile
-    jax.block_until_ready(r.spent)
-    if not timed:       # baseline pass: results only, skip the re-run
-        return r, float("nan")
     t0 = time.perf_counter()
-    r = simulation.run_experiment(g, fleet, **kw)
+    r = simulation.run_experiment(g, fleet, **kw)      # compile + run
     jax.block_until_ready(r.spent)
-    wall = time.perf_counter() - t0
-    return r, wall
+    first = time.perf_counter() - t0
+    if not timed:       # baseline pass: results only, skip the re-run
+        return r, float("nan"), float("nan")
+    wall = float("inf")
+    for _ in range(2):  # best-of-2: damp container load noise
+        t0 = time.perf_counter()
+        r = simulation.run_experiment(g, fleet, **kw)  # steady state
+        jax.block_until_ready(r.spent)
+        wall = min(wall, time.perf_counter() - t0)
+    return r, wall, max(first - wall, 0.0)
+
+
+def _rank_crossover():
+    """Wall-clock of the three exact ranking algorithms, XLA-compiled
+    on [8, J] rows -- the measured basis of the
+    ``RANK_BITONIC_MIN_J`` in-kernel crossover (docs/PERFORMANCE.md).
+    The bitonic needs a power-of-two width, so J sweeps powers of 2."""
+    rows = {}
+    rng = np.random.RandomState(0)
+    algos = {
+        "pairwise_o_j2": event_scan_mod._pairwise_rank,
+        "bitonic_o_jlog2j": event_scan_mod._bitonic_rank,
+        "lexsort_o_jlogj": event_scan_mod._lexsort_rank,
+    }
+    for j in (64, 128, 256, 512, 1024):
+        rem = jnp.asarray(rng.exponential(50.0, (8, j)), jnp.float32)
+        tie = jnp.asarray(
+            rng.permutation(8 * j).reshape(8, j), jnp.float32)
+        valid = rem > 10.0
+        cell = {}
+        for name, fn in algos.items():
+            f = jax.jit(lambda rem, tie, valid, fn=fn:
+                        fn(rem, tie, valid)[0])
+            jax.block_until_ready(f(rem, tie, valid))
+            t0 = time.perf_counter()
+            n = 50
+            for _ in range(n):
+                out = f(rem, tie, valid)
+            jax.block_until_ready(out)
+            cell[name] = (time.perf_counter() - t0) / n * 1e6  # us
+        rows[f"j{j}"] = cell
+    rows["crossover_j"] = event_scan_mod.RANK_BITONIC_MIN_J
+    return rows
+
+
+def _sweep_vmap():
+    """sweep (vmapped deadline x budget grid) at batch=1 vs the engine
+    default batch: measures whether speculation pays under vmap (conds
+    lower to selects -- both branches execute, so every skipped sort
+    runs anyway) and backs the ``sweep``/``run_inner`` ``batch=1``
+    default (docs/PERFORMANCE.md).  A reduced 20-user workload keeps
+    the cell CI-sized -- the vmap effect is structural, not
+    scale-dependent."""
+    fleet = resource.wwg_fleet()
+    g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=25, n_users=20)
+    deadlines = jnp.asarray([1500.0, 2000.0])
+    budgets = jnp.asarray([15000.0, 22000.0])
+    out = {}
+    ref = None
+    for batch in (1, engine.DEFAULT_BATCH):
+        kw = dict(opt=types.OPT_COST, n_users=20, batch=batch)
+        r = simulation.sweep(g, fleet, deadlines, budgets, **kw)
+        jax.block_until_ready(r.spent)
+        t0 = time.perf_counter()
+        r = simulation.sweep(g, fleet, deadlines, budgets, **kw)
+        jax.block_until_ready(r.spent)
+        out[f"wall_s_batch{batch}"] = time.perf_counter() - t0
+        if ref is None:
+            ref = r
+        else:
+            out["identical"] = bool(
+                np.array_equal(np.asarray(r.n_done),
+                               np.asarray(ref.n_done)) and
+                np.array_equal(np.asarray(r.spent),
+                               np.asarray(ref.spent)))
+    out["batch_speedup"] = (out["wall_s_batch1"] /
+                            out[f"wall_s_batch{engine.DEFAULT_BATCH}"])
+    return out
 
 
 def run():
-    fleet = resource.wwg_fleet()
     try:
         golden = json.load(open(GOLDEN_PATH))
     except OSError:
         golden = {}
     report, out = {}, []
-    for n_users, n_jobs, scenario in SCENARIOS:
-        r, wall = _one(fleet, n_users, n_jobs, scenario,
-                       engine.DEFAULT_BATCH)
-        r1, _ = _one(fleet, n_users, n_jobs, scenario, 1, timed=False)
+    for n_users, n_jobs, scenario, fleet_fn, deadline, budget in \
+            SCENARIOS:
+        fleet = resource.wwg_fleet() if fleet_fn is None else fleet_fn()
+        r, wall, compile_s = _one(fleet, n_users, n_jobs, scenario,
+                                  engine.DEFAULT_BATCH, deadline, budget)
+        r1, _, _ = _one(fleet, n_users, n_jobs, scenario, 1, deadline,
+                        budget, timed=False)
         events = int(np.asarray(r.n_events))
         steps = int(np.asarray(r.n_steps))
         steps_k1 = int(np.asarray(r1.n_steps))
@@ -84,6 +195,7 @@ def run():
             "n_jobs_per_user": n_jobs,
             "batch": engine.DEFAULT_BATCH,
             "wall_s": wall,
+            "compile_s": compile_s,
             "events": events,
             "supersteps": steps,
             "spec_supersteps": int(np.asarray(r.n_spec)),
@@ -99,6 +211,9 @@ def run():
                 int(np.asarray(r.n_events)) == int(np.asarray(r1.n_events))),
             "events_per_sec": events / max(wall, 1e-9),
             "events_per_superstep": events / max(steps, 1),
+            "scan_reseeds": int(np.asarray(r.n_reseeds)),
+            "slab_hit_rate": 1.0 - (int(np.asarray(r.n_reseeds)) /
+                                    max(int(np.asarray(r.n_scans)), 1)),
             "n_done": float(np.asarray(r.n_done).sum()),
             "spent": float(np.asarray(r.spent).sum()),
             "overflow": int(np.asarray(r.overflow)),
@@ -112,8 +227,15 @@ def run():
             cell["n_failed"] = int(np.asarray(r.n_failed))
             cell["n_resubmits"] = int(np.asarray(r.n_resubmits))
             cell["downtime_total"] = float(np.asarray(r.downtime).sum())
-        base = None if scenario is not None else \
-            golden.get(f"{n_users}u_{n_jobs}j")
+        if fleet_fn is not None:
+            cell["fleet"] = "deep_2x80pe"
+            cell["j_cap"] = int(simulation.safe_max_jobs(
+                gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
+                                  n_users=n_users),
+                engine.default_params(deadline, budget, types.OPT_COST,
+                                      n_users, fleet.r), fleet))
+        base = None if (scenario is not None or fleet_fn is not None) \
+            else golden.get(f"{n_users}u_{n_jobs}j")
         if base is not None:
             cell["pre_superstep_iterations"] = base["iterations"]
             cell["iteration_ratio"] = base["iterations"] / max(steps, 1)
@@ -125,6 +247,7 @@ def run():
                             rtol=1e-5))
         report[name] = cell
         derived = (f"events/s~{cell['events_per_sec']:.0f} "
+                   f"(compile {compile_s:.1f}s) "
                    f"steps={steps} (k1={steps_k1}, "
                    f"{cell['batch_iteration_ratio']:.2f}x) "
                    f"done={cell['n_done']:.0f} "
@@ -135,6 +258,18 @@ def run():
             derived += (f" failed={cell['n_failed']} "
                         f"resub={cell['n_resubmits']}")
         out.append((name, wall * 1e6, derived))
+
+    report["_rank_crossover"] = _rank_crossover()
+    report["_sweep_vmap"] = _sweep_vmap()
+    out.append(("rank_crossover", 0.0,
+                " ".join(f"{k}:p{v['pairwise_o_j2']:.0f}us/"
+                         f"b{v['bitonic_o_jlog2j']:.0f}us"
+                         for k, v in report["_rank_crossover"].items()
+                         if k.startswith("j"))))
+    out.append(("sweep_vmap", report["_sweep_vmap"]["wall_s_batch1"] * 1e6,
+                f"batch{engine.DEFAULT_BATCH}/batch1 speedup="
+                f"{report['_sweep_vmap']['batch_speedup']:.2f}x "
+                f"identical={report['_sweep_vmap'].get('identical')}"))
 
     with open(art_path("BENCH_engine.json"), "w") as f:
         json.dump(report, f, indent=1)

@@ -33,18 +33,21 @@ def _delta(new, old):
 
 
 def render(report: dict, baseline: dict | None = None) -> str:
-    cols = ["scenario", "events/sec", "while-loop iters",
+    cols = ["scenario", "events/sec", "compile s", "while-loop iters",
             "events/superstep", "events", "identical"]
     if baseline is not None:
         cols += ["Δ events/sec", "Δ events/superstep"]
     lines = ["| " + " | ".join(cols) + " |",
              "|" + "---|" * len(cols)]
     for name, cell in sorted(report.items()):
+        if name.startswith("_"):
+            continue            # microbench sections rendered below
         eps = cell.get("events_per_sec")
         epb = cell.get("events_per_superstep")
         ident = cell.get("batched_identical",
                          cell.get("result_identical"))
-        row = [name, _fmt(eps), _fmt(cell.get("supersteps")),
+        row = [name, _fmt(eps), _fmt(cell.get("compile_s"), 1),
+               _fmt(cell.get("supersteps")),
                _fmt(epb, 2), _fmt(cell.get("events")),
                "--" if ident is None else ("yes" if ident else "**NO**")]
         if baseline is not None:
@@ -57,6 +60,32 @@ def render(report: dict, baseline: dict | None = None) -> str:
         lines.append("Δ columns compare against the committed artifact "
                      "(wall-clock varies with runner load; "
                      "events/superstep is deterministic).")
+    rc = report.get("_rank_crossover")
+    if rc:
+        lines += ["", "#### In-kernel rank crossover (us per call, "
+                  "[8, J] rows, XLA CPU; crossover constant J = "
+                  f"{rc.get('crossover_j')})", ""]
+        lines += ["| J | pairwise O(J^2) | bitonic O(J log^2 J) | "
+                  "lexsort O(J log J) |", "|---|---|---|---|"]
+        for k, v in sorted(rc.items(),
+                           key=lambda kv: (len(kv[0]), kv[0])):
+            if not k.startswith("j"):
+                continue
+            lines.append(
+                f"| {k[1:]} | {_fmt(v.get('pairwise_o_j2'), 1)} | "
+                f"{_fmt(v.get('bitonic_o_jlog2j'), 1)} | "
+                f"{_fmt(v.get('lexsort_o_jlogj'), 1)} |")
+    sv = report.get("_sweep_vmap")
+    if sv:
+        lines += ["", "#### sweep under vmap (2x2 grid, 20u scenario)",
+                  "", "| batch=1 wall s | batched wall s | speedup | "
+                  "identical |", "|---|---|---|---|"]
+        walls = sorted(k for k in sv if k.startswith("wall_s_batch"))
+        lines.append(
+            "| " + " | ".join(
+                [_fmt(sv.get(walls[0]), 2), _fmt(sv.get(walls[-1]), 2),
+                 f"{sv.get('batch_speedup', 0):.2f}x",
+                 str(sv.get("identical"))]) + " |")
     return "\n".join(lines)
 
 

@@ -29,10 +29,12 @@ tests).
 
 EventSource protocol
 --------------------
-The engine does not hard-code its event kinds; it takes the min over the
-``next_time`` of every registered :class:`EventSource` and applies every
-source due at the earliest timestamp in one superstep.  A source is any
-object with
+The engine does not hard-code its event kinds; every registered
+:class:`EventSource` exposes its pending instants as an **array of
+candidate times**, the engine concatenates all of them, and one fused
+``kernels.ops.event_frontier`` pass answers "what fires next, who, and
+how far is speculation safe" per superstep.  A source is any object
+with
 
   * ``kind``  -- its trace code (the ``K_*`` constants below), which is
     also its rank in the fixed tie-break priority order
@@ -41,28 +43,46 @@ object with
         COMPLETION > FAILURE > RECOVERY > RESERVATION > RETURN
                    > ARRIVAL > CALENDAR_STEP > BROKER
 
-  * ``next_time(state) -> f32[]`` -- the earliest pending instant of
-    this kind (+inf when none); must be jit-traceable.
+  * ``candidates(state) -> f32[C]`` -- the source's pending instants as
+    a fixed-shape vector of absolute times, ``+inf`` where nothing is
+    pending (``C`` may be 0 and may differ per source: the failure
+    source exposes one stream per resource, RETURN/ARRIVAL one slot per
+    gridlet, the broker a single scalar).  Must be jit-traceable.  The
+    engine takes the min *through the frontier op*, so a source never
+    needs to pre-reduce -- exposing the raw per-stream instants is what
+    lets the frontier treat streams individually (source-aware
+    horizons below).
+  * ``next_time(state) -> f32[]`` -- thin wrapper: the min over
+    ``candidates`` (+inf when none).  Kept for tests, user entities and
+    any caller that wants one source's scalar view; the engine hot path
+    does not call it.
   * ``apply(state, now) -> state`` -- apply *every* event of this kind
     with time <= ``now``; must be jit-traceable and the identity when
     nothing is due (zero-rate sources then cost nothing and perturb
     no result -- the engine relies on this for bit-for-bit
     reproducibility of scenarios that do not use a source).
-  * ``horizon(state, t_max) -> f32[]`` -- the **speculation-safety
-    hook** (optional; defaults to ``next_time(state)``).  The engine's
-    k-step batched superstep (engine.step_batched) speculatively
-    applies several consecutive event timestamps inside one while-loop
-    iteration; ``horizon`` must return a lower bound on every instant
-    at which this source could fire -- or otherwise invalidate
-    speculation -- during ``(state.t, t_max]``, *given that only
-    speculation-safe events apply in between*.  The default (the
-    source's own ``next_time``) is always safe because the batched path
-    cuts speculation strictly before the earliest horizon: the source
-    is then guaranteed to be applied by the ordinary superstep
-    machinery, never skipped over.  A source whose firings commute with
-    speculation (COMPLETION and RETURN: they change no other source's
-    pending instant to an earlier value) overrides it with
-    :func:`no_interference` to keep the horizon open.
+  * ``horizon(state, t_max) -> f32[]`` / ``horizon_candidates(state) ->
+    f32[H]`` -- the **speculation-safety hook** (optional; defaults to
+    ``candidates``).  The engine's k-step batched superstep
+    (engine.step_batched) speculatively applies several consecutive
+    event timestamps inside one while-loop iteration; the horizon
+    candidates must lower-bound every instant at which this source
+    could fire -- or otherwise invalidate speculation -- during
+    ``(state.t, t_max]``, *given that only speculation-safe events
+    apply in between*.  The default (the source's own candidates) is
+    always safe because the batched path cuts speculation strictly
+    before the earliest horizon: the source is then guaranteed to be
+    applied by the ordinary superstep machinery, never skipped over.
+    A source whose firings commute with speculation (COMPLETION and
+    RETURN: they change no other source's pending instant to an
+    earlier value) overrides ``horizon_fn`` with
+    :func:`no_interference`, contributing no horizon candidates at
+    all.  Because horizons are per *candidate*, a source can also be
+    partially safe: each stream only cuts the horizon if it can
+    actually interfere (a per-resource failure stream with ``mtbf = 0``
+    is +inf and cuts nothing -- its row can never be hit), and
+    ``horizon_candidates`` may return something strictly between
+    "my every candidate" and "nothing".
 
 :class:`FnSource` is the plain-closure implementation the engine and
 user extensions build sources from; see docs/ARCHITECTURE.md for the
@@ -115,32 +135,55 @@ def no_interference(state, t_max) -> jax.Array:
 class FnSource:
     """An :class:`EventSource` built from closures.
 
-    ``next_time``/``apply`` close over whatever static context they need
-    (fleet arrays, params, the engine's per-superstep scratch dict);
-    the engine only sees the uniform protocol.  ``horizon_fn`` is
-    optional: when omitted, ``horizon`` falls back to ``next_time`` --
-    the conservative choice that makes any firing of this source cut
-    the k-step speculation horizon.
+    ``candidates``/``apply`` close over whatever static context they
+    need (fleet arrays, params, the engine's per-superstep scratch
+    dict); the engine only sees the uniform protocol.  ``horizon_fn``
+    is optional: when omitted, every candidate of this source cuts the
+    k-step speculation horizon -- the conservative choice.  Setting it
+    to :func:`no_interference` declares the source speculation-safe
+    (no horizon candidates at all); any other callable is treated as a
+    scalar ``(state, t_max) -> f32[]`` lower bound, and
+    ``horizon_candidates_fn`` can instead supply a per-stream vector
+    (the source-aware form the frontier op consumes directly).
     """
     kind: int
     name: str
-    next_time_fn: Callable
+    candidates_fn: Callable
     apply_fn: Callable
     horizon_fn: Callable | None = None
+    horizon_candidates_fn: Callable | None = None
+
+    def candidates(self, state) -> jax.Array:
+        """Pending instants f32[C], +inf-padded (C may be 0)."""
+        return jnp.atleast_1d(self.candidates_fn(state))
 
     def next_time(self, state) -> jax.Array:
-        return self.next_time_fn(state)
+        """Thin wrapper: earliest pending instant (+inf when none)."""
+        c = self.candidates(state)
+        return c.min() if c.shape[0] else jnp.asarray(INF, jnp.float32)
 
     def apply(self, state, now):
         return self.apply_fn(state, now)
 
+    def horizon_candidates(self, state) -> jax.Array:
+        """Instants in ``(state.t, +inf]`` at which this source could
+        interfere with speculative multi-timestamp batching, as a
+        vector for the fused frontier pass; empty for speculation-safe
+        sources.  Defaults to ``candidates`` (conservative)."""
+        if self.horizon_fn is no_interference:
+            return jnp.zeros((0,), jnp.float32)
+        if self.horizon_candidates_fn is not None:
+            return jnp.atleast_1d(self.horizon_candidates_fn(state))
+        if self.horizon_fn is not None:
+            return jnp.reshape(self.horizon_fn(state, INF), (1,))
+        return self.candidates(state)
+
     def horizon(self, state, t_max) -> jax.Array:
-        """Earliest instant in ``(state.t, t_max]`` at which this source
-        could interfere with speculative multi-timestamp batching; +inf
-        when it cannot.  Defaults to ``next_time`` (conservative)."""
-        if self.horizon_fn is None:
-            return self.next_time_fn(state)
-        return self.horizon_fn(state, t_max)
+        """Thin scalar wrapper over :meth:`horizon_candidates`."""
+        if self.horizon_fn is not None:
+            return self.horizon_fn(state, t_max)
+        c = self.horizon_candidates(state)
+        return c.min() if c.shape[0] else jnp.asarray(INF, jnp.float32)
 
 
 @pytree_dataclass

@@ -32,8 +32,11 @@ Superstep semantics
 -------------------
 The paper's engine (section 3.4) pops one timestamp-ordered event per
 iteration.  A superstep instead asks every registered event source (the
-``des.EventSource`` protocol: ``next_time(state)`` / ``apply(state,
-now)``) for its earliest pending instant:
+``des.EventSource`` protocol: ``candidates(state)`` / ``apply(state,
+now)``) for its pending instants -- one fused
+``kernels.ops.event_frontier`` min/mask pass over the concatenated
+candidate vectors yields the earliest instant t*, the per-source fired
+masks, and (for the batched path) the speculation horizon:
 
   COMPLETION    -- forecast finish of the smallest-remaining-share job
                    (paper Fig 7 step 2d / Fig 10: internal events),
@@ -113,6 +116,25 @@ scenarios (failures every superstep) degrade gracefully: every
 micro-step declines and the loop behaves like ``batch=1``.  See
 docs/PERFORMANCE.md for the safety argument and measurements.
 
+Slab-fed scans (the sort-free hot path)
+---------------------------------------
+The while-loop carry holds a **slab**: the last scan's (remaining, tie)
+rank table plus the FCFS/SJF queue ranking, each with a validity flag.
+Completions depart in rank order (a per-row prefix), so both rankings
+survive ordinary supersteps by a per-row subtraction; the next scan --
+committing or speculative -- injects the carried rank into the
+identical Fig 8 arithmetic (``event_scan_xla(rank=...)``) and runs
+with zero sorts.  Validity is *checked* each scan
+(:func:`_partition_ok`: the rank's only consumer is the
+MaxShare/MinShare divisor split, so boundary agreement with the value
+order is sufficient) and the carry is dropped whenever the table
+restructures where ranks matter (admissions/arrivals onto time-shared
+rows, failures, recoveries, reservation boundaries; new queue members
+for the queue half) -- one exact lexsort then reseeds it.
+``SimState.n_reseeds`` counts those reseeds; completion-dominated runs
+stay >90% sort-free, and the count is identical for every ``batch``
+value.  See docs/PERFORMANCE.md.
+
 ``SimState.n_events`` counts applied events, ``n_steps`` counts
 while-loop iterations (committing supersteps), ``n_spec`` counts the
 speculative supersteps the batched path folded into them; ``overflow``
@@ -130,6 +152,7 @@ import jax.numpy as jnp
 from . import broker as broker_mod
 from . import calendar, des, network, rand
 from . import reservation as resv_mod
+from ..kernels import event_scan as _event_kernels
 from ..kernels import ops as kernel_ops
 from ..kernels.event_scan import BIG as _BIG  # empty-slot sentinel
 from .segments import group_rank
@@ -220,6 +243,11 @@ class SimState:
                                #     supersteps; speculative ones excluded)
     n_spec: jax.Array          # i32 speculative supersteps applied by the
                                #     k-step batched path
+    n_reseeds: jax.Array       # i32 scans that re-sorted the job-slot
+                               #     table (slab carry misses)
+    n_scans: jax.Array         # i32 Fig 8 scans performed (committing +
+                               #     speculative, incl. declined micro-
+                               #     steps) -- the reseed denominator
     n_trace: jax.Array         # i32 trace entries written
     n_failed: jax.Array        # i32 gridlets hit by a failure
     n_resubmits: jax.Array     # i32 FAILED gridlets re-dispatched
@@ -241,6 +269,8 @@ class SimResult(NamedTuple):
     n_resubmits: jax.Array
     downtime: jax.Array
     n_spec: jax.Array
+    n_reseeds: jax.Array
+    n_scans: jax.Array
 
 
 # ----------------------------------------------------------------------
@@ -285,25 +315,23 @@ def _reserved_pes(params, t, n_resources):
                                n_resources)
 
 
-def _scan_events(state, fleet, params, n_resources, r_pad):
-    """Resource-major Fig 8 scan through kernels.ops.event_scan.
+def _table_inputs(state, fleet, params, n_resources, r_pad):
+    """Gather the [R_pad, J] job-slot table and the per-row kernel
+    inputs -- the shared prologue of the committing scan and the
+    slab-fed speculative scan (identical arithmetic is what keeps the
+    two paths bit-for-bit interchangeable).
 
-    Gathers ``remaining`` into the [R_pad, J] job-slot table (flat
-    gridlet index as the FIFO tie-break key) and returns the kernel
-    outputs (rate [R_pad, J], t_min [R_pad], argmin col [R_pad],
-    occupancy [R_pad]).  Reservation-held PEs and down resources enter
-    as the kernel's ``pe_blocked`` / ``row_ok`` masks.
+    An occupied slot whose remaining underflowed to exactly 0 (f32
+    advance rounding) must stay visible to the kernel -- 0 is the
+    empty-slot sentinel -- so it is clamped to a tiny epsilon: it then
+    forecasts an immediate completion and keeps its PE share, exactly
+    as a zero-remaining RUNNING job did in the one-event-at-a-time
+    engine.
     """
     g = state.g
     rg = state.row_gridlet
     occupied = rg >= 0
     gid = jnp.clip(rg, 0, g.n - 1)
-    # An occupied slot whose remaining underflowed to exactly 0 (f32
-    # advance rounding) must stay visible to the kernel -- 0 is the
-    # empty-slot sentinel -- so it is clamped to a tiny epsilon: it then
-    # forecasts an immediate completion and keeps its PE share, exactly
-    # as a zero-remaining RUNNING job did in the one-event-at-a-time
-    # engine.
     rem_rj = jnp.where(occupied,
                        jnp.maximum(g.remaining[gid], 1e-30), 0.0)
     tie_rj = jnp.where(occupied, rg, 2 ** 30).astype(jnp.float32)
@@ -315,10 +343,27 @@ def _scan_events(state, fleet, params, n_resources, r_pad):
     blocked = jnp.pad(
         _reserved_pes(params, state.t, n_resources).astype(jnp.float32),
         (0, pad))
-    row_ok = jnp.pad(state.res_up, (0, pad), constant_values=True)
+    row_ok = jnp.pad(state.res_up, (0, pad),
+                     constant_values=True).astype(jnp.float32)
+    return rem_rj, tie_rj, eff, npe, pol, blocked, row_ok
+
+
+def _scan_events(state, fleet, params, n_resources, r_pad, rank=None):
+    """Resource-major Fig 8 scan through kernels.ops.event_scan.
+
+    Gathers ``remaining`` into the [R_pad, J] job-slot table (flat
+    gridlet index as the FIFO tie-break key) and returns the kernel
+    outputs (rate [R_pad, J], t_min [R_pad], argmin col [R_pad],
+    occupancy [R_pad], rank [R_pad, J]).  Reservation-held PEs and down
+    resources enter as the kernel's ``pe_blocked`` / ``row_ok`` masks.
+    ``rank`` injects a precomputed rank table (the slab-fed speculative
+    path), making the scan entirely sort-free.
+    """
+    rem_rj, tie_rj, eff, npe, pol, blocked, row_ok = _table_inputs(
+        state, fleet, params, n_resources, r_pad)
     return kernel_ops.event_scan(rem_rj, eff, npe, tie=tie_rj, policy=pol,
-                                 pe_blocked=blocked,
-                                 row_ok=row_ok.astype(jnp.float32))
+                                 pe_blocked=blocked, row_ok=row_ok,
+                                 rank=rank, with_rank=True)
 
 
 # ----------------------------------------------------------------------
@@ -336,6 +381,20 @@ def _free_slots(state, mask, res, r_pad):
                    slot=jnp.where(mask, -1, state.slot))
 
 
+def _count_rank(res, mask, n_resources):
+    """Rank of each masked element among its resource's masked set, in
+    flat-index order -- ``group_rank(res, mask, idx, R)`` without the
+    sort: when the order key IS the array order, the rank is a running
+    segmented count (one [N, R] cumsum; XLA CPU sorts at this size cost
+    ~10x more).  Non-members get garbage (callers mask)."""
+    onehot = ((res[:, None] ==
+               jnp.arange(n_resources, dtype=jnp.int32)[None, :])
+              & mask[:, None]).astype(jnp.int32)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(excl, res[:, None].astype(jnp.int32),
+                               axis=1)[:, 0]
+
+
 def _alloc_slots(state, mask, res, n_resources, r_pad):
     """Allocate a free job-slot column to every gridlet in ``mask``.
 
@@ -343,6 +402,12 @@ def _alloc_slots(state, mask, res, n_resources, r_pad):
     FIFO tie-break also used by the kernel, so column identity never
     matters).  Gridlets that find no free column are counted in
     ``overflow`` -- drivers size J so this cannot happen.
+
+    Sort-free: the per-resource batch rank is a running segmented count
+    (:func:`_count_rank`), and the rank-th free column comes from an
+    unrolled binary search over the row's running free-column count --
+    log2(J) cheap gathers instead of a [R, J] argsort or scatter (both
+    ~10x slower on XLA CPU at fleet shapes).
     """
     from .types import replace
     g = state.g
@@ -350,11 +415,23 @@ def _alloc_slots(state, mask, res, n_resources, r_pad):
     j_cap = state.row_gridlet.shape[1]
     idx = jnp.arange(n, dtype=jnp.int32)
     used = state.row_gridlet >= 0
-    free_order = jnp.argsort(used, axis=1, stable=True)   # free cols first
-    n_free = j_cap - jnp.sum(used, axis=1)                # [R_pad]
-    rank, _ = group_rank(res, mask, idx, n_resources)
+    free = ~used
+    n_free = jnp.sum(free, axis=1)                        # [R_pad]
+    rank = _count_rank(res, mask, n_resources)
     ok = mask & (rank < n_free[res])
-    col = free_order[res, jnp.clip(rank, 0, j_cap - 1)]
+    # col = the rank-th free column of the row = the smallest c whose
+    # inclusive free count reaches rank + 1 (same column the stable
+    # argsort-of-used used to yield).
+    cumfree = jnp.cumsum(free.astype(jnp.int32), axis=1)  # [R_pad, J]
+    want = rank + 1
+    lo = jnp.zeros((n,), jnp.int32)
+    hi = jnp.full((n,), j_cap - 1, jnp.int32)
+    for _ in range(max(1, (j_cap - 1).bit_length())):
+        mid = (lo + hi) // 2
+        ge = cumfree[res, mid] >= want
+        lo = jnp.where(ge, lo, mid + 1)
+        hi = jnp.where(ge, mid, hi)
+    col = hi
     rows = jnp.where(ok, res, r_pad)            # out of range: dropped
     cols = jnp.where(ok, col, 0)
     rg = state.row_gridlet.at[rows, cols].set(idx, mode="drop")
@@ -380,12 +457,12 @@ def _apply_completions(state, fleet, completes, t_next, n_resources,
     return _free_slots(replace(state, g=g), completes, res, r_pad)
 
 
-def _admit_queued(state, fleet, free_pe, t_next, n_resources):
-    """Freed space-shared PEs admit the next queued Gridlets in FCFS/SJF
-    order (Fig 10 step 3).  Returns (state, admitted mask) -- slots are
-    allocated later together with the arrival batch.
-    """
-    from .types import replace
+def _queue_rank(state, fleet, n_resources):
+    """Fresh FCFS/SJF within-resource rank of every QUEUED gridlet --
+    the seed of the queue-rank carry (one lexsort; both keys are static
+    while a job stays queued, and admissions only ever remove a rank
+    prefix, so the carry stays exact until the queue *membership*
+    changes)."""
     g = state.g
     res = jnp.clip(g.resource, 0, n_resources - 1)
     queued = g.status == QUEUED
@@ -393,8 +470,20 @@ def _admit_queued(state, fleet, free_pe, t_next, n_resources):
     # arrival instant in t_event); SJF: smallest job. Ties by index.
     qkey = jnp.where(fleet.queue_policy[res] == SJF, g.length_mi,
                      g.t_event)
-    rank, _ = group_rank(res, queued, qkey, n_resources)
-    admitq = queued & (rank < free_pe[res])
+    return group_rank(res, queued, qkey, n_resources)[0]
+
+
+def _admit_queued(state, fleet, free_pe, t_next, n_resources, qrank):
+    """Freed space-shared PEs admit the next queued Gridlets in FCFS/SJF
+    order (Fig 10 step 3) -- the ``qrank`` lowest ranks per resource.
+    Returns (state, admitted mask) -- slots are allocated later
+    together with the arrival batch.
+    """
+    from .types import replace
+    g = state.g
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    queued = g.status == QUEUED
+    admitq = queued & (qrank < free_pe[res])
     g = replace(
         g,
         status=jnp.where(admitq, RUNNING, g.status),
@@ -457,7 +546,7 @@ def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_users,
     the order the one-at-a-time loop (ARRIVAL before BROKER at equal
     time) admits them -- and the rest join the queue stamped with their
     arrival instant (the FCFS key).  Returns (state, arrival mask,
-    newly-running mask).
+    newly-running mask, newly-queued mask).
     """
     from .types import replace
     g = state.g
@@ -487,7 +576,7 @@ def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_users,
         t_event=jnp.where(arr_run, INF,
                           jnp.where(arr_queue, t_next, g.t_event)),
     )
-    return replace(state, g=g), arr_due, arr_run
+    return replace(state, g=g), arr_due, arr_run, arr_queue
 
 
 def _apply_failures(state, fleet, params, due_r, now, n_users,
@@ -535,7 +624,8 @@ def _apply_recoveries(state, params, due_r, now):
         fail_since=jnp.where(due_r, INF, state.fail_since))
 
 
-def _admit_after_reservation(state, fleet, params, now, n_resources):
+def _admit_after_reservation(state, fleet, params, now, n_resources,
+                             qrank):
     """A reservation boundary changed the blocked-PE counts: re-admit
     queued work onto whatever space-shared capacity is now free."""
     g = state.g
@@ -546,7 +636,7 @@ def _admit_after_reservation(state, fleet, params, now, n_resources):
     avail = fleet.num_pe - _reserved_pes(params, now, n_resources) - busy
     free_pe = jnp.where((fleet.policy == SPACE_SHARED) & state.res_up,
                         jnp.maximum(avail, 0), 0)
-    return _admit_queued(state, fleet, free_pe, now, n_resources)
+    return _admit_queued(state, fleet, free_pe, now, n_resources, qrank)
 
 
 # ----------------------------------------------------------------------
@@ -570,12 +660,15 @@ def _make_sources(fleet, params, n_users, ctx):
     """
     n_resources = fleet.r
 
-    # -- COMPLETION: the kernel scan IS the next_time computation -------
-    def completion_next(state):
+    # -- COMPLETION: the kernel scan IS the candidate computation -------
+    def completion_candidates(state):
         r_pad = state.row_gridlet.shape[0]
-        ctx["scan"] = _scan_events(state, fleet, params, n_resources,
-                                   r_pad)
-        tmin = ctx["scan"][1].min()
+        if "scan" not in ctx:       # the speculative path presets it
+            ctx["scan"] = _scan_events(state, fleet, params,
+                                       n_resources, r_pad)
+        tmin = ctx["scan"][1]
+        # per-ROW forecast instants: the frontier op takes the min (the
+        # add is monotone, so min(t + tmin_r) == t + min(tmin_r) in f32)
         return jnp.where(tmin < _BIG, state.t + tmin, INF)
 
     def completion_apply(state, now):
@@ -589,18 +682,38 @@ def _make_sources(fleet, params, n_users, ctx):
         # this batch's completions is the exact busy count.
         n_comp_r = jax.ops.segment_sum(completes.astype(jnp.int32), res,
                                        num_segments=n_resources)
+        ctx["n_comp_r"] = n_comp_r
         avail = fleet.num_pe - _reserved_pes(params, now, n_resources)
         free_pe = jnp.maximum(avail - (occ_rows[:n_resources] - n_comp_r),
                               0)
         free_pe = jnp.where((fleet.policy == SPACE_SHARED) & state.res_up,
                             free_pe, 0)
         ss_freed = completes & (fleet.policy[res] == SPACE_SHARED)
-        state, admitq = jax.lax.cond(
-            ss_freed.any(),
-            lambda s: _admit_queued(s, fleet, free_pe, now, n_resources),
-            lambda s: (s, jnp.zeros_like(completes)), state)
-        ctx["free_pe"] = free_pe - jax.ops.segment_sum(
+        # The admission only runs when a space-shared completion could
+        # actually admit something: with an empty queue the admission
+        # is the identity (rank BIG for everyone), so gating on
+        # QUEUED.any() is result-identical.  The FCFS/SJF queue rank
+        # comes from the carried queue ordering when it is still valid
+        # (admissions remove rank prefixes, so it usually is) -- the
+        # lexsort seed only reruns after the queue membership changed.
+        pred = ss_freed.any() & (state.g.status == QUEUED).any()
+        qr0, qok = ctx["qcarry"]
+
+        def admit(s):
+            qr = jax.lax.cond(
+                qok, lambda: qr0,
+                lambda: _queue_rank(s, fleet, n_resources))
+            s, admitq = _admit_queued(s, fleet, free_pe, now,
+                                      n_resources, qr)
+            return s, admitq, qr
+
+        state, admitq, qr_used = jax.lax.cond(
+            pred, admit, lambda s: (s, jnp.zeros_like(completes), qr0),
+            state)
+        n_admit_r = jax.ops.segment_sum(
             admitq.astype(jnp.int32), res, num_segments=n_resources)
+        ctx["qcarry"] = (qr_used - n_admit_r[res], qok | pred)
+        ctx["free_pe"] = free_pe - n_admit_r
         ctx["newly"] = admitq
         ctx[("count", des.K_COMPLETION)] = jnp.sum(completes,
                                                    dtype=jnp.int32)
@@ -612,6 +725,10 @@ def _make_sources(fleet, params, n_users, ctx):
         due_r = jnp.isfinite(state.next_fail) & (state.next_fail <= now)
         ctx[("count", des.K_FAILURE)] = jnp.sum(due_r, dtype=jnp.int32)
         ctx[("who", des.K_FAILURE)] = jnp.argmax(due_r).astype(jnp.int32)
+        # QUEUED victims leave the queue mid-rank: the carried ordering
+        # no longer describes it.
+        qr, qok = ctx["qcarry"]
+        ctx["qcarry"] = (qr, qok & ~due_r.any())
         return jax.lax.cond(
             due_r.any(),
             lambda s: _apply_failures(s, fleet, params, due_r, now,
@@ -629,29 +746,42 @@ def _make_sources(fleet, params, n_users, ctx):
             lambda s: s, state)
 
     # -- RESERVATION: windows open/close at params.resv_* boundaries ----
-    def reservation_next(state):
-        return resv_mod.next_boundary(params.resv_start, params.resv_end,
-                                      state.t)
+    def reservation_candidates(state):
+        return resv_mod.boundary_candidates(params.resv_start,
+                                            params.resv_end, state.t)
 
     def reservation_apply(state, now):
         fired = ctx["fired_resv"]
-        queued_any = (state.g.status == QUEUED).any()
-        state, admitq = jax.lax.cond(
-            fired & queued_any,
-            lambda s: _admit_after_reservation(s, fleet, params, now,
-                                               n_resources),
-            lambda s: (s, jnp.zeros((s.g.n,), bool)), state)
-        ctx["newly"] = ctx["newly"] | admitq
-        ctx["free_pe"] = ctx["free_pe"] - jax.ops.segment_sum(
+        pred = fired & (state.g.status == QUEUED).any()
+        qr0, qok = ctx["qcarry"]
+
+        def admit(s):
+            qr = jax.lax.cond(
+                qok, lambda: qr0,
+                lambda: _queue_rank(s, fleet, n_resources))
+            s, admitq = _admit_after_reservation(s, fleet, params, now,
+                                                 n_resources, qr)
+            return s, admitq, qr
+
+        state, admitq, qr_used = jax.lax.cond(
+            pred, admit,
+            lambda s: (s, jnp.zeros((s.g.n,), bool), qr0), state)
+        n_admit_r = jax.ops.segment_sum(
             admitq.astype(jnp.int32),
             jnp.clip(state.g.resource, 0, n_resources - 1),
             num_segments=n_resources)
+        ctx["qcarry"] = (
+            qr_used - n_admit_r[jnp.clip(state.g.resource, 0,
+                                         n_resources - 1)],
+            qok | pred)
+        ctx["newly"] = ctx["newly"] | admitq
+        ctx["free_pe"] = ctx["free_pe"] - n_admit_r
         return state
 
     # -- RETURN / ARRIVAL / CALENDAR / BROKER ---------------------------
-    def return_next(state):
+    def return_candidates(state):
         g = state.g
-        return jnp.where(g.status == RETURNING, g.t_event, INF).min()
+        return jnp.where(g.status == RETURNING, g.t_event, INF)
 
     def return_apply(state, now):
         state, ret_due = _apply_returns(state, fleet, now, n_users,
@@ -660,21 +790,24 @@ def _make_sources(fleet, params, n_users, ctx):
         ctx[("who", des.K_RETURN)] = jnp.argmax(ret_due).astype(jnp.int32)
         return state
 
-    def arrival_next(state):
+    def arrival_candidates(state):
         g = state.g
-        return jnp.where(g.status == IN_TRANSIT, g.t_event, INF).min()
+        return jnp.where(g.status == IN_TRANSIT, g.t_event, INF)
 
     def arrival_apply(state, now):
-        state, arr_due, arr_run = _apply_arrivals(
+        state, arr_due, arr_run, arr_queue = _apply_arrivals(
             state, fleet, ctx["free_pe"], ctx["arr_pre"], now, n_users,
             n_resources)
         ctx[("count", des.K_ARRIVAL)] = jnp.sum(arr_due, dtype=jnp.int32)
         ctx[("who", des.K_ARRIVAL)] = jnp.argmax(arr_due).astype(jnp.int32)
         ctx["newly"] = ctx["newly"] | arr_run
+        # New QUEUED members: the carried queue ordering is stale.
+        qr, qok = ctx["qcarry"]
+        ctx["qcarry"] = (qr, qok & ~arr_queue.any())
         return state
 
-    def calendar_next(state):
-        return calendar.next_boundary(fleet, state.t).min()
+    def calendar_candidates(state):
+        return calendar.next_boundary(fleet, state.t)   # per resource
 
     def calendar_apply(state, now):
         # The boundary itself is the event: landing a superstep on it
@@ -682,12 +815,13 @@ def _make_sources(fleet, params, n_users, ctx):
         # are recomputed from the new load next scan).
         return state
 
-    def broker_next(state):
+    def broker_candidates(state):
         active, _ = _user_flags(state, params, fleet, n_users)
         # max(next_sched, t): a failure refund can re-activate a broker
         # whose poll instant already passed; never step time backwards.
         return jnp.where(active.any(),
-                         jnp.maximum(state.next_sched, state.t), INF)
+                         jnp.maximum(state.next_sched, state.t),
+                         INF).reshape(1)
 
     def broker_apply(state, now):
         # Pre-broker arrivals hold admission precedence over the
@@ -702,24 +836,30 @@ def _make_sources(fleet, params, n_users, ctx):
 
     # COMPLETION and RETURN are speculation-safe (horizon_fn): applying
     # them never pulls another source's pending instant earlier, so they
-    # keep the k-step batching horizon open.  Every other source keeps
-    # the conservative default -- its own next_time cuts the horizon.
+    # keep the k-step batching horizon open (no horizon candidates).
+    # Every other source keeps the conservative default -- each of its
+    # candidate streams cuts the horizon at its own instant; a stream
+    # that can never fire (mtbf = 0 failure row, empty reservation
+    # table) is +inf and cuts nothing, which is the source-aware form
+    # the fused frontier consumes.
     sources = (
-        des.FnSource(des.K_COMPLETION, "completion", completion_next,
-                     completion_apply, horizon_fn=des.no_interference),
-        des.FnSource(des.K_FAILURE, "failure",
-                     lambda s: s.next_fail.min(), failure_apply),
-        des.FnSource(des.K_RECOVERY, "recovery",
-                     lambda s: s.next_recover.min(), recovery_apply),
-        des.FnSource(des.K_RESERVATION, "reservation", reservation_next,
-                     reservation_apply),
-        des.FnSource(des.K_RETURN, "return", return_next, return_apply,
+        des.FnSource(des.K_COMPLETION, "completion",
+                     completion_candidates, completion_apply,
                      horizon_fn=des.no_interference),
-        des.FnSource(des.K_ARRIVAL, "arrival", arrival_next,
+        des.FnSource(des.K_FAILURE, "failure",
+                     lambda s: s.next_fail, failure_apply),
+        des.FnSource(des.K_RECOVERY, "recovery",
+                     lambda s: s.next_recover, recovery_apply),
+        des.FnSource(des.K_RESERVATION, "reservation",
+                     reservation_candidates, reservation_apply),
+        des.FnSource(des.K_RETURN, "return", return_candidates,
+                     return_apply, horizon_fn=des.no_interference),
+        des.FnSource(des.K_ARRIVAL, "arrival", arrival_candidates,
                      arrival_apply),
-        des.FnSource(des.K_CALENDAR, "calendar_step", calendar_next,
-                     calendar_apply),
-        des.FnSource(des.K_BROKER, "broker", broker_next, broker_apply),
+        des.FnSource(des.K_CALENDAR, "calendar_step",
+                     calendar_candidates, calendar_apply),
+        des.FnSource(des.K_BROKER, "broker", broker_candidates,
+                     broker_apply),
     )
     # des.PRIORITY_ORDER is the single source of truth for the tie-break
     # ranking; a spliced-in source must be added there too (trace-time
@@ -768,7 +908,7 @@ def _advance_jobs(state, ctx, t_next, any_event, n_resources):
     from .types import replace
     g = state.g
     j_cap = state.row_gridlet.shape[1]
-    rate_rj, tmin_rows, amin_rows, _ = ctx["scan"]
+    rate_rj, tmin_rows, amin_rows = ctx["scan"][:3]
     res = jnp.clip(g.resource, 0, n_resources - 1)
     has_slot = (g.status == RUNNING) & (state.slot >= 0)
     rate = jnp.where(has_slot,
@@ -829,28 +969,55 @@ def _bookkeep(state, fleet, params, n_users, kinds, counts, whos, t_next):
 
 
 def step(state: SimState, fleet, params: SimParams, n_users: int):
-    """One committing superstep: ask every source for its next time,
-    pick the earliest t*, advance the Fig 8 share algebra over [t, t*),
-    apply every source due at t*."""
+    """One committing superstep: ask every source for its candidate
+    instants, pick the earliest t* through the fused frontier pass,
+    advance the Fig 8 share algebra over [t, t*), apply every source
+    due at t*.  (Standalone form without the cross-iteration slab
+    carry; the jitted loops run :func:`_step_commit` directly.)"""
+    state, _ = _step_commit(state, fleet, params, n_users,
+                            _empty_slab(state))
+    return state
+
+
+def _step_commit(state: SimState, fleet, params: SimParams,
+                 n_users: int, slab):
+    """The committing superstep.  Takes and returns the slab carry
+    ``(rank f32[R_pad, J], ok bool[])`` -- the last scan's (remaining,
+    tie) rank table shifted by every completion since, and whether it
+    still describes the current table.  The commit's own scan is
+    slab-fed exactly like the speculative micro-steps' (sort-free when
+    the carry holds, one lexsort reseed when it does not), so a
+    completion-dominated stretch of supersteps runs without any sort
+    at all."""
     from .types import replace
     n_resources = fleet.r
     r_pad = state.row_gridlet.shape[0]
 
-    # ---- every source's earliest pending instant (priority order) ----
+    # ---- fused event frontier over every source's candidates ---------
+    # (one min/mask pass replaces the 8 stacked scalar reductions; the
+    # completion source's candidates come from the slab-fed kernel
+    # scan, preset here)
     ctx = {}
+    ctx["scan"], reseeded = _checked_scan(state, fleet, params,
+                                          n_resources, r_pad, slab)
+    ctx["qcarry"] = (slab[2], slab[3])
+    state = replace(state, n_scans=state.n_scans + 1,
+                    n_reseeds=state.n_reseeds +
+                    reseeded.astype(jnp.int32))
     sources = _make_sources(fleet, params, n_users, ctx)
-    times = jnp.stack([s.next_time(state) for s in sources])
-    t_min_all = times.min()
-    any_event = jnp.isfinite(t_min_all)
-    t_next = jnp.where(any_event, t_min_all, state.t)
+    cands = [s.candidates(state) for s in sources]
+    sizes = tuple(c.shape[0] for c in cands)
+    t_star, fired, _, _, _ = kernel_ops.event_frontier(
+        jnp.concatenate(cands), sizes)
+    any_event = jnp.isfinite(t_star)
+    t_next = jnp.where(any_event, t_star, state.t)
 
     # ---- advance every running job analytically over [t, t_next) -----
     state = _advance_jobs(state, ctx, t_next, any_event, n_resources)
     # All index wiring below is derived from source.kind, so splicing a
     # new source into _make_sources never renumbers the built-ins.
     pos_of = {s.kind: i for i, s in enumerate(sources)}
-    fired_t = [jnp.isfinite(times[i]) & (times[i] <= t_next)
-               for i in range(len(sources))]
+    fired_t = [fired[i] for i in range(len(sources))]
     ctx["fired_resv"] = fired_t[pos_of[des.K_RESERVATION]]
     ctx["fired_b"] = fired_t[pos_of[des.K_BROKER]]
 
@@ -876,10 +1043,112 @@ def step(state: SimState, fleet, params: SimParams, n_users: int):
     kinds = jnp.asarray([s.kind for s in sources], jnp.int32)
     state = _bookkeep(state, fleet, params, n_users, kinds, counts, whos,
                       t_next)
-    return replace(state, n_steps=state.n_steps + 1)
+    state = replace(state, n_steps=state.n_steps + 1)
+
+    fired_interfering = (fired_t[pos_of[des.K_FAILURE]]
+                         | fired_t[pos_of[des.K_RECOVERY]]
+                         | fired_t[pos_of[des.K_RESERVATION]])
+    return state, _slab_after(state, ctx, ctx["scan"], fired_interfering,
+                              fleet, n_resources, r_pad)
 
 
-def _speculative_step(state, fleet, params, n_users, t_safe):
+def _empty_slab(state):
+    """The no-carry slab: forces the next scan (and the next queue
+    admission) through one exact lexsort reseed -- loop entry, and the
+    unjitted :func:`step`.  Layout: ``(rank f32[R_pad, J], ok bool[],
+    qrank i32[N], qok bool[])`` -- the job-slot table's (remaining,
+    tie) rank and the FCFS/SJF queue rank, each with its own validity
+    flag."""
+    return (jnp.zeros(state.row_gridlet.shape, jnp.float32),
+            jnp.asarray(False),
+            jnp.zeros((state.g.n,), jnp.int32),
+            jnp.asarray(False))
+
+
+def _partition_ok(rem, tie, valid, rank, npe_e, g, pol):
+    """True iff the carried rank still yields the exact Fig 8 rate
+    assignment the fresh lexsort rank would.
+
+    The rank feeds exactly one thing: the share divisor ``k + [rank >=
+    msc]`` -- which of the row's jobs sit in the MaxShare set.  So the
+    injected-rank scan is bit-identical to the fresh-sort scan iff the
+    rank's msc-boundary partition matches the (remaining, tie) value
+    order: the lexicographic max of the carried MaxShare side must lie
+    strictly below the lexicographic min of the MinShare side.  That
+    is two masked reductions per row -- no sorts, no scatters.  Rows
+    that never consult the rank pass for free: space-shared rows
+    (every job owns a PE) and rows with ``g <= P_eff`` (everyone gets
+    divisor 1).  Within-partition order drift from f32 advance
+    rounding (two jobs collapsing to equal remaining in "wrong" tie
+    order) is harmless by construction -- equal values share a
+    divisor, complete together, and never straddle a *passing*
+    boundary check.
+    """
+    k = jnp.floor(g / jnp.maximum(npe_e, 1.0))
+    extra = g - k * jnp.maximum(npe_e, 1.0)
+    msc = (npe_e - extra) * k
+    left = valid & (rank < msc)
+    right = valid & (rank >= msc)
+    rem_lo = jnp.max(jnp.where(left, rem, -_BIG), axis=1, keepdims=True)
+    rem_hi = jnp.min(jnp.where(right, rem, _BIG), axis=1, keepdims=True)
+    tie_lo = jnp.max(jnp.where(left & (rem == rem_lo), tie, -_BIG),
+                     axis=1, keepdims=True)
+    tie_hi = jnp.min(jnp.where(right & (rem == rem_hi), tie, _BIG),
+                     axis=1, keepdims=True)
+    row_ok = (rem_lo < rem_hi) | ((rem_lo == rem_hi) & (tie_lo < tie_hi))
+    rank_free = (pol > 0.5) | (g <= npe_e)
+    return jnp.all(rank_free | row_ok)
+
+
+def _checked_scan(state, fleet, params, n_resources, r_pad, slab):
+    """The Fig 8 scan, slab-fed when possible: inject the carried rank
+    (sort-free, purely elementwise) when it still describes the table,
+    else reseed with one exact lexsort scan.  Both branches run the
+    identical downstream arithmetic, so the choice never changes a
+    result -- only whether a sort happens."""
+    rank_carry, slab_ok = slab[0], slab[1]
+    rem, tie, eff, npe, pol, blk, row_ok = _table_inputs(
+        state, fleet, params, n_resources, r_pad)
+    pol_f = pol.astype(jnp.float32)[:, None]
+    npe_e, valid, g = _event_kernels._row_masks(
+        rem, npe.astype(jnp.float32)[:, None], pol_f, blk[:, None],
+        row_ok[:, None])
+    use = slab_ok & _partition_ok(rem, tie, valid, rank_carry, npe_e, g,
+                                  pol_f)
+
+    def inject(_):
+        return kernel_ops.event_scan(rem, eff, npe, tie=tie, policy=pol,
+                                     pe_blocked=blk, row_ok=row_ok,
+                                     rank=rank_carry, with_rank=True)
+
+    def fresh(_):
+        return kernel_ops.event_scan(rem, eff, npe, tie=tie, policy=pol,
+                                     pe_blocked=blk, row_ok=row_ok,
+                                     with_rank=True)
+
+    return jax.lax.cond(use, inject, fresh, None), ~use
+
+
+def _slab_after(state, ctx, scan, fired_interfering, fleet, n_resources,
+                r_pad):
+    """The slab carry after a superstep applied its events: survivors'
+    ranks shift down by the per-row completed count (completions are a
+    value-prefix, hence a rank-prefix), and the carry stays valid
+    unless the table was restructured where ranks matter --
+    newly-RUNNING jobs landing on a *time-shared* row (space-shared
+    rows never consult the rank), or any interfering source firing
+    (failure/recovery/reservation rewrite slots or row masks).  The
+    queue-rank half of the carry was maintained in place by the apply
+    chain (``ctx["qcarry"]``)."""
+    n_comp_r = jnp.pad(ctx["n_comp_r"], (0, r_pad - n_resources))
+    rank = scan[4] - n_comp_r[:, None].astype(jnp.float32)
+    res = jnp.clip(state.g.resource, 0, n_resources - 1)
+    ts_newly = ctx["newly"] & (fleet.policy[res] == TIME_SHARED)
+    qrank, qok = ctx["qcarry"]
+    return (rank, ~(ts_newly.any() | fired_interfering), qrank, qok)
+
+
+def _speculative_step(state, fleet, params, n_users, t_safe, slab):
     """One speculative micro-superstep of the k-step batched path.
 
     Applies the earliest pending COMPLETION/RETURN batch if -- and only
@@ -889,9 +1158,21 @@ def _speculative_step(state, fleet, params, n_users, t_safe):
     instant is min(completion, return) and the full superstep machinery
     reduces to exactly the COMPLETION/RETURN slice applied here -- the
     resulting state, trace rows and counters are bit-for-bit what
-    :func:`step` would have produced.  Returns ``(state, fired)``;
-    ``fired`` False means the state was returned untouched (the caller
-    stops speculating: pending times only move when events apply).
+    :func:`step` would have produced.
+
+    ``slab = (rank, ok)`` is the precomputed-wave carry: the committing
+    superstep's (remaining, tie) rank table, shifted by every departure
+    since.  While it remains valid (``ok`` and :func:`_partition_ok`), the
+    whole scan -- Fig 8 rates, forecasts, argmin, occupancy -- is
+    recomputed **from the carried rank with zero sorts** through the
+    identical arithmetic of the lexsort path (`kernels.event_scan_xla`
+    with an injected rank), so micro-steps consume the slab's waves in
+    rank order instead of re-ranking.  Whenever an admission or another
+    structural change invalidated the carry, the micro-step falls back
+    to one exact rescan and reseeds the carry from its fresh rank.
+    Returns ``(state, fired, slab')``; ``fired`` False means the state
+    was returned untouched (the caller stops speculating: pending times
+    only move when events apply).
     """
     n_resources = fleet.r
     r_pad = state.row_gridlet.shape[0]
@@ -899,7 +1180,20 @@ def _speculative_step(state, fleet, params, n_users, t_safe):
     sources = _make_sources(fleet, params, n_users, ctx)
     by_kind = {s.kind: s for s in sources}
     comp, ret = by_kind[des.K_COMPLETION], by_kind[des.K_RETURN]
-    t_next = jnp.minimum(comp.next_time(state), ret.next_time(state))
+
+    # ---- the scan: slab-fed (sort-free) or exact-rescan reseed -------
+    from .types import replace as _replace
+    ctx["scan"], reseeded = _checked_scan(state, fleet, params,
+                                          n_resources, r_pad, slab)
+    ctx["qcarry"] = (slab[2], slab[3])
+    state = _replace(state, n_scans=state.n_scans + 1,
+                     n_reseeds=state.n_reseeds +
+                     reseeded.astype(jnp.int32))
+    rank_used = ctx["scan"][4]
+
+    tmin = ctx["scan"][1].min()
+    t_comp = jnp.where(tmin < _BIG, state.t + tmin, INF)
+    t_next = jnp.minimum(t_comp, ret.next_time(state))
     fire = jnp.isfinite(t_next) & (t_next < t_safe)
 
     def live(s):
@@ -915,35 +1209,56 @@ def _speculative_step(state, fleet, params, n_users, t_safe):
                           ctx[("who", des.K_RETURN)]])
         s = _bookkeep(s, fleet, params, n_users, kinds, counts, whos,
                       t_next)
-        return replace(s, n_spec=s.n_spec + 1)
+        slab2 = _slab_after(s, ctx, ctx["scan"], jnp.asarray(False),
+                            fleet, n_resources, r_pad)
+        return replace(s, n_spec=s.n_spec + 1), slab2
 
-    return jax.lax.cond(fire, live, lambda s: s, state), fire
+    def dead(s):
+        # Untouched state: the scan just performed (reseeded or not)
+        # still describes the table, so hand it to the next scan.
+        return s, (rank_used, jnp.asarray(True), slab[2], slab[3])
+
+    (state, slab_next) = jax.lax.cond(fire, live, dead, state)
+    return state, fire, slab_next
 
 
 def _speculation_horizon(state, fleet, params, n_users):
     """Earliest instant at which any source could interfere with
     speculative COMPLETION/RETURN batching, derived from the registered
-    sources' ``horizon`` hooks (des.EventSource) -- the safety condition
-    is owned by the sources, not hard-coded here.
+    sources' ``horizon_candidates`` hooks (des.EventSource) through the
+    same fused frontier pass as the committing superstep -- the safety
+    condition is owned by the sources, not hard-coded here.
 
-    COMPLETION and RETURN report +inf (their firings never pull another
-    source's pending instant earlier); every other source conservatively
-    reports its own ``next_time``.  The derived cut is safe because
-    within the slab only completions/returns apply, and none of them can
-    (re-)activate a broker, schedule a failure/recovery, move a
-    reservation or calendar boundary, or put a gridlet in transit.
+    COMPLETION and RETURN contribute no candidates (their firings never
+    pull another source's pending instant earlier); every other source
+    conservatively contributes its own candidate streams, each cutting
+    at its own instant (+inf streams -- a zero-rate failure row, an
+    empty reservation table -- cut nothing).  The derived cut is safe
+    because within the slab only completions/returns apply, and none of
+    them can (re-)activate a broker, schedule a failure/recovery, move
+    a reservation or calendar boundary, or put a gridlet in transit.
+    Note the completion scan is *not* run here: interference candidates
+    never need the forecast kernel.
     """
     ctx = {}
     sources = _make_sources(fleet, params, n_users, ctx)
-    return jnp.stack([s.horizon(state, INF) for s in sources]).min()
+    cands = [s.horizon_candidates(state) for s in sources]
+    sizes = tuple(c.shape[0] for c in cands)
+    _, _, _, t_safe, _ = kernel_ops.event_frontier(
+        jnp.concatenate(cands), sizes)
+    return t_safe
 
 
 def step_batched(state: SimState, fleet, params: SimParams, n_users: int,
-                 batch: int):
-    """One batched while-loop iteration: a committing :func:`step`
-    (which handles whatever is due next, at full priority/tie-break
+                 batch: int, slab=None):
+    """One batched while-loop iteration: a committing superstep (which
+    handles whatever is due next, at full priority/tie-break
     generality) followed by up to ``batch - 1`` speculative
-    COMPLETION/RETURN supersteps strictly inside the safety horizon.
+    COMPLETION/RETURN supersteps strictly inside the safety horizon,
+    fed by the committing superstep's precomputed wave ranking (the
+    slab carry -- see :func:`_speculative_step`).  Takes and returns
+    ``(state, slab)`` so the ranking survives across while-loop
+    iterations; ``slab=None`` starts without one.
 
     When the horizon is empty (an interfering source is due immediately
     -- dense failure scenarios, broker polls every superstep) every
@@ -951,25 +1266,28 @@ def step_batched(state: SimState, fleet, params: SimParams, n_users: int,
     single-step path; ``batch=1`` skips the speculation machinery
     entirely and IS the single-step path.
     """
-    state = step(state, fleet, params, n_users)
+    if slab is None:
+        slab = _empty_slab(state)
+    state, slab = _step_commit(state, fleet, params, n_users, slab)
     if batch <= 1:
-        return state
+        return state, slab
     t_safe = _speculation_horizon(state, fleet, params, n_users)
 
     def micro(_, carry):
-        s, alive = carry
+        s, alive, slab = carry
 
         def go(s):
-            return _speculative_step(s, fleet, params, n_users, t_safe)
+            return _speculative_step(s, fleet, params, n_users, t_safe,
+                                     slab)
 
         # Once a micro-step declines, every later one would too (the
         # state, hence every pending time, is unchanged): short-circuit.
         return jax.lax.cond(
-            alive, go, lambda s: (s, jnp.asarray(False)), s)
+            alive, go, lambda s: (s, jnp.asarray(False), slab), s)
 
-    state, _ = jax.lax.fori_loop(
-        0, batch - 1, micro, (state, jnp.asarray(True)))
-    return state
+    state, _, slab = jax.lax.fori_loop(
+        0, batch - 1, micro, (state, jnp.asarray(True), slab))
+    return state, slab
 
 
 def _continue(state, fleet, params, n_users, max_events):
@@ -1015,6 +1333,8 @@ def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
         n_events=jnp.asarray(0, jnp.int32),
         n_steps=jnp.asarray(0, jnp.int32),
         n_spec=jnp.asarray(0, jnp.int32),
+        n_reseeds=jnp.asarray(0, jnp.int32),
+        n_scans=jnp.asarray(0, jnp.int32),
         n_trace=jnp.asarray(0, jnp.int32),
         n_failed=jnp.asarray(0, jnp.int32),
         n_resubmits=jnp.asarray(0, jnp.int32),
@@ -1039,7 +1359,8 @@ def _finalize(state: SimState) -> SimResult:
                      n_steps=state.n_steps, overflow=state.overflow,
                      n_failed=state.n_failed,
                      n_resubmits=state.n_resubmits, downtime=downtime,
-                     n_spec=state.n_spec)
+                     n_spec=state.n_spec, n_reseeds=state.n_reseeds,
+                     n_scans=state.n_scans)
 
 
 @functools.partial(jax.jit, static_argnames=("n_users", "max_events",
@@ -1048,10 +1369,14 @@ def _run_jit(gridlets, fleet, params, n_users, max_events, max_jobs,
              batch):
     state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
                        params=params)
-    state = jax.lax.while_loop(
-        lambda s: _continue(s, fleet, params, n_users, max_events),
-        lambda s: step_batched(s, fleet, params, n_users, batch),
-        state)
+    # The loop carry holds the slab (the last scan's rank table) next
+    # to the state, so completion-dominated stretches of iterations --
+    # committing AND speculative supersteps -- run without any sort.
+    state, _ = jax.lax.while_loop(
+        lambda c: _continue(c[0], fleet, params, n_users, max_events),
+        lambda c: step_batched(c[0], fleet, params, n_users, batch,
+                               c[1]),
+        (state, _empty_slab(state)))
     return _finalize(state)
 
 
@@ -1085,10 +1410,11 @@ def run_inner(gridlets, fleet, params: SimParams, n_users: int,
     """
     state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
                        params=params)
-    state = jax.lax.while_loop(
-        lambda s: _continue(s, fleet, params, n_users, max_events),
-        lambda s: step_batched(s, fleet, params, n_users, batch),
-        state)
+    state, _ = jax.lax.while_loop(
+        lambda c: _continue(c[0], fleet, params, n_users, max_events),
+        lambda c: step_batched(c[0], fleet, params, n_users, batch,
+                               c[1]),
+        (state, _empty_slab(state)))
     return _finalize(state)
 
 

@@ -127,9 +127,19 @@ def active_pes(resv_res, resv_pes, resv_start, resv_end, t,
         num_segments=n_resources)
 
 
+def boundary_candidates(resv_start, resv_end, t) -> jax.Array:
+    """Window open/close instants strictly after ``t`` as an f32[2K]
+    candidate vector (+inf where already passed) -- the engine's
+    RESERVATION event-source `candidates` contract (see core.des); the
+    fused frontier pass takes the min."""
+    cand = jnp.concatenate([resv_start, resv_end])
+    return jnp.where(cand > t, cand, jnp.inf)
+
+
 def next_boundary(resv_start, resv_end, t) -> jax.Array:
-    """Earliest window open/close instant strictly after ``t`` (f32 scalar;
-    +inf when no boundary remains -- in particular for the K=0 table)."""
-    cand = jnp.concatenate([resv_start, resv_end,
+    """Earliest window open/close instant strictly after ``t`` (f32
+    scalar; +inf when no boundary remains -- in particular for the K=0
+    table).  Thin min-wrapper over :func:`boundary_candidates`."""
+    cand = jnp.concatenate([boundary_candidates(resv_start, resv_end, t),
                             jnp.full((1,), jnp.inf, jnp.float32)])
-    return jnp.where(cand > t, cand, jnp.inf).min()
+    return cand.min()

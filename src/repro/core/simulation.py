@@ -60,6 +60,12 @@ class ExperimentResult(NamedTuple):
     truncated: jax.Array     # bool: loop hit max_events before finishing
     n_spec: jax.Array        # i32 speculative supersteps folded into
                              #     the n_steps iterations (k-step batch)
+    n_reseeds: jax.Array     # i32 scans that had to re-sort the
+                             #     job-slot table (slab carry miss;
+                             #     the rest ran sort-free)
+    n_scans: jax.Array       # i32 scans performed (committing +
+                             #     speculative supersteps, incl.
+                             #     declined micro-steps)
 
 
 def _max_events(n_gridlets: int, n_users: int, horizon: float,
@@ -99,6 +105,8 @@ def summarize(res: engine.SimResult, params, n_users: int,
         truncated=(res.n_steps + res.n_spec >= max_events
                    if max_events is not None else jnp.asarray(False)),
         n_spec=res.n_spec,
+        n_reseeds=res.n_reseeds,
+        n_scans=res.n_scans,
     )
 
 

@@ -43,14 +43,42 @@ event *kinds* the engine orders same-time batches COMPLETION > FAILURE >
 RECOVERY > RESERVATION > RETURN > ARRIVAL > CALENDAR_STEP > BROKER; this
 kernel only produces the COMPLETION forecasts.)
 
-Tiling: grid over resource blocks; each block holds [block_r, J] state in
-VMEM (J <= 256 -> <=256 KB fp32).  Ranking uses an explicit [J, J]
-comparison per row -- O(J^2) VPU work that is fully data-parallel; J is
-the per-resource job-slot bound, so keep it small on TPU.  On CPU hosts
-the engine routes through :func:`event_scan_xla`, an equivalent
-vectorised jnp implementation whose per-row sort is O(J log J) (the
-"reference fallback" -- the Pallas path in interpret mode is reserved
-for kernel tests).  Oracle: repro.kernels.ref.event_scan_ref.
+Tiling: grid over resource blocks; each block holds [block_r, J_pad]
+state in VMEM.  The job-slot axis is **lane-tiled**: the Pallas wrappers
+pad J up to a multiple of LANE = 128 (and, when the bitonic rank is
+selected, to the next power of two) so every row maps cleanly onto the
+8x128 VPU registers; outputs are sliced back to the caller's J and the
+argmin/col sentinels re-mapped.  In-kernel ranking picks between two
+exact algorithms by the *static* padded width:
+
+  * J_pad <= RANK_BITONIC_MIN_J: the explicit [J, J] pairwise
+    comparison -- O(J^2) VPU work, fully data-parallel, no lane
+    shuffles, unbeatable for short rows;
+  * J_pad >  RANK_BITONIC_MIN_J: an O(J log^2 J) **bitonic rank**
+    (:func:`_bitonic_rank`): a compare-exchange network on (remaining,
+    tie, col) triples built from static lane rolls, followed by a
+    second network inverting the permutation -- the classic
+    sorting-network formulation that keeps all traffic in registers.
+
+Both produce the identical integer ranks for every valid slot (ranks of
+empty slots are unused and may differ).  The crossover constant is
+re-measured by ``benchmarks/engine_bench.py`` (``rank_crossover`` rows;
+see docs/PERFORMANCE.md).  On CPU hosts the engine routes through
+:func:`event_scan_xla`, an equivalent vectorised jnp implementation
+whose per-row sort is one O(J log J) stable lexsort (the "reference
+fallback" -- the Pallas path in interpret mode is reserved for kernel
+tests); it optionally *accepts a precomputed rank* so the engine's
+slab-fed speculative micro-steps can reuse the committing superstep's
+ranking and run entirely sort-free.  Oracle:
+repro.kernels.ref.event_scan_ref.
+
+:func:`event_frontier` is the second fused primitive here: one
+min/mask pass over the concatenated per-source candidate-time vectors
+of the superstep engine's event sources, returning the earliest
+pending instant t*, the per-source fired mask and due counts, and the
+speculation horizon t_safe -- replacing a stack of 8 separate scalar
+reductions per superstep.  Same three-way split (Pallas kernel / XLA
+fallback / ref.event_frontier_ref oracle).
 """
 from __future__ import annotations
 
@@ -61,6 +89,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BIG = 3.0e38
+INF = float("inf")
+LANE = 128               # TPU lane width: job-slot axis padded to it
+# Padded widths above this use the bitonic rank.  Measured (XLA CPU,
+# benchmarks/engine_bench.py "_rank_crossover"): pairwise wins through
+# J = 512 (1.5ms vs 5.4ms at 512) and loses decisively at 1024 (32ms
+# vs 11.5ms) -- the ROADMAP's "J > 256" guess was one octave early.
+# The TPU bound is also capacity: the pairwise path materialises a
+# [block_r, J, J] comparison cube, which at block_r = 8, J = 1024
+# is 32 MB -- past VMEM -- so the bitonic is mandatory there anyway.
+RANK_BITONIC_MIN_J = 512
+
+
+def _pad_j_for_kernel(j: int) -> int:
+    """Lane-tiled job-slot width for the Pallas path: the next multiple
+    of LANE, bumped to the next power of two once the bitonic rank is
+    selected (the compare-exchange network needs a pow2 width)."""
+    j_pad = -(-j // LANE) * LANE
+    if j_pad > RANK_BITONIC_MIN_J:
+        p = 1
+        while p < j_pad:
+            p *= 2
+        j_pad = p
+    return j_pad
 
 
 def _row_masks(rem, npe, pol, blk, ok):
@@ -102,6 +153,88 @@ def _lexsort_rank(rem, tie, valid):
     return rank, key, tkey
 
 
+def _bitonic_exchange(arrays, lane, stride, size):
+    """One compare-exchange stage of the bitonic network, lexicographic
+    on ``(arrays[0], arrays[1])``; the rest ride along as payload.
+
+    Element ``i`` pairs with ``i ^ stride`` -- reached with two lane
+    rolls and a select, so the whole network lowers to VPU register
+    traffic (no gathers).  ``size`` is the current bitonic block length
+    (ascending where ``i & size == 0``); both may be traced scalars
+    (the stage schedule runs under lax.scan).
+    """
+    upper = (lane & stride) != 0          # I am the higher lane of my pair
+    asc = (lane & size) == 0              # my block sorts ascending
+    partner = [jnp.where(upper, jnp.roll(a, stride, axis=-1),
+                         jnp.roll(a, -stride, axis=-1)) for a in arrays]
+    k, tk, pk, ptk = arrays[0], arrays[1], partner[0], partner[1]
+    mine_gt = (k > pk) | ((k == pk) & (tk > ptk))
+    partner_gt = (pk > k) | ((pk == k) & (ptk > tk))
+    take = jnp.where(upper == asc, partner_gt, mine_gt)
+    return [jnp.where(take, p, a) for a, p in zip(arrays, partner)]
+
+
+def _bitonic_sort(arrays):
+    """Bitonic-sort ``arrays`` (lex keys ``arrays[0], arrays[1]`` +
+    payload) along the last axis, which must be a power of two.
+
+    The O(log^2 J) stage schedule runs under two nested
+    ``lax.fori_loop``s with the (size, stride) pair derived from the
+    loop indices by scalar shifts, so the compare-exchange body
+    compiles exactly once (an unrolled network blows XLA CPU compile
+    time up by minutes at J >= 512, and Pallas kernels cannot capture
+    a constant schedule array), at the cost of the rolls taking traced
+    shifts.
+    """
+    n = arrays[0].shape[-1]
+    assert n & (n - 1) == 0, "bitonic width must be a power of two"
+    lane = jax.lax.broadcasted_iota(jnp.int32, arrays[0].shape,
+                                    arrays[0].ndim - 1)
+    n_outer = max(n.bit_length() - 1, 0)            # log2(n)
+
+    def outer(k, arrs):
+        size = jnp.int32(2) << k                    # 2, 4, ..., n
+
+        def inner(j, arrs):
+            stride = size >> (j + 1)                # size/2, ..., 1
+            return tuple(_bitonic_exchange(list(arrs), lane, stride,
+                                           size))
+
+        return jax.lax.fori_loop(0, k + 1, inner, arrs)
+
+    return list(jax.lax.fori_loop(0, n_outer, outer, tuple(arrays)))
+
+
+def _bitonic_rank(rem, tie, valid):
+    """Same valid-slot rank contract as :func:`_pairwise_rank` /
+    :func:`_lexsort_rank` in O(J log^2 J) compare-exchanges.
+
+    Two network passes: sort ``(key, tie, col)`` triples, then sort the
+    resulting column permutation back against a position payload --
+    sorting a permutation by value *is* its inverse, i.e. the rank.
+    Ranks of invalid slots (all keyed (BIG, BIG)) are an arbitrary
+    permutation of the tail positions -- unused by every consumer, but
+    note they differ from the other two implementations' tail ranks.
+    Requires a power-of-two J (the wrappers pad).
+    """
+    key = jnp.where(valid, rem, BIG)
+    tkey = jnp.where(valid, tie, BIG)
+    col = jax.lax.broadcasted_iota(jnp.float32, rem.shape, rem.ndim - 1)
+    _, _, scol = _bitonic_sort([key, tkey, col])
+    pos = jax.lax.broadcasted_iota(jnp.float32, rem.shape, rem.ndim - 1)
+    zero = jnp.zeros_like(scol)
+    _, _, rank = _bitonic_sort([scol, zero, pos])
+    return rank, key, tkey
+
+
+def _kernel_rank(rem, tie, valid):
+    """Static-shape rank selection for the Pallas kernels: pairwise
+    O(J^2) below the crossover, bitonic O(J log^2 J) above it."""
+    if rem.shape[-1] > RANK_BITONIC_MIN_J:
+        return _bitonic_rank(rem, tie, valid)
+    return _pairwise_rank(rem, tie, valid)
+
+
 def _fig8_rates(rem, rank, valid, g, mips, npe_e, pol):
     """Fig 8 share divisor -> per-slot rate, shared by all variants."""
     k = jnp.floor(g / jnp.maximum(npe_e, 1.0))     # [R,1] min jobs per PE
@@ -116,7 +249,8 @@ def _fig8_rates(rem, rank, valid, g, mips, npe_e, pol):
 
 
 def _kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
-            blocked_ref, ok_ref, rate_ref, tmin_ref, amin_ref, occ_ref):
+            blocked_ref, ok_ref, rate_ref, tmin_ref, amin_ref, occ_ref,
+            *maybe_rank_ref):
     rem = remaining_ref[...]                       # [R, J] f32
     tie = tie_ref[...]                             # [R, J] f32
     mips = mips_ref[...]                           # [R, 1]
@@ -127,7 +261,7 @@ def _kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
     r, j = rem.shape
 
     npe_e, valid, g = _row_masks(rem, npe, pol, blk, ok)
-    rank, key, tkey = _pairwise_rank(rem, tie, valid)
+    rank, key, tkey = _kernel_rank(rem, tie, valid)
     rate = _fig8_rates(rem, rank, valid, g, mips, npe_e, pol)
     rate_ref[...] = rate
 
@@ -144,6 +278,8 @@ def _kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
         jnp.where(at_min & (cand <= tie_min), col, j),
         axis=1, keepdims=True)
     occ_ref[...] = g.astype(jnp.int32)
+    if maybe_rank_ref:
+        maybe_rank_ref[0][...] = rank
 
 
 def _default_inputs(remaining, tie, policy, pe_blocked, row_ok):
@@ -163,47 +299,70 @@ def _default_inputs(remaining, tie, policy, pe_blocked, row_ok):
             jnp.asarray(row_ok, jnp.float32).reshape(r))
 
 
+def _lane_pad(remaining, tie, j: int):
+    """Pad the job-slot axis for the Pallas path (see module docstring);
+    padded slots are empty (remaining 0) with BIG tie keys."""
+    j_pad = _pad_j_for_kernel(j)
+    if j_pad == j:
+        return remaining, tie, j_pad
+    pad = ((0, 0), (0, j_pad - j))
+    return (jnp.pad(remaining, pad),
+            jnp.pad(tie, pad, constant_values=BIG), j_pad)
+
+
 def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None,
                pe_blocked=None, row_ok=None, *,
-               block_r: int = 8, interpret: bool = False):
+               block_r: int = 8, interpret: bool = False,
+               with_rank: bool = False):
     """remaining: [R, J] (<=0 or >=BIG marks empty slots); tie: [R, J]
     FIFO tie-break priority (defaults to the col index); mips_eff,
     num_pe, policy: [R] (policy 0 = time-shared, 1 = space-shared);
     pe_blocked: [R] reservation-held PEs (default 0); row_ok: [R]
     up-mask (default all-up).  Returns (rate [R, J], t_min [R],
     argmin_col [R] i32, occupancy [R] i32); argmin_col is J for empty
-    (or dead) rows.
+    (or dead) rows.  ``with_rank=True`` appends the per-row (remaining,
+    tie) rank table f32[R, J] (ranks of empty slots are arbitrary).
+
+    The job-slot axis is lane-tiled internally (padded to LANE
+    multiples, pow2 once the bitonic rank engages) and outputs sliced
+    back, so callers never see the padding.
     """
     r, j = remaining.shape
     remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
         remaining, tie, policy, pe_blocked, row_ok)
+    remaining, tie, j_pad = _lane_pad(remaining, tie, j)
     block_r = min(block_r, r)
     assert r % block_r == 0, "pad the resource axis upstream"
 
-    rate, tmin, amin, occ = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((block_r, j_pad), lambda i: (i, 0)),
+        pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((r, j_pad), jnp.float32),
+        jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        jax.ShapeDtypeStruct((r, 1), jnp.int32),
+    ]
+    if with_rank:
+        out_specs.append(pl.BlockSpec((block_r, j_pad), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((r, j_pad), jnp.float32))
+    out = pl.pallas_call(
         _kernel,
         grid=(r // block_r,),
         in_specs=[
-            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, j_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, j_pad), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((r, j), jnp.float32),
-            jax.ShapeDtypeStruct((r, 1), jnp.float32),
-            jax.ShapeDtypeStruct((r, 1), jnp.int32),
-            jax.ShapeDtypeStruct((r, 1), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(remaining, tie,
       mips_eff.astype(jnp.float32).reshape(r, 1),
@@ -211,16 +370,33 @@ def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None,
       policy.reshape(r, 1),
       pe_blocked.reshape(r, 1),
       row_ok.reshape(r, 1))
-    return rate, tmin[:, 0], amin[:, 0], occ[:, 0]
+    rate, tmin, amin, occ = out[:4]
+    # un-pad: padded slots never win the argmin, so the only out-of-J
+    # value is the empty/dead-row sentinel j_pad -> remap to J.
+    amin = jnp.minimum(amin[:, 0], j)
+    res = (rate[:, :j], tmin[:, 0], amin, occ[:, 0])
+    if with_rank:
+        res = res + (out[4][:, :j],)
+    return res
 
 
 def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None,
-                   pe_blocked=None, row_ok=None):
+                   pe_blocked=None, row_ok=None, *, with_rank=False,
+                   rank=None):
     """Vectorised jnp fallback with identical semantics to the kernel.
 
     The per-row O(J log J) lexsort replaces the kernel's O(J^2) pairwise
     rank, which makes it the right path for CPU hosts where Pallas would
     run interpreted.  Bitwise-identical share arithmetic to ``_kernel``.
+
+    ``with_rank=True`` appends the rank table to the outputs.  ``rank``
+    (f32[R, J]) injects a precomputed rank and skips the lexsort
+    entirely -- the engine's slab-fed speculative micro-steps pass the
+    committing superstep's rank (shifted by the departed heads), making
+    the whole scan sort-free.  The caller owns the proof that the
+    injected rank equals the fresh lexsort rank on every valid slot
+    (engine._partition_ok); everything downstream of the rank is the
+    identical arithmetic either way.
     """
     r, j = remaining.shape
     remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
@@ -232,7 +408,11 @@ def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None,
     ok = row_ok[:, None]
 
     npe_e, valid, g = _row_masks(remaining, npe, pol, blk, ok)
-    rank, key, tkey = _lexsort_rank(remaining, tie, valid)
+    if rank is None:
+        rank, key, tkey = _lexsort_rank(remaining, tie, valid)
+    else:
+        rank = jnp.asarray(rank, jnp.float32)
+        tkey = jnp.where(valid, tie, BIG)
     rate = _fig8_rates(remaining, rank, valid, g, mips, npe_e, pol)
 
     t = jnp.where(valid, remaining / jnp.maximum(rate, 1e-30), BIG)
@@ -242,7 +422,11 @@ def event_scan_xla(remaining, mips_eff, num_pe, tie=None, policy=None,
     tie_min = jnp.min(cand, axis=1, keepdims=True)
     col = jnp.broadcast_to(jnp.arange(j, dtype=jnp.int32)[None, :], (r, j))
     amin = jnp.min(jnp.where(at_min & (cand <= tie_min), col, j), axis=1)
-    return rate, tmin[:, 0], amin, jnp.sum(valid, axis=1, dtype=jnp.int32)
+    res = (rate, tmin[:, 0], amin,
+           jnp.sum(valid, axis=1, dtype=jnp.int32))
+    if with_rank:
+        res = res + (rank,)
+    return res
 
 
 # ----------------------------------------------------------------------
@@ -306,8 +490,9 @@ def _slab_kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
     r, j = rem.shape
 
     npe_e, valid, g = _row_masks(rem, npe, pol, blk, ok)
-    # one pairwise (remaining, tie) rank pass for the whole slab
-    rank, _, _ = _pairwise_rank(rem, tie, valid)
+    # one (remaining, tie) rank pass for the whole slab -- pairwise or
+    # bitonic by the static padded width (see _kernel_rank)
+    rank, _, _ = _kernel_rank(rem, tie, valid)
     col = jax.lax.broadcasted_iota(jnp.int32, (r, j), 1)
     t_w, col_w = _slab_waves(rem, rank, valid, g, mips, npe_e, pol, col, k)
     t_ref[...] = t_w
@@ -337,6 +522,7 @@ def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
     r, j = remaining.shape
     remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
         remaining, tie, policy, pe_blocked, row_ok)
+    remaining, tie, j_pad = _lane_pad(remaining, tie, j)
     block_r = min(block_r, r)
     assert r % block_r == 0, "pad the resource axis upstream"
     assert k >= 1
@@ -345,8 +531,8 @@ def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
         functools.partial(_slab_kernel, k=k),
         grid=(r // block_r,),
         in_specs=[
-            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, j), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, j_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, j_pad), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
@@ -368,7 +554,9 @@ def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
       policy.reshape(r, 1),
       pe_blocked.reshape(r, 1),
       row_ok.reshape(r, 1))
-    return t_w, col_w
+    # un-pad the wave columns: the only out-of-J value is the padded
+    # empty-wave sentinel j_pad -> remap to the caller's J.
+    return t_w, jnp.minimum(col_w, j)
 
 
 def event_scan_slab_xla(remaining, mips_eff, num_pe, k, tie=None,
@@ -389,3 +577,142 @@ def event_scan_slab_xla(remaining, mips_eff, num_pe, k, tie=None,
     rank, _, _ = _lexsort_rank(remaining, tie, valid)
     col = jnp.broadcast_to(jnp.arange(j, dtype=jnp.int32)[None, :], (r, j))
     return _slab_waves(remaining, rank, valid, g, mips, npe_e, pol, col, k)
+
+
+# ----------------------------------------------------------------------
+# Fused event frontier: the superstep engine's 8-source fan-in in ONE
+# min/mask pass.
+# ----------------------------------------------------------------------
+#
+# Every event source exposes its pending instants as an f32 candidate
+# vector (+inf = nothing pending; see repro.core.des).  The engine used
+# to reduce each source separately and jnp.stack the 8 scalars -- twice
+# per committing superstep (once for t*, once for the speculation
+# horizon).  The frontier op takes the *concatenated* candidate vector
+# plus a static segment layout and answers everything at once.  min is
+# exactly associative, so the fused reductions are bitwise-identical to
+# the stacked per-source ones.
+
+def _frontier_math(cand, seg, cuts):
+    """Shared frontier arithmetic (jnp only -- runs inside the Pallas
+    kernel body and as the XLA fallback).
+
+    cand [1, C] f32 candidate instants; seg [S, C] f32 0/1 membership;
+    cuts [1, C] f32 0/1 horizon-cut mask.  Returns (mins [S, 1] f32
+    per-source earliest instant, counts [S, 1] i32 candidates due at
+    t*, safe [S, 1] f32 per-source earliest *horizon-cutting* instant).
+    """
+    member = seg > 0.5
+    mins = jnp.min(jnp.where(member, cand, INF), axis=1, keepdims=True)
+    t_star = jnp.min(mins)
+    due = (cand <= t_star) & (cand < INF)
+    counts = jnp.sum(jnp.where(member & due, 1.0, 0.0), axis=1,
+                     keepdims=True).astype(jnp.int32)
+    safe = jnp.min(jnp.where(member & (cuts > 0.5), cand, INF),
+                   axis=1, keepdims=True)
+    return mins, counts, safe
+
+
+def _frontier_kernel(cand_ref, seg_ref, cuts_ref, mins_ref, counts_ref,
+                     safe_ref):
+    mins, counts, safe = _frontier_math(cand_ref[...], seg_ref[...],
+                                        cuts_ref[...])
+    mins_ref[...] = mins
+    counts_ref[...] = counts
+    safe_ref[...] = safe
+
+
+def _frontier_layout(sizes, s_pad, c_pad):
+    """Static [S_pad, C_pad] 0/1 membership matrix for a segment layout
+    (baked as a compile-time constant)."""
+    import numpy as np
+    seg = np.zeros((s_pad, c_pad), np.float32)
+    off = 0
+    for i, n in enumerate(sizes):
+        seg[i, off:off + n] = 1.0
+        off += n
+    return jnp.asarray(seg)
+
+
+def _frontier_finish(mins, counts, safe, n_src):
+    mins = mins[:n_src, 0]
+    t_star = mins.min() if n_src else INF
+    fired = jnp.isfinite(mins) & (mins <= t_star)
+    t_safe = safe[:n_src, 0].min() if n_src else INF
+    return t_star, fired, counts[:n_src, 0], t_safe, mins
+
+
+def event_frontier(cand, sizes, cuts=None, *, interpret: bool = False):
+    """Fused event frontier over per-source candidate instants.
+
+    cand: f32[C] -- concatenation of every source's candidate-time
+        vector (absolute instants, +inf where nothing is pending);
+    sizes: static tuple of per-source segment lengths (sum == C; zero
+        lengths allowed -- e.g. an empty reservation table);
+    cuts: bool/f32[C] -- True where the candidate cuts the k-step
+        speculation horizon (defaults to all True).  This is the
+        op-level **source-aware horizon** input for callers that mix
+        cut and uncut candidates in one pass; the engine instead
+        expresses safety by *selection* -- its horizon frontier is fed
+        only `horizon_candidates` (speculation-safe sources contribute
+        none; never-firing streams are +inf) with cuts left all-True,
+        which is the authoritative mechanism there.
+
+    Returns ``(t_star f32[], fired bool[S], counts i32[S], t_safe
+    f32[], per_source_min f32[S])``: the earliest pending instant
+    across all sources, which sources have a candidate due at it, how
+    many candidates per source are due, and the earliest
+    horizon-cutting instant.  All reductions are pure mins/sums, so the
+    Pallas, XLA and oracle paths agree bitwise.
+    """
+    n_src = len(sizes)
+    c = cand.shape[0]
+    assert sum(sizes) == c, "segment layout out of sync with candidates"
+    if cuts is None:
+        cuts = jnp.ones((c,), jnp.float32)
+    s_pad = max(-(-n_src // 8) * 8, 8)
+    c_pad = max(-(-c // LANE) * LANE, LANE)
+    seg = _frontier_layout(sizes, s_pad, c_pad)
+    cand2 = jnp.full((1, c_pad), INF).at[0, :c].set(
+        cand.astype(jnp.float32))
+    cuts2 = jnp.zeros((1, c_pad)).at[0, :c].set(
+        jnp.asarray(cuts, jnp.float32))
+
+    mins, counts, safe = pl.pallas_call(
+        _frontier_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, c_pad), lambda i: (0, 0)),
+            pl.BlockSpec((s_pad, c_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, c_pad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s_pad, 1), lambda i: (0, 0)),
+            pl.BlockSpec((s_pad, 1), lambda i: (0, 0)),
+            pl.BlockSpec((s_pad, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((s_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((s_pad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cand2, seg, cuts2)
+    return _frontier_finish(mins, counts, safe, n_src)
+
+
+def event_frontier_xla(cand, sizes, cuts=None):
+    """Vectorised jnp fallback for :func:`event_frontier` (identical
+    arithmetic via the shared ``_frontier_math``)."""
+    n_src = len(sizes)
+    c = cand.shape[0]
+    assert sum(sizes) == c, "segment layout out of sync with candidates"
+    if cuts is None:
+        cuts = jnp.ones((c,), jnp.float32)
+    seg = _frontier_layout(sizes, max(n_src, 1), max(c, 1))
+    cand2 = jnp.full((1, max(c, 1)), INF).at[0, :c].set(
+        cand.astype(jnp.float32))
+    cuts2 = jnp.zeros((1, max(c, 1))).at[0, :c].set(
+        jnp.asarray(cuts, jnp.float32))
+    mins, counts, safe = _frontier_math(cand2, seg, cuts2)
+    return _frontier_finish(mins, counts, safe, n_src)

@@ -44,30 +44,42 @@ def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk=256, block_h=8,
                          interpret=_auto_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret",
+                                             "with_rank"))
 def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None,
-               pe_blocked=None, row_ok=None, *, block_r=8,
-               interpret=None):
+               pe_blocked=None, row_ok=None, rank=None, *, block_r=8,
+               interpret=None, with_rank=False):
     """GridSim Fig 8 share allocation + completion forecast.
 
     ``pe_blocked`` [R] masks reservation-held PEs out of the share pool;
     ``row_ok`` [R] masks failed resources out of every output (see
     kernels.event_scan).  Returns (rate [R, J], t_min [R], argmin_col
-    [R], occupancy [R]).
+    [R], occupancy [R]); ``with_rank=True`` appends the per-row
+    (remaining, tie) rank table f32[R, J].
     Routing: compiled Pallas on TPU (interpret=None/False); the
     vectorised XLA fallback on non-TPU hosts (interpret=None), so the
     engine hot path stays fast on CPU; Pallas interpret mode only when
     explicitly requested (interpret=True, used by the kernel tests).
+    ``rank`` injects a precomputed rank table and always routes to the
+    (then sort-free, purely elementwise) XLA implementation -- the
+    engine's slab-fed speculative micro-steps use it on every backend.
     """
+    if rank is not None:
+        return _event.event_scan_xla(remaining, mips_eff, num_pe,
+                                     tie=tie, policy=policy,
+                                     pe_blocked=pe_blocked,
+                                     row_ok=row_ok, with_rank=with_rank,
+                                     rank=rank)
     if interpret is None and jax.default_backend() != "tpu":
         return _event.event_scan_xla(remaining, mips_eff, num_pe,
                                      tie=tie, policy=policy,
                                      pe_blocked=pe_blocked,
-                                     row_ok=row_ok)
+                                     row_ok=row_ok, with_rank=with_rank)
     return _event.event_scan(remaining, mips_eff, num_pe, tie=tie,
                              policy=policy, pe_blocked=pe_blocked,
                              row_ok=row_ok, block_r=block_r,
-                             interpret=_auto_interpret(interpret))
+                             interpret=_auto_interpret(interpret),
+                             with_rank=with_rank)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_r", "interpret"))
@@ -93,3 +105,22 @@ def event_scan_slab(remaining, mips_eff, num_pe, k=8, tie=None,
                                   pe_blocked=pe_blocked, row_ok=row_ok,
                                   block_r=block_r,
                                   interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("sizes", "interpret"))
+def event_frontier(cand, sizes, cuts=None, *, interpret=None):
+    """Fused superstep event frontier: one min/mask pass over the
+    concatenated per-source candidate-time vectors.
+
+    ``cand`` f32[C] (+inf = nothing pending), ``sizes`` the static
+    per-source segment lengths, ``cuts`` bool[C] marking candidates
+    that cut the k-step speculation horizon (source-aware horizons; see
+    kernels.event_scan.event_frontier).  Returns (t_star, fired
+    bool[S], counts i32[S], t_safe, per_source_min f32[S]).  Routing
+    mirrors :func:`event_scan`: compiled Pallas on TPU, the vectorised
+    XLA fallback on CPU hosts, Pallas interpret mode on request.
+    """
+    if interpret is None and jax.default_backend() != "tpu":
+        return _event.event_frontier_xla(cand, sizes, cuts=cuts)
+    return _event.event_frontier(cand, sizes, cuts=cuts,
+                                 interpret=_auto_interpret(interpret))

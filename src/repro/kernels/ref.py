@@ -59,7 +59,7 @@ def ssd_ref(x, dt, a, b_mat, c_mat):
 
 
 def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None,
-                   pe_blocked=None, row_ok=None):
+                   pe_blocked=None, row_ok=None, with_rank=False):
     """Paper Fig 8, directly transcribed per resource row.
 
     remaining: [R, J] (<=0 / huge marks empty); mips_eff, num_pe,
@@ -69,7 +69,10 @@ def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None,
     time-shared share pool; space-shared admission is enforced by the
     engine); row_ok: [R] up-mask -- a down row contributes nothing.
     Returns (rate [R, J], t_min [R], argmin_col [R], occupancy [R]);
-    argmin_col is J for empty (or dead) rows.
+    argmin_col is J for empty (or dead) rows.  ``with_rank=True``
+    appends the per-row (remaining, tie) sort rank f32[R, J] (only the
+    ranks of occupied slots are contractual -- kernels place empty
+    slots at arbitrary tail positions).
     """
     import numpy as np
     remaining = np.asarray(remaining, np.float64)
@@ -97,7 +100,20 @@ def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None,
     tmin = np.full((r_n,), 3.0e38)
     amin = np.full((r_n,), j_n, np.int32)
     occ = np.zeros((r_n,), np.int32)
+    rank_out = np.zeros((r_n, j_n))
     for r in range(r_n):
+        # Ranks mirror the engine's definition even for dead rows (rank
+        # only *matters* for occupied slots of live rows).
+        order = sorted(range(j_n),
+                       key=lambda j: (remaining[r, j]
+                                      if 0 < remaining[r, j] < 3.0e38
+                                      else 3.0e38,
+                                      tie[r, j]
+                                      if 0 < remaining[r, j] < 3.0e38
+                                      else 3.0e38,
+                                      j))
+        for p, j in enumerate(order):
+            rank_out[r, j] = p
         pe = int(num_pe[r]) - int(pe_blocked[r])
         if not row_ok[r] or (policy[r] == 0 and pe <= 0):
             continue                       # dead row: masked entirely
@@ -124,10 +140,13 @@ def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None,
             if best is None or (t, tie[r, j]) < best[:2]:
                 best = (t, tie[r, j], j)
         amin[r] = best[2]
-    return (jnp.asarray(rate, jnp.float32),
-            jnp.asarray(tmin, jnp.float32),
-            jnp.asarray(amin, jnp.int32),
-            jnp.asarray(occ, jnp.int32))
+    res = (jnp.asarray(rate, jnp.float32),
+           jnp.asarray(tmin, jnp.float32),
+           jnp.asarray(amin, jnp.int32),
+           jnp.asarray(occ, jnp.int32))
+    if with_rank:
+        res = res + (jnp.asarray(rank_out, jnp.float32),)
+    return res
 
 
 def event_scan_slab_ref(remaining, mips_eff, num_pe, k, tie=None,
@@ -167,3 +186,39 @@ def event_scan_slab_ref(remaining, mips_eff, num_pe, k, tie=None,
             amin[live.astype(bool)].astype(int)] = 0.0
     return (jnp.asarray(t_out, jnp.float32),
             jnp.asarray(col_out, jnp.int32))
+
+
+def event_frontier_ref(cand, sizes, cuts=None):
+    """Oracle for the fused event frontier: per-source python loops.
+
+    cand: f32[C] concatenated per-source candidate instants (+inf =
+    none pending); sizes: per-source segment lengths; cuts: bool[C]
+    horizon-cut mask (default all True).  Returns (t_star, fired
+    bool[S], counts i32[S], t_safe, per_source_min f32[S]) -- the
+    contract of kernels.event_scan.event_frontier.
+    """
+    import numpy as np
+    cand = np.asarray(cand, np.float64)
+    cuts = (np.ones(cand.shape, bool) if cuts is None
+            else np.asarray(cuts) > 0.5)
+    mins, counts, safes = [], [], []
+    off = 0
+    for n in sizes:
+        seg = cand[off:off + n]
+        seg_cuts = cuts[off:off + n]
+        mins.append(seg.min() if n else np.inf)
+        safes.append(seg[seg_cuts].min() if seg_cuts.any() else np.inf)
+        off += n
+    t_star = min(mins) if sizes else np.inf
+    off = 0
+    for n in sizes:
+        seg = cand[off:off + n]
+        counts.append(int(np.sum(np.isfinite(seg) & (seg <= t_star))))
+        off += n
+    fired = [np.isfinite(m) and m <= t_star for m in mins]
+    t_safe = min(safes) if sizes else np.inf
+    return (jnp.asarray(t_star, jnp.float32),
+            jnp.asarray(fired, bool),
+            jnp.asarray(counts, jnp.int32),
+            jnp.asarray(t_safe, jnp.float32),
+            jnp.asarray(mins, jnp.float32))

@@ -244,3 +244,151 @@ def test_event_scan_slab_lowers_for_tpu_shapes():
     v = jax.ShapeDtypeStruct((r,), jnp.float32)
     jax.eval_shape(lambda a, m, p: ops.event_scan_slab(
         a, m, p, 8, interpret=True), rem, v, v)
+
+
+# ------------------------------------------------------------------
+# rank output, lane tiling and the bitonic large-J path
+# ------------------------------------------------------------------
+from repro.kernels import event_scan as event_scan_mod
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), j=st.sampled_from([8, 64, 512, 1024]))
+def test_bitonic_rank_matches_lexsort(seed, j):
+    """The in-kernel O(J log^2 J) bitonic rank agrees with the stable
+    lexsort rank on every valid slot (invalid-slot ranks are
+    uncontractual), at power-of-two widths up to past the crossover."""
+    rng = np.random.RandomState(seed)
+    rem = rng.exponential(50.0, (8, j)).astype(np.float32)
+    rem[rng.rand(8, j) < 0.4] = 0.0
+    if seed % 2:  # integer remainings force ties broken by the tie key
+        rem = np.where(rem > 0,
+                       rng.randint(1, 4, (8, j)).astype(np.float32), 0.0)
+    tie = rng.permutation(8 * j).reshape(8, j).astype(np.float32)
+    valid = (rem > 0) & (rem < event_scan_mod.BIG)
+    rb, _, _ = jax.jit(event_scan_mod._bitonic_rank)(
+        jnp.asarray(rem), jnp.asarray(tie), jnp.asarray(valid))
+    rl, _, _ = event_scan_mod._lexsort_rank(
+        jnp.asarray(rem), jnp.asarray(tie), jnp.asarray(valid))
+    assert np.array_equal(np.asarray(rb)[valid], np.asarray(rl)[valid])
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 999), j=st.sampled_from([12, 130, 600]))
+def test_event_scan_rank_output_and_lane_padding(seed, j):
+    """``with_rank=True`` agrees across Pallas interpret (lane-padded;
+    J=600 pads to 1024 and exercises the bitonic in-kernel path), the
+    XLA fallback and the oracle -- on valid slots, with identical
+    rate/forecast/argmin/occupancy outputs at the caller's original J.
+    """
+    rng = np.random.RandomState(seed)
+    r = 8
+    rem = rng.exponential(50.0, (r, j)).astype(np.float32)
+    rem[rng.rand(r, j) < 0.4] = 0.0
+    mips = rng.uniform(1.0, 500.0, (r,)).astype(np.float32)
+    pes = rng.randint(1, 9, (r,)).astype(np.int32)
+    tie = rng.permutation(r * j).reshape(r, j).astype(np.float32)
+    pol = rng.randint(0, 2, (r,)).astype(np.int32)
+    args = (jnp.asarray(rem), jnp.asarray(mips), jnp.asarray(pes))
+    kw = dict(tie=jnp.asarray(tie), policy=jnp.asarray(pol))
+    p = ops.event_scan(*args, **kw, interpret=True, with_rank=True)
+    x = event_scan_mod.event_scan_xla(*args, **kw, with_rank=True)
+    o = ref.event_scan_ref(rem, mips, pes, tie=tie, policy=pol,
+                           with_rank=True)
+    valid = rem > 0
+    for got, name in ((x, "xla"), (o, "oracle")):
+        np.testing.assert_allclose(np.asarray(p[0]), np.asarray(got[0]),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+        np.testing.assert_allclose(np.asarray(p[1]), np.asarray(got[1]),
+                                   rtol=1e-4, err_msg=name)
+        assert np.array_equal(np.asarray(p[3]), np.asarray(got[3])), name
+        assert np.array_equal(np.asarray(p[4])[valid],
+                              np.asarray(got[4])[valid]), f"rank {name}"
+    assert np.array_equal(np.asarray(p[2]), np.asarray(x[2]))
+    assert p[0].shape == (r, j) and p[4].shape == (r, j)
+    assert int(np.asarray(p[2]).max()) <= j   # sentinel remapped to J
+
+
+def test_event_scan_rank_injection_is_bitwise_identical():
+    """Injecting the fresh rank back into the XLA path (the engine's
+    slab-fed sort-free micro-step scan) reproduces every output
+    bitwise."""
+    rng = np.random.RandomState(7)
+    r, j = 8, 40
+    rem = rng.exponential(50.0, (r, j)).astype(np.float32)
+    rem[rng.rand(r, j) < 0.3] = 0.0
+    mips = rng.uniform(1.0, 500.0, (r,)).astype(np.float32)
+    pes = rng.randint(1, 9, (r,)).astype(np.int32)
+    kw = dict(tie=jnp.asarray(
+        rng.permutation(r * j).reshape(r, j).astype(np.float32)))
+    base = event_scan_mod.event_scan_xla(
+        jnp.asarray(rem), jnp.asarray(mips), jnp.asarray(pes), **kw,
+        with_rank=True)
+    again = event_scan_mod.event_scan_xla(
+        jnp.asarray(rem), jnp.asarray(mips), jnp.asarray(pes), **kw,
+        with_rank=True, rank=base[4])
+    for a, b in zip(base, again):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------
+# event frontier (fused 8-source fan-in)
+# ------------------------------------------------------------------
+def _random_frontier_case(rng, n_src=None, seg_hi=7):
+    sizes = tuple(int(v) for v in rng.randint(
+        0, seg_hi, size=n_src or rng.randint(1, 9)))
+    c = sum(sizes)
+    cand = np.where(rng.rand(c) < 0.35, np.inf,
+                    rng.uniform(0.0, 100.0, c)).astype(np.float32)
+    if c and rng.rand() < 0.5:      # force exact duplicates of the min
+        cand[rng.randint(c)] = np.nanmin(
+            np.where(np.isfinite(cand), cand, np.nan)) \
+            if np.isfinite(cand).any() else np.inf
+    cuts = (rng.rand(c) < 0.5).astype(np.float32)
+    return cand, sizes, cuts
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 9999))
+def test_event_frontier_paths_agree(seed):
+    """Pallas interpret, the XLA fallback and the oracle agree exactly
+    (t*, fired, counts, t_safe, per-source mins) on random segment
+    layouts including empty segments and all-inf sources."""
+    rng = np.random.RandomState(seed)
+    cand, sizes, cuts = _random_frontier_case(rng)
+    fp = event_scan_mod.event_frontier(jnp.asarray(cand), sizes,
+                                       cuts=jnp.asarray(cuts),
+                                       interpret=True)
+    fx = event_scan_mod.event_frontier_xla(jnp.asarray(cand), sizes,
+                                           cuts=jnp.asarray(cuts))
+    fr = ref.event_frontier_ref(cand, sizes, cuts=cuts)
+    for a, b, c in zip(fp, fx, fr):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_event_frontier_tpu_lane_shapes():
+    """The engine's real layout -- per-row completion forecasts,
+    per-resource failure/recovery streams, [N]-sized RETURN/ARRIVAL
+    segments, a scalar broker -- padded across TPU lane boundaries."""
+    rng = np.random.RandomState(0)
+    sizes = (16, 11, 11, 6, 2000, 2000, 11, 1)
+    c = sum(sizes)
+    cand = np.where(rng.rand(c) < 0.6, np.inf,
+                    rng.uniform(0.0, 500.0, c)).astype(np.float32)
+    cuts = np.concatenate([
+        np.zeros(16, np.float32),           # COMPLETION: spec-safe
+        np.ones(11, np.float32), np.ones(11, np.float32),
+        np.ones(6, np.float32),
+        np.zeros(2000, np.float32),         # RETURN: spec-safe
+        np.ones(2000, np.float32), np.ones(11, np.float32),
+        np.ones(1, np.float32)])
+    fp = event_scan_mod.event_frontier(jnp.asarray(cand), sizes,
+                                       cuts=jnp.asarray(cuts),
+                                       interpret=True)
+    fr = ref.event_frontier_ref(cand, sizes, cuts=cuts)
+    for a, b in zip(fp, fr):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # t_safe only sees horizon-cutting candidates
+    t_star, fired, counts, t_safe, mins = fr
+    assert float(t_safe) >= float(t_star)

@@ -404,6 +404,78 @@ def test_reservation_boundary_cuts_speculation():
                                [40.0, 45.0])
 
 
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 99), n_commits=st.sampled_from([0, 3, 9]))
+def test_event_frontier_matches_stacked_source_mins(seed, n_commits):
+    """The fused frontier pass over the sources' candidate arrays is
+    exactly the stacked per-source ``next_time``/``horizon`` scalar
+    reductions it replaced -- on real engine states from scenarios with
+    live failure streams and reservation windows, at several points of
+    the run."""
+    from repro.kernels import ops as kernel_ops
+    fleet = resource.make_fleet([2, 3], [1.0, 1.0], [1.0, 2.0],
+                                types.TIME_SHARED,
+                                weekend_load=jnp.asarray([0.0, 0.5]))
+    g = gridlet.make_batch(jnp.full((8,), 40.0) +
+                           jnp.arange(8, dtype=jnp.float32))
+    params = engine.default_params(
+        500.0, 50000.0, types.OPT_COST, 1, fleet.r, mtbf=90.0, mttr=9.0,
+        reservations=[(0, 1, 30.0, 60.0)],
+        fail_key=jax.random.PRNGKey(seed))
+    state = engine.init_state(g, fleet, 1, params=params)
+    commit = jax.jit(lambda s: engine._step_commit(
+        s, fleet, params, 1, engine._empty_slab(s))[0])
+    for _ in range(n_commits):
+        state = commit(state)
+
+    ctx = {}
+    sources = engine._make_sources(fleet, params, 1, ctx)
+    r_pad = state.row_gridlet.shape[0]
+    ctx["scan"] = engine._scan_events(state, fleet, params, fleet.r,
+                                      r_pad)
+    cands = [s.candidates(state) for s in sources]
+    sizes = tuple(c.shape[0] for c in cands)
+    t_star, fired, counts, _, mins = kernel_ops.event_frontier(
+        jnp.concatenate(cands), sizes)
+    # the stacked scalar fan-in the frontier replaced
+    times = np.asarray(jnp.stack([s.next_time(state) for s in sources]))
+    assert np.array_equal(np.asarray(mins), times)
+    t_ref = times.min()
+    assert np.asarray(t_star) == np.float32(t_ref) or \
+        (np.isinf(t_ref) and np.isinf(np.asarray(t_star)))
+    want_fired = np.isfinite(times) & (times <= t_ref)
+    assert np.array_equal(np.asarray(fired), want_fired)
+    # oracle agreement on the identical candidate vector
+    oracle = ref.event_frontier_ref(
+        np.asarray(jnp.concatenate(cands)), sizes)
+    for a, b in zip((t_star, fired, counts), oracle):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # the horizon frontier == the stacked per-source horizon mins
+    t_safe = engine._speculation_horizon(state, fleet, params, 1)
+    horizons = np.asarray(
+        jnp.stack([s.horizon(state, types.INF) for s in sources]))
+    assert np.asarray(t_safe) == horizons.min() or \
+        (np.isinf(horizons.min()) and np.isinf(np.asarray(t_safe)))
+
+
+def test_slab_carry_keeps_sorts_rare():
+    """The slab-fed scan must actually engage: on the 20-user WWG
+    scenario the overwhelming majority of supersteps run sort-free
+    (the carry only reseeds when the table restructures), and the
+    reseed count is identical for batch=1 and batch=k (sorts happen
+    exactly where the physics demands, not where the batching does)."""
+    fleet = resource.wwg_fleet()
+    g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=50, n_users=10)
+    kw = dict(deadline=2000.0, budget=22000.0, opt=types.OPT_COST,
+              n_users=10)
+    rk = simulation.run_experiment(g, fleet, **kw)
+    r1 = simulation.run_experiment(g, fleet, **kw, batch=1)
+    assert int(rk.n_reseeds) == int(r1.n_reseeds)
+    assert int(rk.n_scans) >= int(rk.n_steps) + int(rk.n_spec)
+    assert int(rk.n_reseeds) < 0.35 * int(rk.n_scans), \
+        (int(rk.n_reseeds), int(rk.n_scans))
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 999))
 def test_event_scan_mask_paths_agree(seed):
