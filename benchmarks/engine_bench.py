@@ -69,28 +69,37 @@ def _deep_fleet():
                                types.TIME_SHARED)
 
 
-# (n_users, n_jobs_per_user, scenario, fleet_fn, deadline, budget):
-# the failure cell re-runs the 20-user workload with the
+# (n_users, n_jobs_per_user, scenario, fleet_fn, deadline, budget,
+# extras): the failure cell re-runs the 20-user workload with the
 # failure/recovery event source live (MTBF=500, MTTR=25) so the perf
 # trajectory tracks the dynamic-resource path -- including how far
 # dense interference degrades the speculation horizon -- not just the
-# static fleet; the 4-user cell is the large-J rank-crossover workload.
+# static fleet; the 4-user cell is the large-J rank-crossover workload;
+# the net cell re-runs the 20-user workload with real file payloads
+# over the contention-aware fair-share links (suffix "_net": the
+# NETWORK event source + link_scan kernel live in the hot path, with
+# one phantom background flow per link).  ``extras`` keys: suffix,
+# in_bytes/out_bytes (payloads; default 0), net (enable the network
+# subsystem with an auto-sized transfer table).
 SCENARIOS = (
-    (1, 200, None, None, 2000.0, 22000.0),
-    (20, 100, None, None, 2000.0, 22000.0),
-    (200, 10, None, None, 2000.0, 22000.0),
+    (1, 200, None, None, 2000.0, 22000.0, None),
+    (20, 100, None, None, 2000.0, 22000.0, None),
+    (200, 10, None, None, 2000.0, 22000.0, None),
     (20, 100, simulation.Scenario(mtbf=500.0, mttr=25.0, seed=1), None,
-     2000.0, 22000.0),
-    (4, 512, None, _deep_fleet, 2000.0, 500000.0),
+     2000.0, 22000.0, dict(suffix="_fail")),
+    (4, 512, None, _deep_fleet, 2000.0, 500000.0, None),
+    (20, 100, simulation.Scenario(baud_rate=28_000.0, bg_flows=1.0),
+     None, 2000.0, 22000.0,
+     dict(suffix="_net", net=True, in_bytes=200_000.0,
+          out_bytes=100_000.0)),
 )
 
 
-def _one(fleet, n_users, n_jobs, scenario, batch, deadline, budget,
-         timed=True):
-    g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
-                          n_users=n_users)
+def _one(fleet, g, n_users, scenario, batch, deadline, budget,
+         net_cap=0, timed=True):
     kw = dict(deadline=deadline, budget=budget, opt=types.OPT_COST,
-              n_users=n_users, scenario=scenario, batch=batch)
+              n_users=n_users, scenario=scenario, batch=batch,
+              net_cap=net_cap)
     t0 = time.perf_counter()
     r = simulation.run_experiment(g, fleet, **kw)      # compile + run
     jax.block_until_ready(r.spent)
@@ -180,13 +189,20 @@ def run():
     except OSError:
         golden = {}
     report, out = {}, []
-    for n_users, n_jobs, scenario, fleet_fn, deadline, budget in \
-            SCENARIOS:
+    for n_users, n_jobs, scenario, fleet_fn, deadline, budget, extras \
+            in SCENARIOS:
+        extras = extras or {}
         fleet = resource.wwg_fleet() if fleet_fn is None else fleet_fn()
-        r, wall, compile_s = _one(fleet, n_users, n_jobs, scenario,
-                                  engine.DEFAULT_BATCH, deadline, budget)
-        r1, _, _ = _one(fleet, n_users, n_jobs, scenario, 1, deadline,
-                        budget, timed=False)
+        g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
+                              n_users=n_users,
+                              in_bytes=extras.get("in_bytes", 0.0),
+                              out_bytes=extras.get("out_bytes", 0.0))
+        net_cap = None if extras.get("net") else 0  # None = auto-size
+        r, wall, compile_s = _one(fleet, g, n_users, scenario,
+                                  engine.DEFAULT_BATCH, deadline, budget,
+                                  net_cap=net_cap)
+        r1, _, _ = _one(fleet, g, n_users, scenario, 1, deadline,
+                        budget, net_cap=net_cap, timed=False)
         events = int(np.asarray(r.n_events))
         steps = int(np.asarray(r.n_steps))
         steps_k1 = int(np.asarray(r1.n_steps))
@@ -218,22 +234,31 @@ def run():
             "spent": float(np.asarray(r.spent).sum()),
             "overflow": int(np.asarray(r.overflow)),
         }
-        name = f"engine_{n_users}u_{n_jobs}j"
-        if scenario is not None:
-            name += "_fail"
+        name = f"engine_{n_users}u_{n_jobs}j" + extras.get("suffix", "")
+        if extras.get("suffix") == "_fail":
             cell["scenario"] = {"mtbf": float(np.asarray(scenario.mtbf)),
                                 "mttr": float(np.asarray(scenario.mttr)),
                                 "seed": scenario.seed}
             cell["n_failed"] = int(np.asarray(r.n_failed))
             cell["n_resubmits"] = int(np.asarray(r.n_resubmits))
             cell["downtime_total"] = float(np.asarray(r.downtime).sum())
+        if extras.get("net"):
+            cell["scenario"] = {
+                "baud_rate": float(np.asarray(scenario.baud_rate)),
+                "bg_flows": float(np.asarray(scenario.bg_flows)),
+                "in_bytes": extras["in_bytes"],
+                "out_bytes": extras["out_bytes"],
+            }
+            cell["net_cap"] = int(simulation.safe_net_cap(
+                g, engine.default_params(deadline, budget,
+                                         types.OPT_COST, n_users,
+                                         fleet.r), fleet, n_users))
         if fleet_fn is not None:
             cell["fleet"] = "deep_2x80pe"
             cell["j_cap"] = int(simulation.safe_max_jobs(
-                gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=n_jobs,
-                                  n_users=n_users),
-                engine.default_params(deadline, budget, types.OPT_COST,
-                                      n_users, fleet.r), fleet))
+                g, engine.default_params(deadline, budget,
+                                         types.OPT_COST, n_users,
+                                         fleet.r), fleet))
         base = None if (scenario is not None or fleet_fn is not None) \
             else golden.get(f"{n_users}u_{n_jobs}j")
         if base is not None:

@@ -16,6 +16,13 @@ superstep batching; the failure run is additionally re-executed with
 ``batch=1`` to assert the speculative path is bit-for-bit identical
 under dense interference (the horizon degrades, the results don't).
 
+A third run demonstrates *planned* downtime: a maintenance window
+(``reservation.maintenance`` -- sugar over the advance-reservation
+source that holds every PE of a resource) takes the cheapest resource
+offline for [100, 160).  Unlike a failure, nothing is killed or
+refunded: admission just stops, and queued work resumes when the window
+closes.
+
   PYTHONPATH=src python examples/failure_recovery.py [seed]
 
 Expected output with the default seed 0 (deterministic; asserted below,
@@ -26,9 +33,16 @@ and smoke-run by the CI docs job):
   with failures:
     completed 40/40  spent 2879 G$  finished at t=555.9
     gridlets hit by failures: 12, resubmitted: 12
+  with R2 maintenance [100, 160):
+    completed 40/40  spent 5177 G$  finished at t=232.5
+    gridlets hit by failures: 0, resubmitted: 0
 
 Failures push the finish past the baseline's t=528.2 and the re-planned
 dispatches land on costlier resources -- same completions, higher spend.
+Maintenance kills nothing, but with the cheap R2 dark mid-run the
+cost-optimising broker buys the expensive fast resources instead:
+double the spend, half the makespan -- planned downtime trades G$ for
+time where a failure trades both.
 """
 import sys
 
@@ -36,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gridlet, resource, simulation, types
+from repro.core import gridlet, reservation, resource, simulation, types
 
 
 def main():
@@ -54,6 +68,13 @@ def main():
     faulty = simulation.run_experiment(
         farm, fleet, deadline=600.0, budget=12000.0, opt=types.OPT_COST,
         scenario=simulation.Scenario(mtbf=150.0, mttr=15.0, seed=seed))
+    # Planned downtime: the cheapest resource (R2) goes dark over
+    # [100, 160) -- a maintenance window blocking all of its PEs.
+    maint = simulation.run_experiment(
+        farm, fleet, deadline=600.0, budget=12000.0, opt=types.OPT_COST,
+        scenario=simulation.Scenario(
+            reservations=reservation.maintenance(fleet.num_pe,
+                                                 [(2, 100.0, 160.0)])))
 
     print("40-gridlet task farm, 3 resources, MTBF=150 MTTR=15 "
           f"(seed {seed})\n")
@@ -64,7 +85,8 @@ def main():
               f"{float(fleet.cost_per_sec[r]):5.1f} {downtime[r]:9.1f}")
 
     for name, res in (("baseline (no failures)", baseline),
-                      ("with failures", faulty)):
+                      ("with failures", faulty),
+                      ("with R2 maintenance [100, 160)", maint)):
         print(f"\n{name}:")
         print(f"  completed {int(res.n_done[0])}/40  "
               f"spent {float(res.spent[0]):.0f} G$  "
@@ -99,6 +121,12 @@ def main():
     assert int(single.n_steps) == int(faulty.n_steps) + int(faulty.n_spec)
     print(f"batched engine bit-identical to single-step: OK "
           f"({int(single.n_steps)} -> {int(faulty.n_steps)} iterations)")
+    # maintenance is planned downtime: nothing killed, nothing
+    # refunded -- but steering the broker off the cheap resource
+    # mid-run costs real G$ (it buys the fast expensive ones instead)
+    assert int(maint.n_failed) == 0 and int(maint.n_resubmits) == 0
+    assert int(maint.n_done[0]) == 40
+    assert float(maint.spent[0]) > float(baseline.spent[0])
     if seed == 0:              # deterministic default (header block)
         assert int(faulty.n_done[0]) == 40
         assert int(faulty.n_failed) == 12 and int(faulty.n_resubmits) == 12

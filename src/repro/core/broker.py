@@ -33,8 +33,8 @@ job-slot table (a Gridlet's slot column is an engine implementation
 detail), which is what lets one broker event run inside a superstep at
 any point after completions and returns have been applied.  BROKER is
 the lowest-priority event kind in the engine's COMPLETION > FAILURE >
-RECOVERY > RESERVATION > RETURN > ARRIVAL > CALENDAR_STEP > BROKER
-tie-break: at an equal timestamp the broker observes every other
+RECOVERY > RESERVATION > NETWORK > RETURN > ARRIVAL > CALENDAR_STEP >
+BROKER tie-break: at an equal timestamp the broker observes every other
 batch's effects.
 
 The measurement in step 2 counts fractional progress of in-flight jobs so

@@ -40,8 +40,8 @@ with
     also its rank in the fixed tie-break priority order
     ``PRIORITY_ORDER``:
 
-        COMPLETION > FAILURE > RECOVERY > RESERVATION > RETURN
-                   > ARRIVAL > CALENDAR_STEP > BROKER
+        COMPLETION > FAILURE > RECOVERY > RESERVATION > NETWORK
+                   > RETURN > ARRIVAL > CALENDAR_STEP > BROKER
 
   * ``candidates(state) -> f32[C]`` -- the source's pending instants as
     a fixed-shape vector of absolute times, ``+inf`` where nothing is
@@ -112,15 +112,22 @@ K_FAILURE = 4       # resource goes down (MTBF stream)
 K_RECOVERY = 5      # resource comes back up (MTTR stream)
 K_RESERVATION = 6   # advance-reservation window opens/closes
 K_CALENDAR = 7      # local load calendar step (weekend boundary)
+K_NETWORK = 8       # fair-share link event: a transfer completes its
+                    # last byte, or a staged transfer enters its link
 
-# Tie-break order among sources due at the same instant.  Application
-# order inside a superstep differs in exactly one place: the engine
-# applies BROKER before ARRIVAL so the broker's zero-delay dispatches
-# arrive within the same superstep, while ARRIVAL keeps semantic
-# priority (pre-broker arrivals hold admission precedence -- see
-# engine._apply_arrivals).
+# Tie-break order among sources due at the same instant.  NETWORK sits
+# between RESERVATION and RETURN: a transfer that drains at t* releases
+# its Gridlet's pending RETURN/ARRIVAL instant to t*, so the release
+# must be applied before those sources collect their due batches (the
+# released events then fold into the same superstep, exactly like the
+# zero-delay analytic transfers always have).  Application order inside
+# a superstep differs from this ranking in exactly one place: the
+# engine applies BROKER before ARRIVAL so the broker's zero-delay
+# dispatches arrive within the same superstep, while ARRIVAL keeps
+# semantic priority (pre-broker arrivals hold admission precedence --
+# see engine._apply_arrivals).
 PRIORITY_ORDER = (K_COMPLETION, K_FAILURE, K_RECOVERY, K_RESERVATION,
-                  K_RETURN, K_ARRIVAL, K_CALENDAR, K_BROKER)
+                  K_NETWORK, K_RETURN, K_ARRIVAL, K_CALENDAR, K_BROKER)
 
 
 def no_interference(state, t_max) -> jax.Array:

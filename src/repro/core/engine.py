@@ -43,18 +43,21 @@ masks, and (for the batched path) the speculation horizon:
   FAILURE       -- a resource goes down (per-resource MTBF stream),
   RECOVERY      -- a failed resource comes back up (MTTR stream),
   RESERVATION   -- an advance-reservation window opens or closes,
+  NETWORK       -- a fair-share link transfer drains its last byte (or
+                   a pre-routed transfer enters its link),
   RETURN        -- processed Gridlet reaches its broker (GRIDLET_RETURN),
   ARRIVAL       -- dispatched Gridlet reaches its resource (GRIDLET_SUBMIT),
   CALENDAR_STEP -- a local-load calendar boundary (weekend edge),
   BROKER        -- periodic scheduling event of the economic broker,
 
 advances all resident jobs analytically by the PE-share algebra of Fig 8
-over ``[t, t*)``, then applies **every** source due at the earliest
-pending ``t*`` in one vectorised batch per kind, in the fixed tie-break
-priority order
+over ``[t, t*)`` (and, with the network subsystem on, all in-flight
+transfers by their fair link shares), then applies **every** source due
+at the earliest pending ``t*`` in one vectorised batch per kind, in the
+fixed tie-break priority order
 
-  COMPLETION > FAILURE > RECOVERY > RESERVATION > RETURN > ARRIVAL
-             > CALENDAR_STEP > BROKER.
+  COMPLETION > FAILURE > RECOVERY > RESERVATION > NETWORK > RETURN
+             > ARRIVAL > CALENDAR_STEP > BROKER.
 
 Within a kind, ties are FIFO by flat Gridlet index -- exactly the order
 the one-event-at-a-time loop would have produced, so the Table 1 /
@@ -94,6 +97,21 @@ Space-shared (Figs 10-12): dedicated PE per job, FCFS (or SJF) queue;
 PE identity never affects the trace (all PEs of a resource are equal
 rated), so only the per-resource occupancy count is tracked.
 Reservations gate admission (never preempt residents).
+
+Fair-share links (the network subsystem): the static ``net_cap`` knob
+sizes a ``[R_pad, T]`` transfer-slot table (``SimState.xslot`` /
+``link_gridlet`` / ``link_rem``) holding the remaining bytes of every
+in-flight staging and result return whose payload can contend
+(``network.link_tabled``); all concurrent transfers on a resource link
+split ``params.link_baud`` equally (plus ``params.bg_flows`` phantom
+background flows), forecasts run through ``kernels.ops.link_scan``
+exactly like completion forecasts run through ``event_scan``, and the
+NETWORK source releases a drained transfer's ARRIVAL/RETURN instant
+into the same superstep.  ``net_cap = 0`` (default) disables the table
+and keeps the analytic ``bytes / baud`` timestamps untouched;
+zero-byte payloads and infinite links never table, so zero-contention
+configurations are bit-for-bit identical to the analytic path (see
+docs/ARCHITECTURE.md "The network layer").
 
 Speculative k-step batching
 ---------------------------
@@ -138,8 +156,8 @@ value.  See docs/PERFORMANCE.md.
 ``SimState.n_events`` counts applied events, ``n_steps`` counts
 while-loop iterations (committing supersteps), ``n_spec`` counts the
 speculative supersteps the batched path folded into them; ``overflow``
-counts job-slot allocation failures and must stay 0 (drivers size ``J``
-accordingly).
+counts job-slot and transfer-slot allocation failures and must stay 0
+(drivers size ``J`` / ``net_cap`` accordingly).
 """
 from __future__ import annotations
 
@@ -183,15 +201,26 @@ class SimParams:
     resv_pes: jax.Array        # i32[K] PEs held
     resv_start: jax.Array      # f32[K] window start (inclusive)
     resv_end: jax.Array        # f32[K] window end (exclusive)
+    link_baud: jax.Array       # f32[R] fair-share link capacity (net
+                               #     mode; inf = uncontended link)
+    bg_flows: jax.Array        # f32[R] phantom background flows riding
+                               #     each link (net mode; may be
+                               #     fractional)
 
 
 def default_params(deadline, budget, opt, n_users: int,
                    n_resources: int = 1, registered=None, mtbf=None,
                    mttr=None, reservations=None,
-                   fail_key=None) -> SimParams:
+                   fail_key=None, link_baud=None,
+                   bg_flows=None) -> SimParams:
     """``mtbf``/``mttr`` broadcast to [R]; 0 disables the failure source.
     ``reservations`` is a ReservationBook, an iterable of (resource,
-    pes, start, end) tuples, or the 4-array table itself."""
+    pes, start, end) tuples, or the 4-array table itself.
+    ``link_baud``/``bg_flows`` feed the fair-share network subsystem
+    (only consulted when the engine runs with ``net_cap > 0``); the
+    default infinite ``link_baud`` makes every link uncontended --
+    callers that enable the subsystem pass ``fleet.baud_rate`` (or a
+    scenario override) here."""
     f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n_users,))
     r = lambda x: jnp.broadcast_to(jnp.asarray(
         0.0 if x is None else x, jnp.float32), (n_resources,))
@@ -218,6 +247,10 @@ def default_params(deadline, budget, opt, n_users: int,
         fail_key=(jax.random.PRNGKey(0) if fail_key is None else fail_key),
         resv_res=resv[0], resv_pes=resv[1],
         resv_start=resv[2], resv_end=resv[3],
+        link_baud=jnp.broadcast_to(
+            jnp.asarray(INF if link_baud is None else link_baud,
+                        jnp.float32), (n_resources,)),
+        bg_flows=r(bg_flows),
     )
 
 
@@ -227,6 +260,13 @@ class SimState:
     g: object                  # GridletBatch
     slot: jax.Array            # i32[N] job-slot column (-1 = none)
     row_gridlet: jax.Array     # i32[R_pad, J] slot -> gridlet (-1 = free)
+    xslot: jax.Array           # i32[N] transfer-slot column (-1 = none;
+                               #     net mode only, see link_gridlet)
+    link_gridlet: jax.Array    # i32[R_pad, T] transfer slot -> gridlet
+                               #     (-1 = free); T = 0 disables the
+                               #     fair-share network subsystem
+    link_rem: jax.Array        # f32[R_pad, T] bytes still to move per
+                               #     in-flight transfer
     spent: jax.Array           # f32[U] committed budget
     done_on: jax.Array         # f32[U,R] jobs of u completed on r
     first_dispatch: jax.Array  # f32[U,R] first dispatch instant (inf)
@@ -251,7 +291,8 @@ class SimState:
     n_trace: jax.Array         # i32 trace entries written
     n_failed: jax.Array        # i32 gridlets hit by a failure
     n_resubmits: jax.Array     # i32 FAILED gridlets re-dispatched
-    overflow: jax.Array        # i32 job-slot allocation failures (== 0)
+    overflow: jax.Array        # i32 job-slot / transfer-slot
+                               #     allocation failures (== 0)
     trace_t: jax.Array         # f32[TRACE_LEN]
     trace_kind: jax.Array      # i32[TRACE_LEN] des.K_* codes
     trace_who: jax.Array       # i32[TRACE_LEN]
@@ -367,6 +408,154 @@ def _scan_events(state, fleet, params, n_resources, r_pad, rank=None):
 
 
 # ----------------------------------------------------------------------
+# Fair-share link dynamics (the network subsystem)
+# ----------------------------------------------------------------------
+#
+# The engine's static ``net_cap`` knob sizes the [R_pad, T] transfer-
+# slot table (T = net_cap transfer slots per resource link; 0 disables
+# the subsystem entirely -- the table is then [R_pad, 0] and every
+# branch below is statically skipped, so the analytic path is untouched
+# code, not a runtime no-op).  With the subsystem on, a transfer whose
+# payload can actually contend (network.link_tabled: positive bytes
+# over a finite-positive link) occupies one column of the table with
+# its ``remaining_bytes``; all concurrent transfers on a link share its
+# baud rate equally (kernels.ops.link_scan), remainders advance
+# piecewise-constantly between events exactly like remaining MI under
+# Fig 8 shares, and the NETWORK event source fires when a transfer
+# drains -- releasing the gridlet's ARRIVAL/RETURN instant to "now" so
+# the release folds into the same superstep.  Zero-byte payloads and
+# infinite links never enter the table and keep the analytic
+# (instantaneous) timestamps, which is what keeps zero-contention
+# configurations bit-for-bit identical to the analytic engine.
+
+def _net_on(state) -> bool:
+    """Static: the fair-share network subsystem is enabled (T > 0)."""
+    return state.link_rem.shape[1] > 0
+
+
+def _xfer_bytes(g):
+    """Payload of each gridlet's pending/possible transfer: input files
+    while staging (IN_TRANSIT), result files on the way back."""
+    return jnp.where(g.status == IN_TRANSIT, g.in_bytes, g.out_bytes)
+
+
+def _link_scan(state, params, n_resources, r_pad):
+    """Fair-share rates + next-transfer-completion forecast per link,
+    through kernels.ops.link_scan (Pallas on TPU, XLA fallback on CPU).
+    The flat gridlet index is the argmin tie-break key, mirroring the
+    job-slot table's FIFO convention."""
+    pad = r_pad - n_resources
+    baud = jnp.pad(params.link_baud, (0, pad), constant_values=1.0)
+    bg = jnp.pad(params.bg_flows, (0, pad))
+    tie = jnp.where(state.link_gridlet >= 0, state.link_gridlet,
+                    2 ** 30).astype(jnp.float32)
+    return kernel_ops.link_scan(state.link_rem, baud, bg=bg, tie=tie)
+
+
+def _pending_entries(state, params, n_resources):
+    """Transfers created with a *future* network-entry instant (pre-
+    routed ``run_direct`` dispatches): tabled payloads holding their
+    entry time in ``t_event`` while awaiting a transfer slot.  The
+    NETWORK source enqueues them exactly at that instant."""
+    g = state.g
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    moving = (g.status == IN_TRANSIT) | (g.status == RETURNING)
+    return (moving & (state.xslot < 0) & jnp.isfinite(g.t_event) &
+            network.link_tabled(_xfer_bytes(g), params.link_baud[res]))
+
+
+def _advance_transfers(state, ctx, t_next, any_event):
+    """Advance every in-flight transfer analytically over [t, t_next)
+    by the fair-share rates in ``ctx["net_scan"]`` (the link twin of
+    :func:`_advance_jobs`; must run while ``state.t`` still holds the
+    interval start).  Transfers forecast to drain by ``t_next`` are
+    zeroed and recorded in ``ctx["xfer_done"]`` for the NETWORK apply;
+    survivors are clamped to a tiny epsilon so f32 rounding can never
+    turn an occupied slot into the empty-slot sentinel."""
+    from .types import replace
+    rate_lt = ctx["net_scan"][0]
+    occupied = state.link_gridlet >= 0
+    rem = state.link_rem
+    rel = jnp.where(occupied, rem / jnp.maximum(rate_lt, 1e-30), INF)
+    dt = jnp.maximum(t_next - state.t, 0.0)
+    due = occupied & any_event & (state.t + rel <= t_next)
+    new_rem = jnp.where(
+        due, 0.0,
+        jnp.where(occupied, jnp.maximum(rem - rate_lt * dt, 1e-30), rem))
+    ctx["xfer_done"] = due
+    return replace(state, link_rem=new_rem)
+
+
+def _enqueue_transfers(state, mask, n_resources, r_pad):
+    """Allocate a transfer-slot column on each masked gridlet's
+    resource link, load its payload as ``remaining_bytes``, and mark
+    the gridlet's pending instant load-dependent (``t_event = inf`` --
+    the NETWORK source owns it now).  Same sort-free running-count +
+    binary-search allocation as :func:`_alloc_slots`; gridlets that
+    find no free column are counted in ``overflow`` (drivers size
+    ``net_cap`` so this cannot happen)."""
+    from .types import replace
+    g = state.g
+    n = g.n
+    t_cap = state.link_gridlet.shape[1]
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    free = state.link_gridlet < 0
+    n_free = jnp.sum(free, axis=1)                        # [R_pad]
+    rank = _count_rank(res, mask, n_resources)
+    ok = mask & (rank < n_free[res])
+    cumfree = jnp.cumsum(free.astype(jnp.int32), axis=1)  # [R_pad, T]
+    want = rank + 1
+    lo = jnp.zeros((n,), jnp.int32)
+    hi = jnp.full((n,), t_cap - 1, jnp.int32)
+    for _ in range(max(1, (t_cap - 1).bit_length())):
+        mid = (lo + hi) // 2
+        ge = cumfree[res, mid] >= want
+        lo = jnp.where(ge, lo, mid + 1)
+        hi = jnp.where(ge, mid, hi)
+    col = hi
+    rows = jnp.where(ok, res, r_pad)            # out of range: dropped
+    cols = jnp.where(ok, col, 0)
+    lg = state.link_gridlet.at[rows, cols].set(idx, mode="drop")
+    lr = state.link_rem.at[rows, cols].set(
+        jnp.where(ok, _xfer_bytes(g), 0.0), mode="drop")
+    g2 = replace(g, t_event=jnp.where(ok, INF, g.t_event))
+    return replace(
+        state, g=g2, link_gridlet=lg, link_rem=lr,
+        xslot=jnp.where(ok, col, state.xslot),
+        overflow=state.overflow + jnp.sum(mask & ~ok, dtype=jnp.int32))
+
+
+def _enqueue_new_transfers(state, params, n_resources, r_pad):
+    """End-of-superstep pass: transfers *created this superstep*
+    (broker dispatches, completions' result returns) enter their link
+    now.  Tabled creation marked them ``t_event == inf`` with no slot,
+    so the condition is transient; pending entries (finite ``t_event``)
+    wait for the NETWORK source instead."""
+    g = state.g
+    moving = (g.status == IN_TRANSIT) | (g.status == RETURNING)
+    new = moving & (state.xslot < 0) & ~jnp.isfinite(g.t_event)
+    return jax.lax.cond(
+        new.any(),
+        lambda s: _enqueue_transfers(s, new, n_resources, r_pad),
+        lambda s: s, state)
+
+
+def _free_link_slots(state, mask):
+    """Release the transfer slots of every gridlet in ``mask`` (their
+    transfer was consumed by an ARRIVAL/RETURN application)."""
+    from .types import replace
+    r_pad, t_cap = state.link_gridlet.shape
+    res = jnp.clip(state.g.resource, 0, r_pad - 1)
+    rows = jnp.where(mask, res, r_pad)          # out of range: dropped
+    cols = jnp.where(mask, jnp.clip(state.xslot, 0, t_cap - 1), 0)
+    lg = state.link_gridlet.at[rows, cols].set(-1, mode="drop")
+    lr = state.link_rem.at[rows, cols].set(0.0, mode="drop")
+    return replace(state, link_gridlet=lg, link_rem=lr,
+                   xslot=jnp.where(mask, -1, state.xslot))
+
+
+# ----------------------------------------------------------------------
 # Batched event application
 # ----------------------------------------------------------------------
 
@@ -441,18 +630,32 @@ def _alloc_slots(state, mask, res, n_resources, r_pad):
         overflow=state.overflow + jnp.sum(mask & ~ok, dtype=jnp.int32))
 
 
-def _apply_completions(state, fleet, completes, t_next, n_resources,
-                       r_pad):
-    """RUNNING -> RETURNING for the whole batch; job slots freed."""
+def _apply_completions(state, fleet, params, completes, t_next,
+                       n_resources, r_pad):
+    """RUNNING -> RETURNING for the whole batch; job slots freed.
+
+    The result-return instant is analytic (``t_next + out_delay``)
+    unless the network subsystem is on and the payload contends for its
+    link: those transfers are marked load-dependent (``t_event = inf``)
+    and enter the transfer-slot table at the end of this superstep
+    (:func:`_enqueue_new_transfers`)."""
     from .types import replace
     g = state.g
     res = jnp.clip(g.resource, 0, n_resources - 1)
-    out_delay = network.transfer_delay(g.out_bytes, fleet.baud_rate[res])
+    if _net_on(state):
+        baud = params.link_baud[res]
+        tabled = network.link_tabled(g.out_bytes, baud)
+        t_ev = jnp.where(
+            tabled, INF,
+            t_next + network.transfer_delay(g.out_bytes, baud))
+    else:
+        t_ev = t_next + network.transfer_delay(g.out_bytes,
+                                               fleet.baud_rate[res])
     g = replace(
         g,
         status=jnp.where(completes, RETURNING, g.status),
         finish=jnp.where(completes, t_next, g.finish),
-        t_event=jnp.where(completes, t_next + out_delay, g.t_event),
+        t_event=jnp.where(completes, t_ev, g.t_event),
     )
     return _free_slots(replace(state, g=g), completes, res, r_pad)
 
@@ -508,7 +711,10 @@ def _apply_returns(state, fleet, t_next, n_users, n_resources):
     done_on = state.done_on + jax.ops.segment_sum(
         ret_due.astype(jnp.float32), ur,
         num_segments=n_users * n_resources).reshape(n_users, n_resources)
-    return replace(state, g=g, done_on=done_on), ret_due
+    state = replace(state, g=g, done_on=done_on)
+    if _net_on(state):    # consumed transfers release their link slots
+        state = _free_link_slots(state, ret_due & (state.xslot >= 0))
+    return state, ret_due
 
 
 def _fail_gridlets(state, victims, n_users):
@@ -576,7 +782,10 @@ def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_users,
         t_event=jnp.where(arr_run, INF,
                           jnp.where(arr_queue, t_next, g.t_event)),
     )
-    return replace(state, g=g), arr_due, arr_run, arr_queue
+    state = replace(state, g=g)
+    if _net_on(state):    # consumed transfers release their link slots
+        state = _free_link_slots(state, arr_due & (state.xslot >= 0))
+    return state, arr_due, arr_run, arr_queue
 
 
 def _apply_failures(state, fleet, params, due_r, now, n_users,
@@ -675,7 +884,7 @@ def _make_sources(fleet, params, n_users, ctx):
         r_pad = state.row_gridlet.shape[0]
         completes, res = ctx["completes"], ctx["res"]
         occ_rows = ctx["scan"][3]
-        state = _apply_completions(state, fleet, completes, now,
+        state = _apply_completions(state, fleet, params, completes, now,
                                    n_resources, r_pad)
         # Freed PEs admit queued Gridlets.  Queued jobs only exist while
         # every unreserved PE is busy, so the kernel occupancy minus
@@ -778,10 +987,67 @@ def _make_sources(fleet, params, n_users, ctx):
         ctx["free_pe"] = ctx["free_pe"] - n_admit_r
         return state
 
+    # -- NETWORK: fair-share links (the [R_pad, T] transfer table) ------
+    def network_candidates(state):
+        # With the subsystem off the source exposes no candidates and
+        # applies as the identity: analytic runs never see it.
+        if not _net_on(state):
+            return jnp.zeros((0,), jnp.float32)
+        r_pad = state.row_gridlet.shape[0]
+        if "net_scan" not in ctx:   # the horizon frontier re-enters here
+            ctx["net_scan"] = _link_scan(state, params, n_resources,
+                                         r_pad)
+        tmin = ctx["net_scan"][1]
+        # per-LINK next-transfer-completion forecast + the pending
+        # network-entry instants of pre-routed future dispatches
+        link_cand = jnp.where(tmin < _BIG, state.t + tmin, INF)
+        pend = _pending_entries(state, params, n_resources)
+        return jnp.concatenate(
+            [link_cand, jnp.where(pend, state.g.t_event, INF)])
+
+    def network_apply(state, now):
+        if not _net_on(state):
+            return state
+        from .types import replace
+        r_pad = state.row_gridlet.shape[0]
+        n = state.g.n
+        # (1) transfers that drained by `now` (recorded by the advance
+        # pass) release their gridlet's pending instant to `now`; the
+        # RETURN/ARRIVAL batches later this superstep consume them.
+        due = ctx["xfer_done"]
+        done_n = jnp.zeros((n,), bool).at[
+            jnp.where(due, state.link_gridlet, n)].set(True, mode="drop")
+        state = replace(state, g=replace(
+            state.g, t_event=jnp.where(done_n, now, state.g.t_event)))
+        # (2) pending entries whose network-entry instant arrived join
+        # their link with the full payload as remaining bytes.
+        pend = _pending_entries(state, params, n_resources) & \
+            (state.g.t_event <= now)
+        state = jax.lax.cond(
+            pend.any(),
+            lambda s: _enqueue_transfers(s, pend, n_resources, r_pad),
+            lambda s: s, state)
+        ctx[("count", des.K_NETWORK)] = (
+            jnp.sum(done_n, dtype=jnp.int32) +
+            jnp.sum(pend, dtype=jnp.int32))
+        ctx[("who", des.K_NETWORK)] = jnp.where(
+            done_n.any(), jnp.argmax(done_n),
+            jnp.argmax(pend)).astype(jnp.int32)
+        return state
+
     # -- RETURN / ARRIVAL / CALENDAR / BROKER ---------------------------
     def return_candidates(state):
         g = state.g
-        return jnp.where(g.status == RETURNING, g.t_event, INF)
+        mask = g.status == RETURNING
+        if _net_on(state):
+            # tabled transfers are owned by the NETWORK source until
+            # they drain (t_event inf while in flight, `now` once due);
+            # a pending-entry return must not fire at its entry instant.
+            res = jnp.clip(g.resource, 0, n_resources - 1)
+            mask &= ~(network.link_tabled(g.out_bytes,
+                                          params.link_baud[res]) &
+                      (state.xslot < 0))
+        return jnp.where(mask, g.t_event, INF)
 
     def return_apply(state, now):
         state, ret_due = _apply_returns(state, fleet, now, n_users,
@@ -792,7 +1058,13 @@ def _make_sources(fleet, params, n_users, ctx):
 
     def arrival_candidates(state):
         g = state.g
-        return jnp.where(g.status == IN_TRANSIT, g.t_event, INF)
+        mask = g.status == IN_TRANSIT
+        if _net_on(state):
+            res = jnp.clip(g.resource, 0, n_resources - 1)
+            mask &= ~(network.link_tabled(g.in_bytes,
+                                          params.link_baud[res]) &
+                      (state.xslot < 0))
+        return jnp.where(mask, g.t_event, INF)
 
     def arrival_apply(state, now):
         state, arr_due, arr_run, arr_queue = _apply_arrivals(
@@ -829,10 +1101,30 @@ def _make_sources(fleet, params, n_users, ctx):
         # tie-break), recorded before the dispatch batch runs.
         g = state.g
         ctx["arr_pre"] = (g.status == IN_TRANSIT) & (g.t_event <= now)
-        return jax.lax.cond(
+        pre_transit = g.status == IN_TRANSIT
+        state = jax.lax.cond(
             ctx["fired_b"],
             lambda s: broker_mod.broker_event(s, fleet, params, n_users),
             lambda s: s, state)
+        if _net_on(state):
+            # Re-time the broker's fresh dispatches under the network
+            # subsystem: contending payloads become load-dependent
+            # (t_event inf; they enter their link at the end of this
+            # superstep), the rest take the analytic delay at the
+            # subsystem's link_baud (0 for the instantaneous cases).
+            from .types import replace
+            g2 = state.g
+            res = jnp.clip(g2.resource, 0, n_resources - 1)
+            newt = (g2.status == IN_TRANSIT) & ~pre_transit
+            baud = params.link_baud[res]
+            tabled = newt & network.link_tabled(g2.in_bytes, baud)
+            t_ev = jnp.where(
+                tabled, INF,
+                jnp.where(newt,
+                          now + network.transfer_delay(g2.in_bytes, baud),
+                          g2.t_event))
+            state = replace(state, g=replace(g2, t_event=t_ev))
+        return state
 
     # COMPLETION and RETURN are speculation-safe (horizon_fn): applying
     # them never pulls another source's pending instant earlier, so they
@@ -841,17 +1133,49 @@ def _make_sources(fleet, params, n_users, ctx):
     # candidate streams cuts the horizon at its own instant; a stream
     # that can never fire (mtbf = 0 failure row, empty reservation
     # table) is +inf and cuts nothing, which is the source-aware form
-    # the fused frontier consumes.
+    # the fused frontier consumes.  With the network subsystem ON,
+    # COMPLETION is only *partially* safe: a completion whose result
+    # payload contends for a link creates a transfer mid-slab, changing
+    # every fair share on that link -- so each such job contributes a
+    # horizon cut at a lower bound on its completion instant (remaining
+    # at the full effective PE rate: shares only divide eff, and every
+    # rate-changing boundary -- calendar, reservation, failure -- cuts
+    # the horizon itself, so the bound holds throughout the slab).
+    # Zero-payload completions stay fully speculation-safe, which is
+    # why zero-byte scenarios keep their whole batching win with the
+    # subsystem on.
+    def completion_horizon(state):
+        if not _net_on(state):
+            return jnp.zeros((0,), jnp.float32)     # speculation-safe
+        g = state.g
+        res = jnp.clip(g.resource, 0, n_resources - 1)
+        eff = calendar.effective_mips(fleet, state.t)
+        # QUEUED jobs are risky too: a mid-slab queue admission (it
+        # rides inside completion_apply) turns one RUNNING, and it can
+        # then complete -- and create its return transfer -- before
+        # the slab ends.  The same bound covers it: a queued job
+        # cannot start before now, so t + remaining/eff still
+        # lower-bounds its completion.  (IN_TRANSIT needs no cut:
+        # arrivals cannot fire inside a slab -- analytic ones cut via
+        # the ARRIVAL candidates, tabled ones via the link forecast.)
+        risky = ((g.status == RUNNING) | (g.status == QUEUED)) & \
+            network.link_tabled(g.out_bytes, params.link_baud[res])
+        return jnp.where(
+            risky,
+            state.t + g.remaining / jnp.maximum(eff[res], 1e-30), INF)
+
     sources = (
         des.FnSource(des.K_COMPLETION, "completion",
                      completion_candidates, completion_apply,
-                     horizon_fn=des.no_interference),
+                     horizon_candidates_fn=completion_horizon),
         des.FnSource(des.K_FAILURE, "failure",
                      lambda s: s.next_fail, failure_apply),
         des.FnSource(des.K_RECOVERY, "recovery",
                      lambda s: s.next_recover, recovery_apply),
         des.FnSource(des.K_RESERVATION, "reservation",
                      reservation_candidates, reservation_apply),
+        des.FnSource(des.K_NETWORK, "network", network_candidates,
+                     network_apply),
         des.FnSource(des.K_RETURN, "return", return_candidates,
                      return_apply, horizon_fn=des.no_interference),
         des.FnSource(des.K_ARRIVAL, "arrival", arrival_candidates,
@@ -948,7 +1272,11 @@ def _bookkeep(state, fleet, params, n_users, kinds, counts, whos, t_next):
     one (full or speculative) superstep.  ``kinds``/``counts``/``whos``
     are aligned [S] vectors in priority order; a kind with count 0
     writes no trace row.  ``n_steps`` is NOT bumped here -- it counts
-    while-loop iterations and is owned by :func:`step`."""
+    while-loop iterations and is owned by :func:`step`.  Returns
+    ``(state, finished)``: the per-user termination flags double as the
+    while-loop's continue condition, carried alongside the state so the
+    loop ``cond`` never re-derives :func:`_user_flags` from scratch
+    (state is unchanged between here and the next cond evaluation)."""
     from .types import replace
     _, finished = _user_flags(state, params, fleet, n_users)
     term = jnp.where(finished & ~jnp.isfinite(state.term_time),
@@ -965,7 +1293,7 @@ def _bookkeep(state, fleet, params, n_users, kinds, counts, whos, t_next):
         trace_t=state.trace_t.at[pos].set(t_next, mode="drop"),
         trace_kind=state.trace_kind.at[pos].set(kinds, mode="drop"),
         trace_who=state.trace_who.at[pos].set(whos, mode="drop"),
-    )
+    ), finished
 
 
 def step(state: SimState, fleet, params: SimParams, n_users: int):
@@ -974,8 +1302,8 @@ def step(state: SimState, fleet, params: SimParams, n_users: int):
     advance the Fig 8 share algebra over [t, t*), apply every source
     due at t*.  (Standalone form without the cross-iteration slab
     carry; the jitted loops run :func:`_step_commit` directly.)"""
-    state, _ = _step_commit(state, fleet, params, n_users,
-                            _empty_slab(state))
+    state, _, _ = _step_commit(state, fleet, params, n_users,
+                               _empty_slab(state))
     return state
 
 
@@ -988,15 +1316,18 @@ def _step_commit(state: SimState, fleet, params: SimParams,
     slab-fed exactly like the speculative micro-steps' (sort-free when
     the carry holds, one lexsort reseed when it does not), so a
     completion-dominated stretch of supersteps runs without any sort
-    at all."""
+    at all.  Returns ``(state, slab, finished)`` -- the per-user
+    termination flags ride in the while-loop carry so the loop
+    condition never recomputes them."""
     from .types import replace
     n_resources = fleet.r
     r_pad = state.row_gridlet.shape[0]
 
     # ---- fused event frontier over every source's candidates ---------
-    # (one min/mask pass replaces the 8 stacked scalar reductions; the
-    # completion source's candidates come from the slab-fed kernel
-    # scan, preset here)
+    # (one min/mask pass replaces the per-source stacked scalar
+    # reductions; the completion source's candidates come from the
+    # slab-fed kernel scan, the network source's from the link scan,
+    # both preset here)
     ctx = {}
     ctx["scan"], reseeded = _checked_scan(state, fleet, params,
                                           n_resources, r_pad, slab)
@@ -1012,7 +1343,11 @@ def _step_commit(state: SimState, fleet, params: SimParams,
     any_event = jnp.isfinite(t_star)
     t_next = jnp.where(any_event, t_star, state.t)
 
-    # ---- advance every running job analytically over [t, t_next) -----
+    # ---- advance transfers + running jobs analytically over
+    # [t, t_next) (transfers first: both passes read the interval start
+    # from state.t, which _advance_jobs moves to t_next) --------------
+    if _net_on(state):
+        state = _advance_transfers(state, ctx, t_next, any_event)
     state = _advance_jobs(state, ctx, t_next, any_event, n_resources)
     # All index wiring below is derived from source.kind, so splicing a
     # new source into _make_sources never renumbers the built-ins.
@@ -1031,6 +1366,9 @@ def _step_commit(state: SimState, fleet, params: SimParams,
 
     # ---- allocate job slots for everything newly RUNNING -------------
     state = _alloc_newly(state, ctx, n_resources, r_pad)
+    # ---- transfers created this superstep enter their links ----------
+    if _net_on(state):
+        state = _enqueue_new_transfers(state, params, n_resources, r_pad)
 
     # ---- bookkeeping: termination instants, trace, counters ----------
     # Per-source event counts: a batching source reported its own count
@@ -1041,15 +1379,15 @@ def _step_commit(state: SimState, fleet, params: SimParams,
         for i, s in enumerate(sources)])
     whos = jnp.stack([ctx.get(("who", s.kind), no_who) for s in sources])
     kinds = jnp.asarray([s.kind for s in sources], jnp.int32)
-    state = _bookkeep(state, fleet, params, n_users, kinds, counts, whos,
-                      t_next)
+    state, finished = _bookkeep(state, fleet, params, n_users, kinds,
+                                counts, whos, t_next)
     state = replace(state, n_steps=state.n_steps + 1)
 
     fired_interfering = (fired_t[pos_of[des.K_FAILURE]]
                          | fired_t[pos_of[des.K_RECOVERY]]
                          | fired_t[pos_of[des.K_RESERVATION]])
     return state, _slab_after(state, ctx, ctx["scan"], fired_interfering,
-                              fleet, n_resources, r_pad)
+                              fleet, n_resources, r_pad), finished
 
 
 def _empty_slab(state):
@@ -1148,7 +1486,8 @@ def _slab_after(state, ctx, scan, fired_interfering, fleet, n_resources,
     return (rank, ~(ts_newly.any() | fired_interfering), qrank, qok)
 
 
-def _speculative_step(state, fleet, params, n_users, t_safe, slab):
+def _speculative_step(state, fleet, params, n_users, t_safe, slab,
+                      finished):
     """One speculative micro-superstep of the k-step batched path.
 
     Applies the earliest pending COMPLETION/RETURN batch if -- and only
@@ -1170,9 +1509,15 @@ def _speculative_step(state, fleet, params, n_users, t_safe, slab):
     rank order instead of re-ranking.  Whenever an admission or another
     structural change invalidated the carry, the micro-step falls back
     to one exact rescan and reseeds the carry from its fresh rank.
-    Returns ``(state, fired, slab')``; ``fired`` False means the state
-    was returned untouched (the caller stops speculating: pending times
-    only move when events apply).
+    With the network subsystem on, in-flight transfers drain at their
+    (horizon-constant) fair-share rates across the micro-step's
+    interval exactly as in a committing superstep -- no transfer can
+    *complete* inside the horizon (link forecasts cut it), so the
+    NETWORK apply itself never needs to run here.
+    Returns ``(state, fired, slab', finished')``; ``fired`` False means
+    the state was returned untouched (the caller stops speculating:
+    pending times only move when events apply) and ``finished`` passes
+    through unchanged.
     """
     n_resources = fleet.r
     r_pad = state.row_gridlet.shape[0]
@@ -1190,6 +1535,8 @@ def _speculative_step(state, fleet, params, n_users, t_safe, slab):
                      n_reseeds=state.n_reseeds +
                      reseeded.astype(jnp.int32))
     rank_used = ctx["scan"][4]
+    if _net_on(state):
+        ctx["net_scan"] = _link_scan(state, params, n_resources, r_pad)
 
     tmin = ctx["scan"][1].min()
     t_comp = jnp.where(tmin < _BIG, state.t + tmin, INF)
@@ -1198,28 +1545,33 @@ def _speculative_step(state, fleet, params, n_users, t_safe, slab):
 
     def live(s):
         from .types import replace
+        if _net_on(s):
+            s = _advance_transfers(s, ctx, t_next, fire)
         s = _advance_jobs(s, ctx, t_next, fire, n_resources)
         s = comp.apply(s, t_next)     # completions + queue admissions
         s = ret.apply(s, t_next)      # incl. zero-delay returns
         s = _alloc_newly(s, ctx, n_resources, r_pad)
+        if _net_on(s):                # exact slice of the commit path;
+            s = _enqueue_new_transfers(s, params, n_resources, r_pad)
         kinds = jnp.asarray([des.K_COMPLETION, des.K_RETURN], jnp.int32)
         counts = jnp.stack([ctx[("count", des.K_COMPLETION)],
                             ctx[("count", des.K_RETURN)]])
         whos = jnp.stack([ctx[("who", des.K_COMPLETION)],
                           ctx[("who", des.K_RETURN)]])
-        s = _bookkeep(s, fleet, params, n_users, kinds, counts, whos,
-                      t_next)
+        s, fin = _bookkeep(s, fleet, params, n_users, kinds, counts,
+                           whos, t_next)
         slab2 = _slab_after(s, ctx, ctx["scan"], jnp.asarray(False),
                             fleet, n_resources, r_pad)
-        return replace(s, n_spec=s.n_spec + 1), slab2
+        return replace(s, n_spec=s.n_spec + 1), slab2, fin
 
     def dead(s):
         # Untouched state: the scan just performed (reseeded or not)
         # still describes the table, so hand it to the next scan.
-        return s, (rank_used, jnp.asarray(True), slab[2], slab[3])
+        return s, (rank_used, jnp.asarray(True), slab[2], slab[3]), \
+            finished
 
-    (state, slab_next) = jax.lax.cond(fire, live, dead, state)
-    return state, fire, slab_next
+    (state, slab_next, finished) = jax.lax.cond(fire, live, dead, state)
+    return state, fire, slab_next, finished
 
 
 def _speculation_horizon(state, fleet, params, n_users):
@@ -1258,7 +1610,10 @@ def step_batched(state: SimState, fleet, params: SimParams, n_users: int,
     fed by the committing superstep's precomputed wave ranking (the
     slab carry -- see :func:`_speculative_step`).  Takes and returns
     ``(state, slab)`` so the ranking survives across while-loop
-    iterations; ``slab=None`` starts without one.
+    iterations (returns ``(state, slab, finished)`` -- the last
+    superstep's per-user termination flags, which the jitted loops
+    carry so the loop condition never recomputes :func:`_user_flags`);
+    ``slab=None`` starts without one.
 
     When the horizon is empty (an interfering source is due immediately
     -- dense failure scenarios, broker polls every superstep) every
@@ -1268,45 +1623,55 @@ def step_batched(state: SimState, fleet, params: SimParams, n_users: int,
     """
     if slab is None:
         slab = _empty_slab(state)
-    state, slab = _step_commit(state, fleet, params, n_users, slab)
+    state, slab, finished = _step_commit(state, fleet, params, n_users,
+                                         slab)
     if batch <= 1:
-        return state, slab
+        return state, slab, finished
     t_safe = _speculation_horizon(state, fleet, params, n_users)
 
     def micro(_, carry):
-        s, alive, slab = carry
+        s, alive, slab, fin = carry
 
         def go(s):
             return _speculative_step(s, fleet, params, n_users, t_safe,
-                                     slab)
+                                     slab, fin)
 
         # Once a micro-step declines, every later one would too (the
         # state, hence every pending time, is unchanged): short-circuit.
         return jax.lax.cond(
-            alive, go, lambda s: (s, jnp.asarray(False), slab), s)
+            alive, go, lambda s: (s, jnp.asarray(False), slab, fin), s)
 
-    state, _, slab = jax.lax.fori_loop(
-        0, batch - 1, micro, (state, jnp.asarray(True), slab))
-    return state, slab
+    state, _, slab, finished = jax.lax.fori_loop(
+        0, batch - 1, micro, (state, jnp.asarray(True), slab, finished))
+    return state, slab, finished
 
 
-def _continue(state, fleet, params, n_users, max_events):
+def _continue(state, finished, max_events):
     # Bound TOTAL supersteps (committing + speculative) so the budget
     # means the same thing for every batch value; a truncated batch=k
     # run stops within k-1 supersteps of the batch=1 run (check
     # ExperimentResult.truncated before comparing truncated runs).
-    _, finished = _user_flags(state, params, fleet, n_users)
+    # ``finished`` is carried from the last superstep's bookkeeping
+    # (ROADMAP "next constants to shrink": the loop cond no longer
+    # re-derives _user_flags -- state cannot change between the
+    # bookkeeping and this evaluation, so the carried flags are exact).
     return (~finished.all()) & (state.n_steps + state.n_spec < max_events)
 
 
 def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
                max_jobs: int | None = None,
-               params: SimParams | None = None) -> SimState:
+               params: SimParams | None = None,
+               net_cap: int = 0) -> SimState:
     """``max_jobs`` bounds concurrently RUNNING gridlets per resource
     (the J axis of the job-slot table); defaults to the safe bound N.
-    ``params`` seeds the failure stream (no failures when omitted)."""
+    ``params`` seeds the failure stream (no failures when omitted).
+    ``net_cap`` (static) sizes the fair-share transfer-slot table: T =
+    net_cap transfer slots per resource link; 0 (the default) disables
+    the network subsystem entirely -- transfers keep their analytic
+    timestamps."""
     n = gridlets.n
     j_cap = n if max_jobs is None else min(max_jobs, n)
+    t_cap = min(max(net_cap, 0), n)
     r_pad = -(-fleet.r // BLOCK_R) * BLOCK_R
     if params is None:
         key = jax.random.PRNGKey(0)
@@ -1319,6 +1684,9 @@ def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
         g=gridlets,
         slot=jnp.full((n,), -1, jnp.int32),
         row_gridlet=jnp.full((r_pad, j_cap), -1, jnp.int32),
+        xslot=jnp.full((n,), -1, jnp.int32),
+        link_gridlet=jnp.full((r_pad, t_cap), -1, jnp.int32),
+        link_rem=jnp.zeros((r_pad, t_cap), jnp.float32),
         spent=jnp.zeros((n_users,), jnp.float32),
         done_on=jnp.zeros((n_users, fleet.r), jnp.float32),
         first_dispatch=jnp.full((n_users, fleet.r), INF, jnp.float32),
@@ -1364,25 +1732,30 @@ def _finalize(state: SimState) -> SimResult:
 
 
 @functools.partial(jax.jit, static_argnames=("n_users", "max_events",
-                                             "max_jobs", "batch"))
+                                             "max_jobs", "batch",
+                                             "net_cap"))
 def _run_jit(gridlets, fleet, params, n_users, max_events, max_jobs,
-             batch):
+             batch, net_cap=0):
     state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
-                       params=params)
-    # The loop carry holds the slab (the last scan's rank table) next
-    # to the state, so completion-dominated stretches of iterations --
-    # committing AND speculative supersteps -- run without any sort.
-    state, _ = jax.lax.while_loop(
-        lambda c: _continue(c[0], fleet, params, n_users, max_events),
+                       params=params, net_cap=net_cap)
+    # The loop carry holds the slab (the last scan's rank table) and
+    # the per-user termination flags next to the state, so
+    # completion-dominated stretches of iterations -- committing AND
+    # speculative supersteps -- run without any sort, and the loop
+    # condition reads the carried flags instead of re-deriving
+    # _user_flags per evaluation.
+    _, fin0 = _user_flags(state, params, fleet, n_users)
+    state, _, _ = jax.lax.while_loop(
+        lambda c: _continue(c[0], c[2], max_events),
         lambda c: step_batched(c[0], fleet, params, n_users, batch,
                                c[1]),
-        (state, _empty_slab(state)))
+        (state, _empty_slab(state), fin0))
     return _finalize(state)
 
 
 def run(gridlets, fleet, params: SimParams, n_users: int,
         max_events: int, max_jobs: int | None = None,
-        batch: int = DEFAULT_BATCH) -> SimResult:
+        batch: int = DEFAULT_BATCH, net_cap: int = 0) -> SimResult:
     """Run a full experiment: broker-driven scheduling + execution.
 
     ``batch`` (static) is the superstep batching factor k: each
@@ -1393,14 +1766,20 @@ def run(gridlets, fleet, params: SimParams, n_users: int,
     runs that finish within ``max_events`` total supersteps (a
     truncated run stops within k-1 supersteps of the k=1 cut -- check
     ``truncated`` before comparing).
+
+    ``net_cap`` (static) enables the contention-aware network
+    subsystem: transfers with positive payloads over finite links
+    fair-share each resource's ``params.link_baud`` instead of taking
+    the analytic bytes/baud delay, with up to ``net_cap`` concurrent
+    transfers per link (0 = analytic links, the default).
     """
     return _run_jit(gridlets, fleet, params, n_users, max_events,
-                    max_jobs, batch)
+                    max_jobs, batch, net_cap)
 
 
 def run_inner(gridlets, fleet, params: SimParams, n_users: int,
               max_events: int, max_jobs: int | None = None,
-              batch: int = 1) -> SimResult:
+              batch: int = 1, net_cap: int = 0) -> SimResult:
     """Unjitted variant for use under an outer vmap/jit (sweep).
 
     ``batch`` defaults to 1 here: under vmap the speculative path's
@@ -1409,18 +1788,20 @@ def run_inner(gridlets, fleet, params: SimParams, n_users: int,
     either way).
     """
     state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
-                       params=params)
-    state, _ = jax.lax.while_loop(
-        lambda c: _continue(c[0], fleet, params, n_users, max_events),
+                       params=params, net_cap=net_cap)
+    _, fin0 = _user_flags(state, params, fleet, n_users)
+    state, _, _ = jax.lax.while_loop(
+        lambda c: _continue(c[0], c[2], max_events),
         lambda c: step_batched(c[0], fleet, params, n_users, batch,
                                c[1]),
-        (state, _empty_slab(state)))
+        (state, _empty_slab(state), fin0))
     return _finalize(state)
 
 
 def run_direct(gridlets, fleet, resource_idx, dispatch_time,
                max_events: int, reservations=None,
-               batch: int = DEFAULT_BATCH) -> SimResult:
+               batch: int = DEFAULT_BATCH, net_cap: int = 0,
+               baud_rate=None, bg_flows=None) -> SimResult:
     """Broker-less mode: Gridlets are pre-routed into the fleet and the
     brokers stay inert -- the paper's Table 1 / Figs 9 and 12 scenario
     (arrivals straight into one resource).
@@ -1435,7 +1816,9 @@ def run_direct(gridlets, fleet, resource_idx, dispatch_time,
         Destination resource per gridlet (broadcast from a scalar).
     dispatch_time : float or f32[N]
         Instant each gridlet enters the network; it arrives after the
-        input-file transfer delay at the resource's baud rate.
+        input-file transfer delay at the resource's baud rate -- or,
+        with the network subsystem on, after its fair share of the
+        contended link has moved the payload.
     max_events : int
         Total-superstep bound (committing + speculative, not raw
         events) -- batch-independent.
@@ -1446,16 +1829,37 @@ def run_direct(gridlets, fleet, resource_idx, dispatch_time,
     batch : int, static
         Superstep batching factor k (see :func:`step_batched`); results
         are bit-for-bit identical for every k, k=1 disables speculation.
+    net_cap : int, static
+        Transfer slots per resource link for the contention-aware
+        network subsystem; 0 (default) keeps the analytic links.
+    baud_rate, bg_flows : optional
+        Network-subsystem link overrides (default: ``fleet.baud_rate``
+        and zero background flows); only consulted when ``net_cap > 0``.
     """
     from .types import replace
     n = gridlets.n
     r = jnp.broadcast_to(jnp.asarray(resource_idx, jnp.int32), (n,))
     t0 = jnp.broadcast_to(jnp.asarray(dispatch_time, jnp.float32), (n,))
-    delay = network.transfer_delay(gridlets.in_bytes, fleet.baud_rate[r])
+    link_baud = fleet.baud_rate if baud_rate is None else \
+        jnp.broadcast_to(jnp.asarray(baud_rate, jnp.float32), (fleet.r,))
+    if net_cap:
+        # Contending payloads hold their network-ENTRY instant in
+        # t_event until the NETWORK source tables them at exactly t0;
+        # everything else is instantaneous/never under the analytic
+        # term at the subsystem's link rate.
+        tabled = network.link_tabled(gridlets.in_bytes, link_baud[r])
+        t_ev = jnp.where(
+            tabled, t0,
+            t0 + network.transfer_delay(gridlets.in_bytes, link_baud[r]))
+    else:
+        t_ev = t0 + network.transfer_delay(gridlets.in_bytes,
+                                           fleet.baud_rate[r])
     g = replace(gridlets,
                 status=jnp.full((n,), IN_TRANSIT, jnp.int32),
-                resource=r, assigned=r, t_event=t0 + delay)
+                resource=r, assigned=r, t_event=t_ev)
     params = default_params(jnp.asarray(-1.0), jnp.asarray(0.0),
                             jnp.asarray(0), 1, fleet.r,
-                            reservations=reservations)  # brokers inert
-    return _run_jit(g, fleet, params, 1, max_events, None, batch)
+                            reservations=reservations,  # brokers inert
+                            link_baud=link_baud, bg_flows=bg_flows)
+    return _run_jit(g, fleet, params, 1, max_events, None, batch,
+                    net_cap)

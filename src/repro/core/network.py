@@ -1,27 +1,74 @@
 """Entity communication model (paper section 3.2.2, Fig 4).
 
-GridSim gives every networked entity buffered Input and Output entities so
-transfer delay is modelled transparently.  Vectorised adaptation: transfer
-delay is the analytic term bytes / baud_rate (+ fixed latency), folded into
-the Gridlet's IN_TRANSIT / RETURNING event timestamps by the engine.  The
-"buffering" semantics (serialised in/out flows) are preserved because the
-engine timestamps each transfer independently and resources only observe
-the arrival events.
+GridSim gives every networked entity buffered Input and Output entities
+so transfer delay is modelled transparently.  The vectorised adaptation
+has two tiers:
+
+* **Analytic links** (the default): transfer delay is the closed-form
+  term bytes / baud_rate (+ fixed latency), folded into the Gridlet's
+  IN_TRANSIT / RETURNING event timestamps by the engine at dispatch /
+  completion time.  Two transfers on the same link never interfere.
+* **Fair-share links** (the contention-aware network subsystem,
+  enabled by the engine's static ``net_cap`` knob): each resource's
+  link has finite bandwidth shared *equally* among its concurrent
+  transfers (in-flight stagings and result returns), exactly mirroring
+  the time-shared CPU machinery -- a ``[L, T]`` transfer-slot table
+  with ``remaining_bytes`` per transfer, piecewise-constant rates
+  between events, and per-link completion forecasts through
+  ``kernels.ops.link_scan`` (= Fig 8 with one PE plus a
+  background-traffic offset on the divisor).  The engine's NETWORK
+  event source owns the table; see core/engine.py and
+  docs/ARCHITECTURE.md ("The network layer").
+
+Only transfers that can actually contend occupy a link slot:
+:func:`link_tabled` is the routing predicate.  Zero-byte payloads and
+infinite-baud links are *instantaneous* in both tiers (delay exactly
+0.0), which is what keeps zero-contention configurations bit-for-bit
+identical to the analytic path.
+
+The "buffering" semantics (serialised in/out flows) are preserved
+because the engine timestamps each transfer independently and resources
+only observe the arrival events.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-LATENCY = 0.0  # fixed per-message latency in time units
+LATENCY = 0.0   # fixed per-message latency in time units
+BIG = 3.0e38    # finite "never arrives" horizon (matches kernels BIG)
 
 
 def transfer_delay(nbytes, baud_rate):
-    """Delay to move ``nbytes`` over a link of ``baud_rate`` bytes/unit."""
+    """Delay to move ``nbytes`` over a link of ``baud_rate`` bytes/unit.
+
+    Total: finite, nonnegative and monotone non-decreasing in
+    ``nbytes`` for every baud value (property-asserted in tests):
+    bytes == 0 or baud == inf mean "instantaneous" (exactly 0.0 +
+    LATENCY); a zero/denormal baud rate -- or an f32 overflow of the
+    quotient -- clamps to the finite BIG horizon ("never arrives")
+    instead of wrapping to inf or, worse, back to 0.
+    """
     nbytes = jnp.asarray(nbytes, jnp.float32)
-    safe = jnp.maximum(jnp.asarray(baud_rate, jnp.float32), 1e-30)
-    d = nbytes / safe
-    # bytes == 0 or baud == inf both mean "instantaneous".
-    return jnp.where(jnp.isfinite(d), d, 0.0) + LATENCY
+    baud = jnp.asarray(baud_rate, jnp.float32)
+    safe = jnp.maximum(baud, 1e-30)
+    d = jnp.minimum(nbytes / safe, BIG)       # overflow -> BIG, not inf
+    d = jnp.where(jnp.isinf(baud) | (nbytes <= 0.0), 0.0, d)
+    return d + LATENCY
+
+
+def link_tabled(nbytes, baud_rate):
+    """True where a transfer contends for link bandwidth, i.e. belongs
+    in the fair-share transfer-slot table: a positive payload over a
+    link of positive capacity below the BIG horizon.  Everything else
+    (empty payloads, infinite or BIG-fast links, dead zero-baud links)
+    keeps the analytic delay -- instantaneous or never -- so the
+    contended and analytic paths agree exactly wherever no contention
+    is possible.  The upper threshold is ``baud < BIG``, matching the
+    link kernel's live-row mask exactly: a transfer this predicate
+    tables is guaranteed a nonzero drain rate."""
+    nbytes = jnp.asarray(nbytes, jnp.float32)
+    baud = jnp.asarray(baud_rate, jnp.float32)
+    return (nbytes > 0.0) & (baud > 0.0) & (baud < BIG)
 
 
 def submit_delay(gridlets, fleet, resource_idx):

@@ -88,6 +88,14 @@ class ReservationBook:
         """Reservation-induced load for calendar.effective_mips."""
         return self.reserved_pes(resource, t) / max(self.num_pe[resource], 1)
 
+    def book_maintenance(self, resource: int, start: float,
+                         end: float) -> Reservation:
+        """Book a maintenance window: every PE of ``resource`` held
+        over [start, end) -- planned downtime as sugar over the
+        reservation machinery (conflict detection included: grid
+        bookings overlapping the window raise)."""
+        return self.book(resource, self.num_pe[resource], start, end)
+
     def as_tables(self):
         """Export all bookings as the engine's (res, pes, start, end)
         i32/i32/f32/f32 arrays, each shape [K]."""
@@ -110,6 +118,24 @@ def as_tables(bookings):
 def empty_tables():
     """The K=0 no-reservations table (the default scenario)."""
     return as_tables([])
+
+
+def maintenance(num_pe, windows):
+    """Maintenance windows as booking tuples: each ``(resource, start,
+    end)`` window holds ALL PEs of its resource over [start, end) --
+    planned downtime as sugar over the reservation event source (the
+    deterministic cousin of the MTBF failure stream: admission stops,
+    residents are not preempted, queued work re-admits at ``end``).
+
+    ``num_pe`` is the fleet's per-resource PE count (``fleet.num_pe``
+    or a plain list).  The result plugs straight into
+    ``simulation.Scenario(reservations=...)`` or ``engine.run_direct``;
+    combine with other bookings by concatenating the lists (or use
+    :meth:`ReservationBook.book_maintenance` for conflict checking).
+    """
+    pes = [int(p) for p in num_pe]
+    return [(int(r), pes[int(r)], float(s), float(e))
+            for r, s, e in windows]
 
 
 def active_pes(resv_res, resv_pes, resv_start, resv_end, t,

@@ -34,13 +34,24 @@ class Scenario(NamedTuple):
         resource's in-flight gridlets -- zero-downtime "blips"),
     reservations: a reservation.ReservationBook, an iterable of
         (resource, pes, start, end) tuples, or the exported 4-array
-        table,
-    seed: PRNG seed for the MTBF/MTTR streams.
+        table (``reservation.maintenance`` builds full-resource
+        maintenance windows in this form),
+    seed: PRNG seed for the MTBF/MTTR streams,
+    baud_rate: per-resource link capacity override for the
+        contention-aware network subsystem (scalar or [R]; default:
+        ``fleet.baud_rate``) -- consulted when ``run_experiment`` runs
+        with ``net_cap > 0``,
+    bg_flows: per-resource phantom background flows sharing each link
+        (scalar or [R], may be fractional; default 0) -- standing
+        non-grid traffic that takes its fair share of the link without
+        ever completing; net mode only.
     """
     mtbf: Any = None
     mttr: Any = None
     reservations: Any = None
     seed: int = 0
+    baud_rate: Any = None
+    bg_flows: Any = None
 
 
 class ExperimentResult(NamedTuple):
@@ -119,31 +130,54 @@ def safe_max_jobs(gridlets_batch, params, fleet) -> int:
     return min(gridlets_batch.n, params.deadline.shape[0] * limit)
 
 
+def safe_net_cap(gridlets_batch, params, fleet, n_users: int = 1) -> int:
+    """Static bound on concurrent transfers per resource link: the
+    broker keeps at most max_gridlet_per_pe * num_pe gridlets in flight
+    per (user, resource), and every one of them holds at most one
+    transfer (staging or return) at a time -- so U * that many slots
+    per link always suffice (capped at N, the broker-less worst case of
+    everything routed onto one link)."""
+    limit = int(params.max_gridlet_per_pe) * fleet.max_pe
+    return min(gridlets_batch.n, n_users * limit)
+
+
 def _scenario_params(fleet, deadline, budget, opt, n_users,
                      scenario: Scenario | None) -> engine.SimParams:
     s = scenario or Scenario()
     return engine.default_params(
         deadline, budget, opt, n_users, fleet.r,
         mtbf=s.mtbf, mttr=s.mttr, reservations=s.reservations,
-        fail_key=jax.random.PRNGKey(s.seed))
+        fail_key=jax.random.PRNGKey(s.seed),
+        link_baud=(fleet.baud_rate if s.baud_rate is None
+                   else s.baud_rate),
+        bg_flows=s.bg_flows)
 
 
 def run_experiment(gridlets_batch, fleet, deadline, budget,
                    opt=OPT_COST, n_users: int = 1,
                    max_events: int | None = None,
                    scenario: Scenario | None = None,
-                   batch: int = engine.DEFAULT_BATCH) -> ExperimentResult:
+                   batch: int = engine.DEFAULT_BATCH,
+                   net_cap: int | None = 0) -> ExperimentResult:
     """``batch`` is the engine's k-step superstep batching factor
     (static; see engine.step_batched) -- results are bit-for-bit
-    identical for every value, ``batch=1`` disables speculation."""
+    identical for every value, ``batch=1`` disables speculation.
+
+    ``net_cap`` (static) enables the contention-aware network
+    subsystem: 0 (default) keeps the analytic links, ``None`` sizes the
+    transfer-slot table automatically (:func:`safe_net_cap`), any
+    positive int is the explicit transfer-slot count per link.  The
+    scenario's ``baud_rate``/``bg_flows`` knobs configure the links."""
     params = _scenario_params(fleet, deadline, budget, opt, n_users,
                               scenario)
+    if net_cap is None:
+        net_cap = safe_net_cap(gridlets_batch, params, fleet, n_users)
     if max_events is None:
         horizon = float(jnp.max(params.deadline)) * 2.0 + 100.0
         max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
     res = engine.run(gridlets_batch, fleet, params, n_users, max_events,
                      max_jobs=safe_max_jobs(gridlets_batch, params, fleet),
-                     batch=batch)
+                     batch=batch, net_cap=net_cap)
     return summarize(res, params, n_users, fleet.r, max_events)
 
 
@@ -161,13 +195,15 @@ def run_experiment_factors(gridlets_batch, fleet, d_factor, b_factor,
 
 def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
           n_users: int = 1, max_events: int | None = None,
-          scenario: Scenario | None = None, batch: int = 1):
+          scenario: Scenario | None = None, batch: int = 1,
+          net_cap: int | None = 0):
     """vmap over the full deadline x budget grid (paper Figs 21-24).
 
     deadlines: [D], budgets: [B] -> every field gains leading [D, B] dims.
     ``batch`` defaults to 1 (no superstep speculation): under vmap the
     speculative path lowers to selects that evaluate both branches, so
     k > 1 saves nothing for swept grids; results are identical anyway.
+    ``net_cap`` as in :func:`run_experiment` (None = auto-size).
     """
     deadlines = jnp.asarray(deadlines, jnp.float32)
     budgets = jnp.asarray(budgets, jnp.float32)
@@ -176,11 +212,14 @@ def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
         max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
     params0 = engine.default_params(1.0, 1.0, opt, n_users, fleet.r)
     max_jobs = safe_max_jobs(gridlets_batch, params0, fleet)  # static
+    if net_cap is None:
+        net_cap = safe_net_cap(gridlets_batch, params0, fleet, n_users)
 
     def one(d, b):
         params = _scenario_params(fleet, d, b, opt, n_users, scenario)
         res = engine.run_inner(gridlets_batch, fleet, params, n_users,
-                               max_events, max_jobs, batch=batch)
+                               max_events, max_jobs, batch=batch,
+                               net_cap=net_cap)
         return summarize(res, params, n_users, fleet.r, max_events)
 
     f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))

@@ -40,7 +40,8 @@ The ``tie`` input carries the engine's FIFO tie-break priority (the flat
 gridlet index): equal-remaining jobs must receive MaxShare in submission
 order for the Fig 9 / Table 1 trace to be reproduced exactly.  (Across
 event *kinds* the engine orders same-time batches COMPLETION > FAILURE >
-RECOVERY > RESERVATION > RETURN > ARRIVAL > CALENDAR_STEP > BROKER; this
+RECOVERY > RESERVATION > NETWORK > RETURN > ARRIVAL > CALENDAR_STEP >
+BROKER; this
 kernel only produces the COMPLETION forecasts.)
 
 Tiling: grid over resource blocks; each block holds [block_r, J_pad]
@@ -580,7 +581,151 @@ def event_scan_slab_xla(remaining, mips_eff, num_pe, k, tie=None,
 
 
 # ----------------------------------------------------------------------
-# Fused event frontier: the superstep engine's 8-source fan-in in ONE
+# Link scan: fair-share transfer forecast per link row, the network
+# analogue of the Fig 8 event scan.
+# ----------------------------------------------------------------------
+#
+# The network subsystem (repro.core.network / the engine's NETWORK event
+# source) keeps in-flight transfers in a resource-major ``[L, T]``
+# transfer-slot table exactly mirroring the ``[R, J]`` job-slot table:
+# ``remaining`` holds bytes instead of MI, and the per-row "policy" is
+# fixed -- every concurrent transfer on a link receives an equal
+# **fair share** of the link's baud rate.  With ``m`` active transfers
+# and ``bg`` phantom background flows riding the same link:
+#
+#   rate_i = baud / (m + bg)        for every active transfer i
+#   t_i    = remaining_i / rate_i
+#   t_min  = min_i t_i              (the link's next transfer completion)
+#
+# which is Fig 8 with P = 1 PE (min_jobs = g, everyone in the MaxShare
+# set) plus the background-traffic offset on the divisor.  Because the
+# share is uniform there is no rank to compute, so the scan is sort-free
+# by construction on every backend -- the engine's piecewise-constant
+# transfer integration needs no slab carry on the link side.
+#
+# Three-way split like event_scan: Pallas kernel (job/transfer axis
+# lane-tiled to LANE multiples), vectorised XLA fallback, numpy oracle
+# (ref.link_scan_ref); all share _link_math for bitwise-identical
+# arithmetic.
+
+def _link_math(rem, baud, bg, tie):
+    """Shared fair-share arithmetic (jnp only -- runs inside the Pallas
+    kernel body and as the XLA fallback).
+
+    rem/tie [L, T] f32 (rem <= 0 or >= BIG marks a free slot);
+    baud/bg [L, 1] f32.  A link with non-positive or non-finite baud is
+    dead: the engine's ``network.link_tabled`` predicate never routes a
+    transfer onto one, but the row is masked here too so the outputs
+    stay well-defined.  Returns (rate [L, T], t_min [L, 1], argmin_col
+    [L, 1] i32, occupancy [L, 1] i32).
+    """
+    l, t_n = rem.shape
+    live = (baud > 0.0) & (baud < BIG)
+    valid = (rem > 0.0) & (rem < BIG) & live
+    m = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
+    rate = jnp.where(valid, baud / jnp.maximum(m + bg, 1.0), 0.0)
+    t = jnp.where(valid, rem / jnp.maximum(rate, 1e-30), BIG)
+    tmin = jnp.min(t, axis=1, keepdims=True)
+    tkey = jnp.where(valid, tie, BIG)
+    at_min = (t <= tmin) & valid
+    cand = jnp.where(at_min, tkey, BIG)
+    tie_min = jnp.min(cand, axis=1, keepdims=True)
+    col = jax.lax.broadcasted_iota(jnp.int32, (l, t_n), 1)
+    amin = jnp.min(jnp.where(at_min & (cand <= tie_min), col, t_n),
+                   axis=1, keepdims=True)
+    return rate, tmin, amin, m.astype(jnp.int32)
+
+
+def _link_kernel(rem_ref, tie_ref, baud_ref, bg_ref, rate_ref,
+                 tmin_ref, amin_ref, occ_ref):
+    rate, tmin, amin, occ = _link_math(rem_ref[...], baud_ref[...],
+                                       bg_ref[...], tie_ref[...])
+    rate_ref[...] = rate
+    tmin_ref[...] = tmin
+    amin_ref[...] = amin
+    occ_ref[...] = occ
+
+
+def _link_defaults(remaining, tie, bg):
+    l, t_n = remaining.shape
+    if tie is None:
+        tie = jnp.broadcast_to(
+            jnp.arange(t_n, dtype=jnp.float32)[None, :], (l, t_n))
+    if bg is None:
+        bg = jnp.zeros((l,), jnp.float32)
+    return (remaining.astype(jnp.float32), jnp.asarray(tie, jnp.float32),
+            jnp.asarray(bg, jnp.float32).reshape(l))
+
+
+def link_scan(remaining, baud, bg=None, tie=None, *, block_l: int = 8,
+              interpret: bool = False):
+    """Fair-share link scan over the [L, T] transfer-slot table.
+
+    remaining: [L, T] bytes still to move (<= 0 or >= BIG marks a free
+    slot); baud: [L] link capacity in bytes/time-unit; bg: [L] phantom
+    background flows sharing each link (default 0; may be fractional);
+    tie: [L, T] FIFO tie-break key for the argmin (defaults to the col
+    index; the engine passes the flat gridlet index).  Returns (rate
+    [L, T], t_min [L], argmin_col [L] i32, occupancy [L] i32);
+    argmin_col is T for empty (or dead) rows.  The transfer axis is
+    lane-tiled internally (padded to LANE multiples, outputs sliced
+    back) -- no power-of-two bump: fair shares need no rank network.
+    """
+    l, t_n = remaining.shape
+    remaining, tie, bg = _link_defaults(remaining, tie, bg)
+    t_pad = max(-(-t_n // LANE) * LANE, LANE)
+    if t_pad != t_n:
+        pad = ((0, 0), (0, t_pad - t_n))
+        remaining = jnp.pad(remaining, pad)
+        tie = jnp.pad(tie, pad, constant_values=BIG)
+    block_l = min(block_l, l)
+    assert l % block_l == 0, "pad the link axis upstream"
+
+    rate, tmin, amin, occ = pl.pallas_call(
+        _link_kernel,
+        grid=(l // block_l,),
+        in_specs=[
+            pl.BlockSpec((block_l, t_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_l, t_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_l, t_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, t_pad), jnp.float32),
+            jax.ShapeDtypeStruct((l, 1), jnp.float32),
+            jax.ShapeDtypeStruct((l, 1), jnp.int32),
+            jax.ShapeDtypeStruct((l, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(remaining, tie,
+      jnp.asarray(baud, jnp.float32).reshape(l, 1),
+      bg.reshape(l, 1))
+    # un-pad: the only out-of-T value is the empty/dead-row sentinel
+    # t_pad -> remap to the caller's T.
+    return (rate[:, :t_n], tmin[:, 0], jnp.minimum(amin[:, 0], t_n),
+            occ[:, 0])
+
+
+def link_scan_xla(remaining, baud, bg=None, tie=None):
+    """Vectorised jnp fallback with identical semantics to the link
+    kernel (shared ``_link_math``) -- the CPU hot path the engine's
+    NETWORK source routes through off-TPU."""
+    l, t_n = remaining.shape
+    remaining, tie, bg = _link_defaults(remaining, tie, bg)
+    rate, tmin, amin, occ = _link_math(
+        remaining, jnp.asarray(baud, jnp.float32).reshape(l, 1),
+        bg.reshape(l, 1), tie)
+    return rate, tmin[:, 0], amin[:, 0], occ[:, 0]
+
+
+# ----------------------------------------------------------------------
+# Fused event frontier: the superstep engine's whole source fan-in in ONE
 # min/mask pass.
 # ----------------------------------------------------------------------
 #

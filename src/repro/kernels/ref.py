@@ -188,6 +188,58 @@ def event_scan_slab_ref(remaining, mips_eff, num_pe, k, tie=None,
             jnp.asarray(col_out, jnp.int32))
 
 
+def link_scan_ref(remaining, baud, bg=None, tie=None):
+    """Fair-share link scan, directly transcribed per link row.
+
+    remaining: [L, T] bytes (<= 0 / huge marks a free slot); baud: [L]
+    link capacity; bg: [L] phantom background flows (default 0); tie:
+    [L, T] FIFO tie-break key (default: col index).  Every active
+    transfer on a link receives baud / (m + bg); a link with
+    non-positive or non-finite baud is dead (all outputs masked).
+    Returns (rate [L, T], t_min [L], argmin_col [L], occupancy [L]);
+    argmin_col is T for empty (or dead) rows -- the contract of
+    kernels.event_scan.link_scan.
+    """
+    import numpy as np
+    remaining = np.asarray(remaining, np.float64)
+    baud = np.asarray(baud, np.float64)
+    l_n, t_n = remaining.shape
+    if tie is None:
+        tie = np.broadcast_to(np.arange(t_n, dtype=np.float64),
+                              (l_n, t_n))
+    else:
+        tie = np.asarray(tie, np.float64)
+    if bg is None:
+        bg = np.zeros((l_n,), np.float64)
+    else:
+        bg = np.asarray(bg, np.float64)
+    rate = np.zeros((l_n, t_n))
+    tmin = np.full((l_n,), 3.0e38)
+    amin = np.full((l_n,), t_n, np.int32)
+    occ = np.zeros((l_n,), np.int32)
+    for r in range(l_n):
+        if not (0.0 < baud[r] < 3.0e38):
+            continue                       # dead link: masked entirely
+        xfers = [j for j in range(t_n) if 0 < remaining[r, j] < 3.0e38]
+        m = len(xfers)
+        occ[r] = m
+        if m == 0:
+            continue
+        share = baud[r] / max(m + bg[r], 1.0)
+        best = None
+        for j in xfers:
+            rate[r, j] = share
+            t = remaining[r, j] / share
+            tmin[r] = min(tmin[r], t)
+            if best is None or (t, tie[r, j]) < best[:2]:
+                best = (t, tie[r, j], j)
+        amin[r] = best[2]
+    return (jnp.asarray(rate, jnp.float32),
+            jnp.asarray(tmin, jnp.float32),
+            jnp.asarray(amin, jnp.int32),
+            jnp.asarray(occ, jnp.int32))
+
+
 def event_frontier_ref(cand, sizes, cuts=None):
     """Oracle for the fused event frontier: per-source python loops.
 
