@@ -75,17 +75,57 @@ def render(report: dict, baseline: dict | None = None) -> str:
                 f"| {k[1:]} | {_fmt(v.get('pairwise_o_j2'), 1)} | "
                 f"{_fmt(v.get('bitonic_o_jlog2j'), 1)} | "
                 f"{_fmt(v.get('lexsort_o_jlogj'), 1)} |")
-    sv = report.get("_sweep_vmap")
-    if sv:
-        lines += ["", "#### sweep under vmap (2x2 grid, 20u scenario)",
-                  "", "| batch=1 wall s | batched wall s | speedup | "
-                  "identical |", "|---|---|---|---|"]
-        walls = sorted(k for k in sv if k.startswith("wall_s_batch"))
+    sb = report.get("_sweep_bench")
+    if sb:
+        lines += ["", f"#### Sweep engine ({sb.get('grid', 'grid')})",
+                  "", "| path | steady wall s | compile s | supersteps |",
+                  "|---|---|---|---|"]
         lines.append(
-            "| " + " | ".join(
-                [_fmt(sv.get(walls[0]), 2), _fmt(sv.get(walls[-1]), 2),
-                 f"{sv.get('batch_speedup', 0):.2f}x",
-                 str(sv.get("identical"))]) + " |")
+            f"| reference (batch=1, conds->selects) | "
+            f"{_fmt(sb.get('wall_s_ref'), 2)} | "
+            f"{_fmt(sb.get('compile_s_ref'), 1)} | "
+            f"{_fmt(sb.get('supersteps_ref'))} |")
+        lines.append(
+            f"| select-free sweep (batch={sb.get('batch')}) | "
+            f"{_fmt(sb.get('wall_s_sweep'), 2)} | "
+            f"{_fmt(sb.get('compile_s_sweep'), 1)} | "
+            f"{_fmt(sb.get('supersteps_sweep'))} |")
+        lines += ["",
+                  f"speedup **{sb.get('batch_speedup', 0):.2f}x** | "
+                  f"bitwise identical: "
+                  f"{'yes' if sb.get('sweep_identical') else '**NO**'} | "
+                  f"sharded identical: "
+                  f"{'yes' if sb.get('sharded_identical') else '**NO**'}"]
+        if "batch_speedup_paper_polls" in sb:
+            ident_p = sb.get("sweep_identical_paper_polls")
+            lines += ["",
+                      "paper-default poll rate (1 s re-poll floor): "
+                      f"**{sb['batch_speedup_paper_polls']:.2f}x** | "
+                      "bitwise identical: "
+                      f"{'yes' if ident_p else '**NO**'}"]
+        ds = sb.get("device_scaling") or {}
+        if "device_speedup" in ds:
+            lines += ["", "#### Device scaling (sweep_sharded, "
+                      "heterogeneous-run-length lanes)",
+                      "", "| devices | steady wall s | compile s |",
+                      "|---|---|---|"]
+            for key in ("dev1", "dev2"):
+                cell = ds.get(key, {})
+                lines.append(f"| {cell.get('devices', key[3:])} | "
+                             f"{_fmt(cell.get('wall_s'), 2)} | "
+                             f"{_fmt(cell.get('compile_s'), 1)} |")
+            lines += ["",
+                      f"2-device speedup "
+                      f"**{ds['device_speedup']:.2f}x** | identical "
+                      "across device counts: "
+                      f"{'yes' if ds.get('device_identical') else '**NO**'}"]
+        else:
+            err = next((ds[k].get("error") for k in ("dev1", "dev2")
+                        if isinstance(ds.get(k), dict)
+                        and "error" in ds[k]), None)
+            if err:
+                lines += ["", "Device-scaling rows failed to run: "
+                          f"`{err.splitlines()[-1] if err else ''}`"]
     return "\n".join(lines)
 
 

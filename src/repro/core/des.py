@@ -88,6 +88,31 @@ with
 user extensions build sources from; see docs/ARCHITECTURE.md for the
 "add a new event source" walkthrough (including the ``horizon`` hook)
 and docs/PERFORMANCE.md for the speculation-horizon safety argument.
+
+The masked-apply contract
+-------------------------
+The select-free sweep engine (engine.run_sweep / simulation.sweep)
+never branches on whether a source fired: every source body executes
+every superstep, and a source that is NOT due must behave as a
+**bitwise no-op** under a boolean gate.  ``masked_apply(state, now,
+fire)`` is that entry point.  The contract, for any source:
+
+  * ``masked_apply(state, now, True)``  == ``apply(state, now)`` bitwise;
+  * ``masked_apply(state, now, False)`` == ``state`` bitwise -- even
+    when ``now`` is garbage (a masked superstep advances nothing, so
+    the gated instant of a declined lane never leaks into state).
+
+Most of the engine's built-in applications satisfy the contract
+natively -- their writes are already ``jnp.where(due_mask, ...)``
+selects and their due masks are derived from instants that the gate
+zeroes out -- so gating the *due mask* is free.  For bodies that are
+not naturally maskable (PRNG-key consuming streams, the broker's full
+Fig 20 cycle), :func:`tree_select` provides the generic fallback: run
+the body unconditionally and select every output leaf against the
+ungated state.  That costs nothing extra under ``vmap``, where a
+``lax.cond`` lowers to the very same both-branches select -- the point
+of the contract is to make that cost explicit, shared, and absent from
+the per-lane divergence path.
 """
 from __future__ import annotations
 
@@ -138,6 +163,19 @@ def no_interference(state, t_max) -> jax.Array:
     return INF
 
 
+def tree_select(pred, on_true, on_false):
+    """``jnp.where(pred, ...)`` over every leaf of a pytree pair -- the
+    generic masked-apply fallback for source bodies that are not
+    naturally maskable (see the module docstring's masked-apply
+    contract).  ``pred`` is a scalar bool; the two trees must have
+    identical structure.  Under ``vmap`` this is exactly what a
+    ``lax.cond`` would have lowered to anyway, so using it costs
+    nothing extra on the sweep path while keeping the body's execution
+    unconditional (one execution, not both branches of a cond)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
 @dataclasses.dataclass(frozen=True)
 class FnSource:
     """An :class:`EventSource` built from closures.
@@ -171,6 +209,17 @@ class FnSource:
 
     def apply(self, state, now):
         return self.apply_fn(state, now)
+
+    def masked_apply(self, state, now, fire):
+        """Gated application for the select-free sweep engine (see the
+        module docstring's masked-apply contract): bitwise ``apply``
+        when ``fire`` is True, bitwise identity -- even under a garbage
+        ``now`` -- when False.  The default runs the body
+        unconditionally and selects every output leaf; sources whose
+        bodies are naturally maskable (every write already gated on a
+        due mask derived from ``now``) read the engine's gate from
+        their shared scratch context instead and override nothing."""
+        return tree_select(fire, self.apply_fn(state, now), state)
 
     def horizon_candidates(self, state) -> jax.Array:
         """Instants in ``(state.t, +inf]`` at which this source could

@@ -464,14 +464,17 @@ def _pending_entries(state, params, n_resources):
             network.link_tabled(_xfer_bytes(g), params.link_baud[res]))
 
 
-def _advance_transfers(state, ctx, t_next, any_event):
+def _advance_transfers(state, ctx, t_next, any_event, gate=None):
     """Advance every in-flight transfer analytically over [t, t_next)
     by the fair-share rates in ``ctx["net_scan"]`` (the link twin of
     :func:`_advance_jobs`; must run while ``state.t`` still holds the
     interval start).  Transfers forecast to drain by ``t_next`` are
     zeroed and recorded in ``ctx["xfer_done"]`` for the NETWORK apply;
     survivors are clamped to a tiny epsilon so f32 rounding can never
-    turn an occupied slot into the empty-slot sentinel."""
+    turn an occupied slot into the empty-slot sentinel.  ``gate`` (the
+    sweep engine's masked micro-supersteps) makes the advance a bitwise
+    no-op when False even for occupied slots whose remainder sits at
+    the epsilon clamp."""
     from .types import replace
     rate_lt = ctx["net_scan"][0]
     occupied = state.link_gridlet >= 0
@@ -479,9 +482,10 @@ def _advance_transfers(state, ctx, t_next, any_event):
     rel = jnp.where(occupied, rem / jnp.maximum(rate_lt, 1e-30), INF)
     dt = jnp.maximum(t_next - state.t, 0.0)
     due = occupied & any_event & (state.t + rel <= t_next)
+    adv = occupied if gate is None else occupied & gate
     new_rem = jnp.where(
         due, 0.0,
-        jnp.where(occupied, jnp.maximum(rem - rate_lt * dt, 1e-30), rem))
+        jnp.where(adv, jnp.maximum(rem - rate_lt * dt, 1e-30), rem))
     ctx["xfer_done"] = due
     return replace(state, link_rem=new_rem)
 
@@ -526,15 +530,21 @@ def _enqueue_transfers(state, mask, n_resources, r_pad):
         overflow=state.overflow + jnp.sum(mask & ~ok, dtype=jnp.int32))
 
 
-def _enqueue_new_transfers(state, params, n_resources, r_pad):
+def _enqueue_new_transfers(state, params, n_resources, r_pad,
+                           select_free=False):
     """End-of-superstep pass: transfers *created this superstep*
     (broker dispatches, completions' result returns) enter their link
     now.  Tabled creation marked them ``t_event == inf`` with no slot,
     so the condition is transient; pending entries (finite ``t_event``)
-    wait for the NETWORK source instead."""
+    wait for the NETWORK source instead.  ``select_free`` (static) runs
+    the allocation unconditionally -- it is a bitwise no-op on an empty
+    mask (the masked-apply contract), so the sweep engine skips the
+    ``cond``."""
     g = state.g
     moving = (g.status == IN_TRANSIT) | (g.status == RETURNING)
     new = moving & (state.xslot < 0) & ~jnp.isfinite(g.t_event)
+    if select_free:
+        return _enqueue_transfers(state, new, n_resources, r_pad)
     return jax.lax.cond(
         new.any(),
         lambda s: _enqueue_transfers(s, new, n_resources, r_pad),
@@ -696,14 +706,20 @@ def _admit_queued(state, fleet, free_pe, t_next, n_resources, qrank):
     return replace(state, g=g), admitq
 
 
-def _apply_returns(state, fleet, t_next, n_users, n_resources):
+def _apply_returns(state, fleet, t_next, n_users, n_resources,
+                   gate=None):
     """RETURNING & due -> DONE for the whole batch; broker measurement
     update (paper 4.2.1 step 6).  Includes zero-delay returns of jobs
-    that completed earlier in this same superstep.
+    that completed earlier in this same superstep.  ``gate`` (the sweep
+    engine's masked micro-supersteps) forces the due mask empty when
+    False, making the application a bitwise no-op regardless of
+    ``t_next``.
     """
     from .types import replace
     g = state.g
     ret_due = (g.status == RETURNING) & (g.t_event <= t_next)
+    if gate is not None:
+        ret_due &= gate
     g = replace(g,
                 status=jnp.where(ret_due, DONE, g.status),
                 returned=jnp.where(ret_due, t_next, g.returned))
@@ -740,7 +756,7 @@ def _fail_gridlets(state, victims, n_users):
 
 
 def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_users,
-                    n_resources):
+                    n_resources, select_free=False):
     """IN_TRANSIT & due -> RUNNING (time-shared / free PE) or QUEUED,
     for the whole batch; arrivals at a *down* resource fail-and-refund.
 
@@ -764,10 +780,16 @@ def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_users,
     is_ss = fleet.policy[res] == SPACE_SHARED
     arr_ss = arr_live & is_ss
     order = jnp.where(arr_pre, idx, idx + g.n)
-    rank = jax.lax.cond(
-        arr_ss.any(),
-        lambda: group_rank(res, arr_ss, order, n_resources)[0],
-        lambda: jnp.full((g.n,), jnp.int32(2 ** 30)))
+    if select_free:
+        # The rank is only consulted by arr_ss members (everyone else
+        # short-circuits on ~is_ss or ~arr_live), so running group_rank
+        # unconditionally is result-identical to the gated form.
+        rank = group_rank(res, arr_ss, order, n_resources)[0]
+    else:
+        rank = jax.lax.cond(
+            arr_ss.any(),
+            lambda: group_rank(res, arr_ss, order, n_resources)[0],
+            lambda: jnp.full((g.n,), jnp.int32(2 ** 30)))
     arr_run = arr_live & (~is_ss | (rank < free_pe[res]))
     arr_queue = arr_ss & ~arr_run
     state = _fail_gridlets(state, arr_fail, n_users)
@@ -789,13 +811,19 @@ def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_users,
 
 
 def _apply_failures(state, fleet, params, due_r, now, n_users,
-                    n_resources, r_pad):
+                    n_resources, r_pad, masked=False):
     """Down the resources in ``due_r``: RUNNING/QUEUED residents move to
     FAILED, their slots are freed and their committed cost refunded; the
-    MTTR stream schedules each resource's recovery."""
+    MTTR stream schedules each resource's recovery.  ``masked`` (static)
+    makes the body a bitwise no-op on an empty ``due_r`` -- every write
+    below is already gated on ``due_r``/``victim``; the PRNG split is
+    the one non-maskable leaf, selected back when nothing fired (the
+    masked-apply contract for the select-free sweep engine)."""
     from .types import replace
     g = state.g
     key, k1 = jax.random.split(state.rng_key)
+    if masked:
+        key = jnp.where(due_r.any(), key, state.rng_key)
     repair = jnp.where(params.mttr > 0.0,
                        rand.exponential(k1, params.mttr), 0.0)
     on_r = jnp.clip(g.resource, 0, n_resources - 1)
@@ -817,11 +845,15 @@ def _apply_failures(state, fleet, params, due_r, now, n_users,
     return _free_slots(state, victim & (state.slot >= 0), on_r, r_pad)
 
 
-def _apply_recoveries(state, params, due_r, now):
+def _apply_recoveries(state, params, due_r, now, masked=False):
     """Bring the resources in ``due_r`` back up (GIS re-registration);
-    the MTBF stream schedules each one's next failure."""
+    the MTBF stream schedules each one's next failure.  ``masked`` as
+    in :func:`_apply_failures`: bitwise no-op on an empty ``due_r``,
+    with the PRNG split selected back."""
     from .types import replace
     key, k1 = jax.random.split(state.rng_key)
+    if masked:
+        key = jnp.where(due_r.any(), key, state.rng_key)
     uptime = rand.exponential(k1, params.mtbf)     # inf where mtbf <= 0
     return replace(
         state, rng_key=key,
@@ -834,9 +866,11 @@ def _apply_recoveries(state, params, due_r, now):
 
 
 def _admit_after_reservation(state, fleet, params, now, n_resources,
-                             qrank):
+                             qrank, gate=None):
     """A reservation boundary changed the blocked-PE counts: re-admit
-    queued work onto whatever space-shared capacity is now free."""
+    queued work onto whatever space-shared capacity is now free.
+    ``gate`` (the select-free path) zeroes the free-PE budget when
+    False, making the admission a bitwise no-op."""
     g = state.g
     res = jnp.clip(g.resource, 0, n_resources - 1)
     busy = jax.ops.segment_sum(
@@ -845,6 +879,8 @@ def _admit_after_reservation(state, fleet, params, now, n_resources,
     avail = fleet.num_pe - _reserved_pes(params, now, n_resources) - busy
     free_pe = jnp.where((fleet.policy == SPACE_SHARED) & state.res_up,
                         jnp.maximum(avail, 0), 0)
+    if gate is not None:
+        free_pe = jnp.where(gate, free_pe, 0)
     return _admit_queued(state, fleet, free_pe, now, n_resources, qrank)
 
 
@@ -908,17 +944,37 @@ def _make_sources(fleet, params, n_users, ctx):
         pred = ss_freed.any() & (state.g.status == QUEUED).any()
         qr0, qok = ctx["qcarry"]
 
-        def admit(s):
-            qr = jax.lax.cond(
-                qok, lambda: qr0,
-                lambda: _queue_rank(s, fleet, n_resources))
-            s, admitq = _admit_queued(s, fleet, free_pe, now,
-                                      n_resources, qr)
-            return s, admitq, qr
+        if ctx.get("select_free"):
+            # Masked admission: a zero free-PE budget admits nothing
+            # bitwise, so no cond is needed.  The sweep micro-steps
+            # additionally run sort-free -- their fire gate guarantees
+            # the carried queue rank is valid whenever an admission
+            # could happen (see _sweep_micro), so qr0 is used as-is;
+            # the committing superstep reseeds with one unconditional
+            # lexsort selected against the carry (what the cond lowers
+            # to under vmap anyway).
+            if ctx.get("sort_free"):
+                qr_used = qr0
+            else:
+                qr_used = jnp.where(qok, qr0,
+                                    _queue_rank(state, fleet,
+                                                n_resources))
+            state, admitq = _admit_queued(
+                state, fleet, jnp.where(pred, free_pe, 0), now,
+                n_resources, qr_used)
+        else:
+            def admit(s):
+                qr = jax.lax.cond(
+                    qok, lambda: qr0,
+                    lambda: _queue_rank(s, fleet, n_resources))
+                s, admitq = _admit_queued(s, fleet, free_pe, now,
+                                          n_resources, qr)
+                return s, admitq, qr
 
-        state, admitq, qr_used = jax.lax.cond(
-            pred, admit, lambda s: (s, jnp.zeros_like(completes), qr0),
-            state)
+            state, admitq, qr_used = jax.lax.cond(
+                pred, admit,
+                lambda s: (s, jnp.zeros_like(completes), qr0),
+                state)
         n_admit_r = jax.ops.segment_sum(
             admitq.astype(jnp.int32), res, num_segments=n_resources)
         ctx["qcarry"] = (qr_used - n_admit_r[res], qok | pred)
@@ -938,6 +994,10 @@ def _make_sources(fleet, params, n_users, ctx):
         # no longer describes it.
         qr, qok = ctx["qcarry"]
         ctx["qcarry"] = (qr, qok & ~due_r.any())
+        if ctx.get("select_free"):
+            return _apply_failures(state, fleet, params, due_r, now,
+                                   n_users, n_resources, r_pad,
+                                   masked=True)
         return jax.lax.cond(
             due_r.any(),
             lambda s: _apply_failures(s, fleet, params, due_r, now,
@@ -949,6 +1009,9 @@ def _make_sources(fleet, params, n_users, ctx):
             (state.next_recover <= now)
         ctx[("count", des.K_RECOVERY)] = jnp.sum(due_r, dtype=jnp.int32)
         ctx[("who", des.K_RECOVERY)] = jnp.argmax(due_r).astype(jnp.int32)
+        if ctx.get("select_free"):
+            return _apply_recoveries(state, params, due_r, now,
+                                     masked=True)
         return jax.lax.cond(
             due_r.any(),
             lambda s: _apply_recoveries(s, params, due_r, now),
@@ -964,17 +1027,25 @@ def _make_sources(fleet, params, n_users, ctx):
         pred = fired & (state.g.status == QUEUED).any()
         qr0, qok = ctx["qcarry"]
 
-        def admit(s):
-            qr = jax.lax.cond(
-                qok, lambda: qr0,
-                lambda: _queue_rank(s, fleet, n_resources))
-            s, admitq = _admit_after_reservation(s, fleet, params, now,
-                                                 n_resources, qr)
-            return s, admitq, qr
+        if ctx.get("select_free"):
+            qr_used = jnp.where(qok, qr0,
+                                _queue_rank(state, fleet, n_resources))
+            state, admitq = _admit_after_reservation(
+                state, fleet, params, now, n_resources, qr_used,
+                gate=pred)
+        else:
+            def admit(s):
+                qr = jax.lax.cond(
+                    qok, lambda: qr0,
+                    lambda: _queue_rank(s, fleet, n_resources))
+                s, admitq = _admit_after_reservation(s, fleet, params,
+                                                     now, n_resources,
+                                                     qr)
+                return s, admitq, qr
 
-        state, admitq, qr_used = jax.lax.cond(
-            pred, admit,
-            lambda s: (s, jnp.zeros((s.g.n,), bool), qr0), state)
+            state, admitq, qr_used = jax.lax.cond(
+                pred, admit,
+                lambda s: (s, jnp.zeros((s.g.n,), bool), qr0), state)
         n_admit_r = jax.ops.segment_sum(
             admitq.astype(jnp.int32),
             jnp.clip(state.g.resource, 0, n_resources - 1),
@@ -1023,10 +1094,15 @@ def _make_sources(fleet, params, n_users, ctx):
         # their link with the full payload as remaining bytes.
         pend = _pending_entries(state, params, n_resources) & \
             (state.g.t_event <= now)
-        state = jax.lax.cond(
-            pend.any(),
-            lambda s: _enqueue_transfers(s, pend, n_resources, r_pad),
-            lambda s: s, state)
+        if ctx.get("select_free"):
+            # _enqueue_transfers is a bitwise no-op on an empty mask.
+            state = _enqueue_transfers(state, pend, n_resources, r_pad)
+        else:
+            state = jax.lax.cond(
+                pend.any(),
+                lambda s: _enqueue_transfers(s, pend, n_resources,
+                                             r_pad),
+                lambda s: s, state)
         ctx[("count", des.K_NETWORK)] = (
             jnp.sum(done_n, dtype=jnp.int32) +
             jnp.sum(pend, dtype=jnp.int32))
@@ -1051,7 +1127,8 @@ def _make_sources(fleet, params, n_users, ctx):
 
     def return_apply(state, now):
         state, ret_due = _apply_returns(state, fleet, now, n_users,
-                                        n_resources)
+                                        n_resources,
+                                        gate=ctx.get("gate"))
         ctx[("count", des.K_RETURN)] = jnp.sum(ret_due, dtype=jnp.int32)
         ctx[("who", des.K_RETURN)] = jnp.argmax(ret_due).astype(jnp.int32)
         return state
@@ -1069,7 +1146,7 @@ def _make_sources(fleet, params, n_users, ctx):
     def arrival_apply(state, now):
         state, arr_due, arr_run, arr_queue = _apply_arrivals(
             state, fleet, ctx["free_pe"], ctx["arr_pre"], now, n_users,
-            n_resources)
+            n_resources, select_free=bool(ctx.get("select_free")))
         ctx[("count", des.K_ARRIVAL)] = jnp.sum(arr_due, dtype=jnp.int32)
         ctx[("who", des.K_ARRIVAL)] = jnp.argmax(arr_due).astype(jnp.int32)
         ctx["newly"] = ctx["newly"] | arr_run
@@ -1102,10 +1179,21 @@ def _make_sources(fleet, params, n_users, ctx):
         g = state.g
         ctx["arr_pre"] = (g.status == IN_TRANSIT) & (g.t_event <= now)
         pre_transit = g.status == IN_TRANSIT
-        state = jax.lax.cond(
-            ctx["fired_b"],
-            lambda s: broker_mod.broker_event(s, fleet, params, n_users),
-            lambda s: s, state)
+        if ctx.get("select_free"):
+            # The broker's full Fig 20 cycle is not naturally maskable
+            # (measurement smoothing, next_sched bumps): the generic
+            # masked-apply fallback runs it once and selects every
+            # leaf -- exactly what the cond lowers to under vmap.
+            state = des.tree_select(
+                ctx["fired_b"],
+                broker_mod.broker_event(state, fleet, params, n_users),
+                state)
+        else:
+            state = jax.lax.cond(
+                ctx["fired_b"],
+                lambda s: broker_mod.broker_event(s, fleet, params,
+                                                  n_users),
+                lambda s: s, state)
         if _net_on(state):
             # Re-time the broker's fresh dispatches under the network
             # subsystem: contending payloads become load-dependent
@@ -1261,6 +1349,9 @@ def _alloc_newly(state, ctx, n_resources, r_pad):
     freed nothing) -- allocating for it would leak a ghost slot."""
     newly = ctx["newly"] & (state.g.status == RUNNING)
     res_now = jnp.clip(state.g.resource, 0, n_resources - 1)
+    if ctx.get("select_free"):
+        # _alloc_slots is a bitwise no-op on an empty mask.
+        return _alloc_slots(state, newly, res_now, n_resources, r_pad)
     return jax.lax.cond(
         newly.any(),
         lambda s: _alloc_slots(s, newly, res_now, n_resources, r_pad),
@@ -1308,7 +1399,7 @@ def step(state: SimState, fleet, params: SimParams, n_users: int):
 
 
 def _step_commit(state: SimState, fleet, params: SimParams,
-                 n_users: int, slab):
+                 n_users: int, slab, select_free=False):
     """The committing superstep.  Takes and returns the slab carry
     ``(rank f32[R_pad, J], ok bool[])`` -- the last scan's (remaining,
     tie) rank table shifted by every completion since, and whether it
@@ -1318,7 +1409,14 @@ def _step_commit(state: SimState, fleet, params: SimParams,
     completion-dominated stretch of supersteps runs without any sort
     at all.  Returns ``(state, slab, finished)`` -- the per-user
     termination flags ride in the while-loop carry so the loop
-    condition never recomputes them."""
+    condition never recomputes them.
+
+    ``select_free`` (static) is the sweep-engine variant: every
+    ``lax.cond`` in the superstep body is replaced by a masked
+    unconditional application (bitwise no-op when not due -- the
+    des.py masked-apply contract), so nothing lowers to a
+    both-branches select under an outer vmap.  Results are bit-for-bit
+    identical."""
     from .types import replace
     n_resources = fleet.r
     r_pad = state.row_gridlet.shape[0]
@@ -1328,9 +1426,10 @@ def _step_commit(state: SimState, fleet, params: SimParams,
     # reductions; the completion source's candidates come from the
     # slab-fed kernel scan, the network source's from the link scan,
     # both preset here)
-    ctx = {}
+    ctx = {"select_free": select_free}
     ctx["scan"], reseeded = _checked_scan(state, fleet, params,
-                                          n_resources, r_pad, slab)
+                                          n_resources, r_pad, slab,
+                                          select_free=select_free)
     ctx["qcarry"] = (slab[2], slab[3])
     state = replace(state, n_scans=state.n_scans + 1,
                     n_reseeds=state.n_reseeds +
@@ -1368,7 +1467,8 @@ def _step_commit(state: SimState, fleet, params: SimParams,
     state = _alloc_newly(state, ctx, n_resources, r_pad)
     # ---- transfers created this superstep enter their links ----------
     if _net_on(state):
-        state = _enqueue_new_transfers(state, params, n_resources, r_pad)
+        state = _enqueue_new_transfers(state, params, n_resources, r_pad,
+                                       select_free=select_free)
 
     # ---- bookkeeping: termination instants, trace, counters ----------
     # Per-source event counts: a batching source reported its own count
@@ -1438,12 +1538,22 @@ def _partition_ok(rem, tie, valid, rank, npe_e, g, pol):
     return jnp.all(rank_free | row_ok)
 
 
-def _checked_scan(state, fleet, params, n_resources, r_pad, slab):
+def _checked_scan(state, fleet, params, n_resources, r_pad, slab,
+                  select_free=False):
     """The Fig 8 scan, slab-fed when possible: inject the carried rank
     (sort-free, purely elementwise) when it still describes the table,
     else reseed with one exact lexsort scan.  Both branches run the
     identical downstream arithmetic, so the choice never changes a
-    result -- only whether a sort happens."""
+    result -- only whether a sort happens.
+
+    ``select_free`` (static) replaces the two-branch cond with ONE
+    injected scan whose rank is ``where(use, carry, fresh lexsort)``.
+    Under vmap the cond lowers to a select executing BOTH full scans
+    per lane; the select-free form pays one lexsort plus one
+    elementwise scan -- the dominant term in the sweep engine's
+    batched-throughput win.  Bit-identical: the fresh branch of
+    ``event_scan_xla`` computes its rank through the very same
+    ``_lexsort_rank`` before running the identical arithmetic."""
     rank_carry, slab_ok = slab[0], slab[1]
     rem, tie, eff, npe, pol, blk, row_ok = _table_inputs(
         state, fleet, params, n_resources, r_pad)
@@ -1453,6 +1563,14 @@ def _checked_scan(state, fleet, params, n_resources, r_pad, slab):
         row_ok[:, None])
     use = slab_ok & _partition_ok(rem, tie, valid, rank_carry, npe_e, g,
                                   pol_f)
+
+    if select_free:
+        rank_fresh = _event_kernels._lexsort_rank(rem, tie, valid)[0]
+        rank_in = jnp.where(use, rank_carry, rank_fresh)
+        return kernel_ops.event_scan(rem, eff, npe, tie=tie, policy=pol,
+                                     pe_blocked=blk, row_ok=row_ok,
+                                     rank=rank_in,
+                                     with_rank=True), ~use
 
     def inject(_):
         return kernel_ops.event_scan(rem, eff, npe, tie=tie, policy=pol,
@@ -1574,6 +1692,121 @@ def _speculative_step(state, fleet, params, n_users, t_safe, slab,
     return state, fire, slab_next, finished
 
 
+def _sweep_micro(state, fleet, params, n_users, t_safe, slab, finished,
+                 alive):
+    """One **masked** speculative micro-superstep of the select-free
+    sweep engine -- :func:`_speculative_step` with every branch point
+    replaced by masked arithmetic, built for lanes of an outer vmap.
+
+    The fire decision becomes a pure mask: the batch applies iff its
+    instant lies strictly inside the horizon AND the slab carry is
+    valid AND any space-shared queue admission it needs can ride the
+    carried queue rank.  When any leg fails, every due mask below is
+    forced empty (``t_eff`` collapses to ``state.t`` and the gate
+    threads through the masked-apply contract), so the whole body is a
+    bitwise no-op -- a *masked no-op superstep* -- and per-lane
+    divergence costs zero extra work under vmap.
+
+    Three deliberate deviations from :func:`_speculative_step`, none
+    observable in results:
+
+    * the scan always injects the carried rank (never a lexsort): a
+      micro-step with an invalid carry *declines* instead of
+      reseeding, and the next committing superstep -- whose select-free
+      scan folds the reseed into its single injected scan -- handles
+      the batch with full generality;
+    * a batch needing a queue admission while the queue-rank carry is
+      stale likewise declines (``slab[3] | ~pred_admit`` in the gate),
+      so micro-steps never sort;
+    * consequently the "how" counters (``n_steps``/``n_spec``/
+      ``n_scans``/``n_reseeds``) count a different superstep packing
+      than the reference whenever a carry invalidates mid-slab --
+      results, traces and ``n_events`` stay bit-for-bit identical.
+
+    Returns ``(state, fire, slab', finished')``; ``fire`` doubles as
+    the next micro-step's ``alive`` (once a micro-step declines, the
+    state -- hence every pending instant -- is unchanged, so every
+    later one declines too).
+    """
+    from .types import replace as _replace
+    n_resources = fleet.r
+    r_pad = state.row_gridlet.shape[0]
+    ctx = {"select_free": True, "sort_free": True}
+    sources = _make_sources(fleet, params, n_users, ctx)
+    by_kind = {s.kind: s for s in sources}
+    comp, ret = by_kind[des.K_COMPLETION], by_kind[des.K_RETURN]
+
+    # ---- one unconditionally-injected, sort-free scan ----------------
+    rem, tie, eff, npe, pol, blk, row_ok = _table_inputs(
+        state, fleet, params, n_resources, r_pad)
+    pol_f = pol.astype(jnp.float32)[:, None]
+    npe_e, valid, g_row = _event_kernels._row_masks(
+        rem, npe.astype(jnp.float32)[:, None], pol_f, blk[:, None],
+        row_ok[:, None])
+    use = slab[1] & _partition_ok(rem, tie, valid, slab[0], npe_e,
+                                  g_row, pol_f)
+    scan = kernel_ops.event_scan(rem, eff, npe, tie=tie, policy=pol,
+                                 pe_blocked=blk, row_ok=row_ok,
+                                 rank=slab[0], with_rank=True)
+    ctx["scan"] = scan
+    ctx["qcarry"] = (slab[2], slab[3])
+    if _net_on(state):
+        ctx["net_scan"] = _link_scan(state, params, n_resources, r_pad)
+
+    tmin = scan[1].min()
+    t_comp = jnp.where(tmin < _BIG, state.t + tmin, INF)
+    t_next = jnp.minimum(t_comp, ret.next_time(state))
+    # Preview (without applying) whether this batch would need a
+    # space-shared queue admission; scan outputs are garbage when the
+    # carry is invalid, but then ``use`` already kills the gate.
+    g = state.g
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    j_cap = state.row_gridlet.shape[1]
+    has_slot = (g.status == RUNNING) & (state.slot >= 0)
+    rate = jnp.where(has_slot,
+                     scan[0][res, jnp.clip(state.slot, 0, j_cap - 1)],
+                     0.0)
+    rel = jnp.where(has_slot, g.remaining / jnp.maximum(rate, 1e-30),
+                    INF)
+    would_c = has_slot & (state.t + rel <= t_next)
+    pred_admit = ((would_c & (fleet.policy[res] == SPACE_SHARED)).any()
+                  & (g.status == QUEUED).any())
+    fire = (jnp.isfinite(t_next) & (t_next < t_safe) & use & alive &
+            (slab[3] | ~pred_admit))
+    t_eff = jnp.where(fire, t_next, state.t)
+    ctx["gate"] = fire
+
+    # ---- the masked COMPLETION/RETURN slice --------------------------
+    if _net_on(state):
+        state = _advance_transfers(state, ctx, t_eff, fire, gate=fire)
+    state = _advance_jobs(state, ctx, t_eff, fire, n_resources)
+    state = comp.apply(state, t_eff)
+    state = ret.apply(state, t_eff)
+    state = _alloc_newly(state, ctx, n_resources, r_pad)
+    if _net_on(state):
+        state = _enqueue_new_transfers(state, params, n_resources,
+                                       r_pad, select_free=True)
+    kinds = jnp.asarray([des.K_COMPLETION, des.K_RETURN], jnp.int32)
+    counts = jnp.stack([ctx[("count", des.K_COMPLETION)],
+                        ctx[("count", des.K_RETURN)]])
+    whos = jnp.stack([ctx[("who", des.K_COMPLETION)],
+                      ctx[("who", des.K_RETURN)]])
+    state, finished = _bookkeep(state, fleet, params, n_users, kinds,
+                                counts, whos, t_eff)
+    state = _replace(
+        state,
+        n_spec=state.n_spec + fire.astype(jnp.int32),
+        n_scans=state.n_scans + alive.astype(jnp.int32))
+
+    # Slab: micro admissions are space-shared only (ts_newly is always
+    # empty here), so validity persists from the input; the rank shifts
+    # by the departed per-row completion counts (zero when declined).
+    n_comp_r = jnp.pad(ctx["n_comp_r"], (0, r_pad - n_resources))
+    slab2 = (scan[4] - n_comp_r[:, None].astype(jnp.float32),
+             slab[1]) + ctx["qcarry"]
+    return state, fire, slab2, finished
+
+
 def _speculation_horizon(state, fleet, params, n_users):
     """Earliest instant at which any source could interfere with
     speculative COMPLETION/RETURN batching, derived from the registered
@@ -1640,6 +1873,41 @@ def step_batched(state: SimState, fleet, params: SimParams, n_users: int,
         # state, hence every pending time, is unchanged): short-circuit.
         return jax.lax.cond(
             alive, go, lambda s: (s, jnp.asarray(False), slab, fin), s)
+
+    state, _, slab, finished = jax.lax.fori_loop(
+        0, batch - 1, micro, (state, jnp.asarray(True), slab, finished))
+    return state, slab, finished
+
+
+def step_sweep(state: SimState, fleet, params: SimParams, n_users: int,
+               batch: int, slab=None):
+    """One select-free batched iteration -- :func:`step_batched` with
+    every ``lax.cond`` replaced by masked arithmetic, built to live
+    under an outer ``vmap`` over scenarios (the sweep engine).
+
+    A select-free committing superstep handles whatever is due next at
+    full generality, then a fixed ``batch - 1`` masked micro-supersteps
+    (:func:`_sweep_micro`) are committed *unconditionally* -- a
+    micro-step that must not fire executes as a bitwise no-op instead
+    of branching, so under vmap no lane ever pays for another lane's
+    divergence (a ``lax.cond`` would lower to a select running both
+    branches for every lane).  Results are bit-for-bit identical to
+    :func:`step_batched` for every batch value; only the "how"
+    counters may pack supersteps differently (see
+    :func:`_sweep_micro`).
+    """
+    if slab is None:
+        slab = _empty_slab(state)
+    state, slab, finished = _step_commit(state, fleet, params, n_users,
+                                         slab, select_free=True)
+    if batch <= 1:
+        return state, slab, finished
+    t_safe = _speculation_horizon(state, fleet, params, n_users)
+
+    def micro(_, carry):
+        s, alive, slab, fin = carry
+        return _sweep_micro(s, fleet, params, n_users, t_safe, slab,
+                            fin, alive)
 
     state, _, slab, finished = jax.lax.fori_loop(
         0, batch - 1, micro, (state, jnp.asarray(True), slab, finished))
@@ -1796,6 +2064,407 @@ def run_inner(gridlets, fleet, params: SimParams, n_users: int,
                                c[1]),
         (state, _empty_slab(state), fin0))
     return _finalize(state)
+
+
+def run_sweep(gridlets, fleet, params: SimParams, n_users: int,
+              max_events: int, max_jobs: int | None = None,
+              batch: int = DEFAULT_BATCH, net_cap: int = 0) -> SimResult:
+    """Unjitted select-free variant for use under an outer vmap/jit --
+    the sweep engine (see :func:`step_sweep`).
+
+    Where :func:`run_inner` pins ``batch=1`` because the speculative
+    path's conds lower to both-branch selects under vmap, this loop is
+    select-free by construction: ``batch`` defaults to the full
+    ``DEFAULT_BATCH`` and each lane of an outer vmap pays only for the
+    work it actually commits.  Results are bit-for-bit identical to
+    :func:`run_inner` / :func:`run` (asserted by
+    tests/test_sweep_engine.py); the "how" counters (``n_steps``/
+    ``n_spec``/``n_scans``/``n_reseeds``) may pack the same events into
+    supersteps differently.
+    """
+    state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
+                       params=params, net_cap=net_cap)
+    _, fin0 = _user_flags(state, params, fleet, n_users)
+    state, _, _ = jax.lax.while_loop(
+        lambda c: _continue(c[0], c[2], max_events),
+        lambda c: step_sweep(c[0], fleet, params, n_users, batch, c[1]),
+        (state, _empty_slab(state), fin0))
+    return _finalize(state)
+
+
+# ----------------------------------------------------------------------
+# Lane-batched sweep loop: the scenario axis INSIDE the while loop
+# ----------------------------------------------------------------------
+
+def _tree_where(pred, new, old):
+    """Per-lane select over whole pytrees: ``pred`` is bool[L], every
+    leaf carries a leading lane axis.  The freeze step of the
+    lane-batched loop -- exactly the select ``vmap`` inserts around a
+    lifted ``while_loop`` body, written out by hand."""
+    def sel(a, b):
+        return jnp.where(pred.reshape(pred.shape + (1,) * (a.ndim - 1)),
+                         a, b)
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def _commit_lanes(state, fleet, params, n_users, slab):
+    """The select-free committing superstep over a whole lane batch --
+    :func:`_step_commit` with the scenario axis *inside* the step, so
+    expensive bodies that most supersteps do not need run under a real
+    scalar ``lax.cond`` on an any-lane predicate instead of
+    unconditionally per lane:
+
+    * the rank reseed lexsort (the single most expensive commit term)
+      runs only when some lane's slab carry actually went stale;
+    * FAILURE/RECOVERY run only when some lane has a stream due;
+    * RESERVATION only when some lane crossed a window boundary;
+    * BROKER (the full Fig 20 cycle, which ``des.tree_select`` would
+      otherwise evaluate every superstep for every lane) only when some
+      lane's poll fired;
+    * ARRIVAL only when some lane has an in-transit gridlet due
+      (checked *post*-broker: zero-byte dispatches arrive in their
+      creation superstep).
+
+    Each skipped body is exact, not approximate: by the masked-apply
+    contract (tests/test_sweep_engine.py::test_masked_apply_contract) a
+    masked application with nothing due is a bitwise no-op, so skipping
+    it when NO lane has anything due is the identity.  The always-hot
+    pieces (the injected sort-free scan, the fused frontier, the
+    analytic advances, COMPLETION and RETURN) stay vmapped over lanes.
+    Under ``shard_map`` each device evaluates the predicates over *its*
+    lanes only, so a shard whose lanes never poll skips polls other
+    shards are paying for.  Results are bit-for-bit identical to
+    :func:`_step_commit` per lane; only the "how" counters can differ.
+    """
+    from .types import replace
+    n_resources = fleet.r
+    r_pad = state.row_gridlet.shape[1]          # leaves are [L, ...]
+    net = state.link_rem.shape[-1] > 0          # _net_on, lane-batched
+    pos = {k: i for i, k in enumerate(des.PRIORITY_ORDER)}
+
+    # ---- prologue (vmapped): is each lane's rank carry still valid? --
+    def prologue(state, params, slab):
+        rem, tie, eff, npe, pol, blk, row_ok = _table_inputs(
+            state, fleet, params, n_resources, r_pad)
+        pol_f = pol.astype(jnp.float32)[:, None]
+        npe_e, valid, g_row = _event_kernels._row_masks(
+            rem, npe.astype(jnp.float32)[:, None], pol_f, blk[:, None],
+            row_ok[:, None])
+        use = slab[1] & _partition_ok(rem, tie, valid, slab[0], npe_e,
+                                      g_row, pol_f)
+        return use, rem, tie, valid
+
+    use, rem, tie, valid = jax.vmap(prologue)(state, params, slab)
+
+    rank_fresh = jax.lax.cond(
+        jnp.any(~use),
+        lambda: jax.vmap(lambda r, t, v: _event_kernels._lexsort_rank(
+            r, t, v)[0])(rem, tie, valid),
+        lambda: slab[0])
+    rank_in = jnp.where(use[:, None, None], slab[0], rank_fresh)
+
+    # ---- head (vmapped): injected scan, frontier, advances,
+    # COMPLETION -- every superstep needs these ------------------------
+    def head(state, params, slab, rank_in, use):
+        ctx = {"select_free": True}
+        rem, tie, eff, npe, pol, blk, row_ok = _table_inputs(
+            state, fleet, params, n_resources, r_pad)
+        ctx["scan"] = kernel_ops.event_scan(
+            rem, eff, npe, tie=tie, policy=pol, pe_blocked=blk,
+            row_ok=row_ok, rank=rank_in, with_rank=True)
+        ctx["qcarry"] = (slab[2], slab[3])
+        state = replace(state, n_scans=state.n_scans + 1,
+                        n_reseeds=state.n_reseeds +
+                        (~use).astype(jnp.int32))
+        sources = _make_sources(fleet, params, n_users, ctx)
+        cands = [s.candidates(state) for s in sources]
+        sizes = tuple(c.shape[0] for c in cands)
+        t_star, fired, _, _, _ = kernel_ops.event_frontier(
+            jnp.concatenate(cands), sizes)
+        any_event = jnp.isfinite(t_star)
+        t_next = jnp.where(any_event, t_star, state.t)
+        if _net_on(state):
+            state = _advance_transfers(state, ctx, t_next, any_event)
+        state = _advance_jobs(state, ctx, t_next, any_event, n_resources)
+        ctx["fired_resv"] = fired[pos[des.K_RESERVATION]]
+        ctx["fired_b"] = fired[pos[des.K_BROKER]]
+        state = sources[pos[des.K_COMPLETION]].apply(state, t_next)
+        # The ctx keys later pieces consume, snapshotted as a pytree the
+        # conds can thread (sources communicate through ctx only inside
+        # one trace; across cond boundaries the pack IS the ctx).
+        pack = {"scan": ctx["scan"], "qcarry": ctx["qcarry"],
+                "free_pe": ctx["free_pe"], "newly": ctx["newly"],
+                "n_comp_r": ctx["n_comp_r"],
+                "count_comp": ctx[("count", des.K_COMPLETION)],
+                "who_comp": ctx[("who", des.K_COMPLETION)]}
+        if _net_on(state):
+            pack["xfer_done"] = ctx["xfer_done"]
+        fr_due = ((jnp.isfinite(state.next_fail) &
+                   (state.next_fail <= t_next)).any() |
+                  (jnp.isfinite(state.next_recover) &
+                   (state.next_recover <= t_next)).any())
+        return state, t_next, fired, pack, fr_due
+
+    state, t_next, fired, pack, fr_due = jax.vmap(head)(
+        state, params, slab, rank_in, use)
+
+    def _ctx(pack, **extra):
+        ctx = {"select_free": True, "scan": pack["scan"],
+               "qcarry": pack["qcarry"], "free_pe": pack["free_pe"],
+               "newly": pack["newly"], "n_comp_r": pack["n_comp_r"]}
+        if "xfer_done" in pack:
+            ctx["xfer_done"] = pack["xfer_done"]
+        ctx.update(extra)
+        return ctx
+
+    zero_i = jnp.zeros(t_next.shape, jnp.int32)
+
+    # ---- FAILURE + RECOVERY: cond on any lane having a stream due ----
+    # (the due predicates are recomputed vs t_next exactly as
+    # failure_apply/recovery_apply would -- COMPLETION touches neither
+    # next_fail nor next_recover, so the head's snapshot is exact)
+    def fr_taken(ops):
+        state, params, t_next, pack = ops
+
+        def one(state, params, t_next, pack):
+            ctx = _ctx(pack)
+            src = _make_sources(fleet, params, n_users, ctx)
+            state = src[pos[des.K_FAILURE]].apply(state, t_next)
+            state = src[pos[des.K_RECOVERY]].apply(state, t_next)
+            return (state, dict(pack, qcarry=ctx["qcarry"]),
+                    ctx[("count", des.K_FAILURE)],
+                    ctx[("who", des.K_FAILURE)],
+                    ctx[("count", des.K_RECOVERY)],
+                    ctx[("who", des.K_RECOVERY)])
+
+        return jax.vmap(one)(state, params, t_next, pack)
+
+    def fr_skip(ops):
+        state, params, t_next, pack = ops
+        return state, pack, zero_i, zero_i, zero_i, zero_i
+
+    state, pack, c_fail, w_fail, c_rec, w_rec = jax.lax.cond(
+        jnp.any(fr_due), fr_taken, fr_skip,
+        (state, params, t_next, pack))
+
+    # ---- RESERVATION: cond on any lane crossing a boundary -----------
+    fired_resv = fired[:, pos[des.K_RESERVATION]]
+
+    def resv_taken(ops):
+        state, params, t_next, pack = ops
+
+        def one(state, params, t_next, pack, f):
+            ctx = _ctx(pack, fired_resv=f)
+            src = _make_sources(fleet, params, n_users, ctx)
+            state = src[pos[des.K_RESERVATION]].apply(state, t_next)
+            return state, dict(pack, qcarry=ctx["qcarry"],
+                               free_pe=ctx["free_pe"],
+                               newly=ctx["newly"])
+
+        return jax.vmap(one)(state, params, t_next, pack, fired_resv)
+
+    state, pack = jax.lax.cond(
+        jnp.any(fired_resv), resv_taken, lambda ops: (ops[0], ops[3]),
+        (state, params, t_next, pack))
+
+    # ---- NETWORK: static python gate (off = the source is inert) -----
+    if net:
+        def net_one(state, params, t_next, pack):
+            ctx = _ctx(pack)
+            src = _make_sources(fleet, params, n_users, ctx)
+            state = src[pos[des.K_NETWORK]].apply(state, t_next)
+            return (state, ctx[("count", des.K_NETWORK)],
+                    ctx[("who", des.K_NETWORK)])
+
+        state, c_net, w_net = jax.vmap(net_one)(state, params, t_next,
+                                                pack)
+
+    # ---- RETURN: always hot (it is what speculation feeds on) --------
+    def ret_one(state, params, t_next, pack):
+        ctx = _ctx(pack)
+        src = _make_sources(fleet, params, n_users, ctx)
+        state = src[pos[des.K_RETURN]].apply(state, t_next)
+        return (state, ctx[("count", des.K_RETURN)],
+                ctx[("who", des.K_RETURN)])
+
+    state, c_ret, w_ret = jax.vmap(ret_one)(state, params, t_next, pack)
+
+    # ---- BROKER: cond on any lane's poll firing ----------------------
+    # (arr_pre -- the ARRIVAL > BROKER admission tie-break -- is
+    # recorded lane-batched before the cond, exactly what broker_apply
+    # snapshots first)
+    arr_pre = ((state.g.status == IN_TRANSIT) &
+               (state.g.t_event <= t_next[:, None]))
+    fired_b = fired[:, pos[des.K_BROKER]]
+
+    def broker_taken(ops):
+        state, params, t_next, pack = ops
+
+        def one(state, params, t_next, pack, f):
+            ctx = _ctx(pack, fired_b=f)
+            src = _make_sources(fleet, params, n_users, ctx)
+            return src[pos[des.K_BROKER]].apply(state, t_next)
+
+        return jax.vmap(one)(state, params, t_next, pack, fired_b)
+
+    state = jax.lax.cond(
+        jnp.any(fired_b), broker_taken, lambda ops: ops[0],
+        (state, params, t_next, pack))
+
+    # ---- ARRIVAL: cond on any in-transit gridlet due post-broker -----
+    arr_due_any = jnp.any((state.g.status == IN_TRANSIT) &
+                          (state.g.t_event <= t_next[:, None]))
+
+    def arr_taken(ops):
+        state, params, t_next, pack, pre = ops
+
+        def one(state, params, t_next, pack, pre):
+            ctx = _ctx(pack, arr_pre=pre)
+            src = _make_sources(fleet, params, n_users, ctx)
+            state = src[pos[des.K_ARRIVAL]].apply(state, t_next)
+            return (state, dict(pack, qcarry=ctx["qcarry"],
+                                newly=ctx["newly"]),
+                    ctx[("count", des.K_ARRIVAL)],
+                    ctx[("who", des.K_ARRIVAL)])
+
+        return jax.vmap(one)(state, params, t_next, pack, pre)
+
+    def arr_skip(ops):
+        state, params, t_next, pack, pre = ops
+        return state, pack, zero_i, zero_i
+
+    state, pack, c_arr, w_arr = jax.lax.cond(
+        arr_due_any, arr_taken, arr_skip,
+        (state, params, t_next, pack, arr_pre))
+
+    # CALENDAR applies as the identity: nothing to run.
+
+    # ---- tail (vmapped): allocation, bookkeeping, the next slab ------
+    c_by = {des.K_COMPLETION: pack["count_comp"],
+            des.K_FAILURE: c_fail, des.K_RECOVERY: c_rec,
+            des.K_RETURN: c_ret, des.K_ARRIVAL: c_arr}
+    w_by = {des.K_COMPLETION: pack["who_comp"],
+            des.K_FAILURE: w_fail, des.K_RECOVERY: w_rec,
+            des.K_RETURN: w_ret, des.K_ARRIVAL: w_arr}
+    if net:
+        c_by[des.K_NETWORK] = c_net
+        w_by[des.K_NETWORK] = w_net
+    no_who = jnp.full(t_next.shape, -1, jnp.int32)
+    counts = jnp.stack(
+        [c_by.get(k, fired[:, i].astype(jnp.int32))
+         for i, k in enumerate(des.PRIORITY_ORDER)], axis=1)
+    whos = jnp.stack([w_by.get(k, no_who)
+                      for k in des.PRIORITY_ORDER], axis=1)
+    fired_int = (fired[:, pos[des.K_FAILURE]]
+                 | fired[:, pos[des.K_RECOVERY]]
+                 | fired[:, pos[des.K_RESERVATION]])
+
+    def tail(state, params, t_next, fired_int, pack, counts, whos):
+        ctx = _ctx(pack)
+        state = _alloc_newly(state, ctx, n_resources, r_pad)
+        if _net_on(state):
+            state = _enqueue_new_transfers(state, params, n_resources,
+                                           r_pad, select_free=True)
+        kinds = jnp.asarray(des.PRIORITY_ORDER, jnp.int32)
+        state, finished = _bookkeep(state, fleet, params, n_users,
+                                    kinds, counts, whos, t_next)
+        state = replace(state, n_steps=state.n_steps + 1)
+        slab = _slab_after(state, ctx, ctx["scan"], fired_int, fleet,
+                           n_resources, r_pad)
+        return state, slab, finished
+
+    return jax.vmap(tail)(state, params, t_next, fired_int, pack,
+                          counts, whos)
+
+
+def _step_sweep_lanes(state, fleet, params, n_users, batch, slab,
+                      alive):
+    """One lane-batched while-loop iteration: a piece-wise committing
+    superstep (:func:`_commit_lanes`) plus up to ``batch - 1``
+    speculative micro-supersteps -- run in a ``while_loop`` that exits
+    as soon as EVERY lane's micro declined (a declined
+    :func:`_sweep_micro` is a bitwise no-op including its counters, so
+    skipping the remaining iterations is exact).  ``alive`` seeds the
+    per-lane micro gates so frozen (finished) lanes never count toward
+    the any-lane exit test."""
+    state, slab, finished = _commit_lanes(state, fleet, params, n_users,
+                                          slab)
+    if batch <= 1:
+        return state, slab, finished
+    t_safe = jax.vmap(
+        lambda s, p: _speculation_horizon(s, fleet, p, n_users))(
+            state, params)
+
+    def cond(c):
+        i, _, fire, _, _ = c
+        return (i < batch - 1) & jnp.any(fire)
+
+    def body(c):
+        i, s, fire, slab, fin = c
+        s, fire, slab, fin = jax.vmap(
+            lambda s, p, t, sl, f, a: _sweep_micro(
+                s, fleet, p, n_users, t, sl, f, a))(
+                    s, params, t_safe, slab, fin, fire)
+        return i + 1, s, fire, slab, fin
+
+    _, state, _, slab, finished = jax.lax.while_loop(
+        cond, body,
+        (jnp.asarray(0, jnp.int32), state, alive, slab, finished))
+    return state, slab, finished
+
+
+def run_sweep_lanes(gridlets, fleet, params: SimParams, n_users: int,
+                    max_events: int, max_jobs: int | None = None,
+                    batch: int = DEFAULT_BATCH,
+                    net_cap: int = 0) -> SimResult:
+    """The lane-batched sweep engine: run one scenario per lane of
+    ``params`` (every leaf carries a leading lane axis L, e.g. from
+    ``vmap(_scenario_point)``), with the lane axis INSIDE the while
+    loop rather than a vmap outside it.
+
+    ``vmap(run_sweep)`` can never skip work a single lane needs: under
+    vmap every ``lax.cond`` lowers to a both-branches select, which is
+    why the select-free path exists at all -- but masked no-ops still
+    *execute*.  Lifting the lane axis into the loop body restores real
+    branches at the batch level: the reseed sort, the broker poll and
+    the failure/reservation/arrival applies run only on iterations
+    where at least one lane needs them (:func:`_commit_lanes`), and
+    the speculation loop exits early once every lane declines
+    (:func:`_step_sweep_lanes`).  The loop itself replicates the
+    vmap-of-while lowering by hand -- body applied to every lane, then
+    a per-lane freeze (:func:`_tree_where`) -- so results are
+    bit-for-bit identical to ``vmap(run_sweep)`` and to the reference
+    path (asserted by tests/test_sweep_engine.py); only the "how"
+    counters may pack supersteps differently.
+
+    Unjitted, like :func:`run_sweep`: callers jit (or ``shard_map``)
+    around it -- see ``simulation.sweep`` / ``simulation.sweep_sharded``.
+    """
+    def mk(p):
+        s = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
+                       params=p, net_cap=net_cap)
+        _, fin0 = _user_flags(s, p, fleet, n_users)
+        return s, _empty_slab(s), fin0
+
+    state, slab, fin = jax.vmap(mk)(params)
+
+    def cond(c):
+        state, _, fin = c
+        return jnp.any(jax.vmap(_continue, in_axes=(0, 0, None))(
+            state, fin, max_events))
+
+    def body(c):
+        state, slab, fin = c
+        alive = jax.vmap(_continue, in_axes=(0, 0, None))(
+            state, fin, max_events)
+        s2, sl2, f2 = _step_sweep_lanes(state, fleet, params, n_users,
+                                        batch, slab, alive)
+        return (_tree_where(alive, s2, state),
+                _tree_where(alive, sl2, slab),
+                _tree_where(alive, f2, fin))
+
+    state, slab, fin = jax.lax.while_loop(cond, body, (state, slab, fin))
+    return jax.vmap(_finalize)(state)
 
 
 def run_direct(gridlets, fleet, resource_idx, dispatch_time,

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from . import economy, engine, gridlet
 from .types import DONE, OPT_COST
+from .types import replace as treplace
 
 
 class Scenario(NamedTuple):
@@ -44,7 +45,16 @@ class Scenario(NamedTuple):
     bg_flows: per-resource phantom background flows sharing each link
         (scalar or [R], may be fractional; default 0) -- standing
         non-grid traffic that takes its fair share of the link without
-        ever completing; net mode only.
+        ever completing; net mode only,
+    sched_min_period: broker poll-period floor in simulation time
+        (default None = the engine default 1.0, the paper's setting),
+    sched_frac: broker poll period as a fraction of the remaining
+        deadline (default None = the engine default 0.01).  The broker
+        re-evaluates its schedule every ``max(sched_min_period,
+        sched_frac * deadline_left)`` simulated seconds; coarser
+        polling trades scheduling reactivity for fewer pure-poll
+        supersteps and deeper speculation horizons (see
+        docs/PERFORMANCE.md, "Profiling checklist").
     """
     mtbf: Any = None
     mttr: Any = None
@@ -52,6 +62,8 @@ class Scenario(NamedTuple):
     seed: int = 0
     baud_rate: Any = None
     bg_flows: Any = None
+    sched_min_period: Any = None
+    sched_frac: Any = None
 
 
 class ExperimentResult(NamedTuple):
@@ -144,13 +156,19 @@ def safe_net_cap(gridlets_batch, params, fleet, n_users: int = 1) -> int:
 def _scenario_params(fleet, deadline, budget, opt, n_users,
                      scenario: Scenario | None) -> engine.SimParams:
     s = scenario or Scenario()
-    return engine.default_params(
+    p = engine.default_params(
         deadline, budget, opt, n_users, fleet.r,
         mtbf=s.mtbf, mttr=s.mttr, reservations=s.reservations,
         fail_key=jax.random.PRNGKey(s.seed),
         link_baud=(fleet.baud_rate if s.baud_rate is None
                    else s.baud_rate),
         bg_flows=s.bg_flows)
+    if s.sched_min_period is not None:
+        p = treplace(p, sched_min_period=jnp.asarray(
+            s.sched_min_period, jnp.float32))
+    if s.sched_frac is not None:
+        p = treplace(p, sched_frac=jnp.asarray(s.sched_frac, jnp.float32))
+    return p
 
 
 def run_experiment(gridlets_batch, fleet, deadline, budget,
@@ -193,34 +211,197 @@ def run_experiment_factors(gridlets_batch, fleet, d_factor, b_factor,
                           n_users, max_events, scenario), (deadline, budget)
 
 
-def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
-          n_users: int = 1, max_events: int | None = None,
-          scenario: Scenario | None = None, batch: int = 1,
-          net_cap: int | None = 0):
-    """vmap over the full deadline x budget grid (paper Figs 21-24).
+def _scenario_point(template: engine.SimParams, d, b,
+                    n_users: int) -> engine.SimParams:
+    """Instantiate one grid point from the sweep's params template."""
+    return treplace(template,
+                    deadline=jnp.broadcast_to(d, (n_users,)),
+                    budget=jnp.broadcast_to(b, (n_users,)))
 
-    deadlines: [D], budgets: [B] -> every field gains leading [D, B] dims.
-    ``batch`` defaults to 1 (no superstep speculation): under vmap the
-    speculative path lowers to selects that evaluate both branches, so
-    k > 1 saves nothing for swept grids; results are identical anyway.
-    ``net_cap`` as in :func:`run_experiment` (None = auto-size).
+
+def _run_point(gridlets_batch, fleet, template, d, b, *, n_users,
+               max_events, max_jobs, batch, net_cap, select_free):
+    params = _scenario_point(template, d, b, n_users)
+    runner = engine.run_sweep if select_free else engine.run_inner
+    res = runner(gridlets_batch, fleet, params, n_users, max_events,
+                 max_jobs, batch=batch, net_cap=net_cap)
+    return summarize(res, params, n_users, fleet.r, max_events)
+
+
+def _run_lanes_flat(gridlets_batch, fleet, template, dd, bb, *, n_users,
+                    max_events, max_jobs, batch, net_cap):
+    """Run a flat vector of scenario lanes through the lane-batched
+    sweep engine (:func:`engine.run_sweep_lanes`) and summarize each.
+    The lane axis lives inside the engine's while loop, so rarely-due
+    superstep bodies run under real any-lane ``lax.cond``s instead of
+    per-lane masked no-ops -- the batched-throughput term of the sweep
+    bench."""
+    p_lanes = jax.vmap(
+        lambda d, b: _scenario_point(template, d, b, n_users))(dd, bb)
+    res = engine.run_sweep_lanes(gridlets_batch, fleet, p_lanes, n_users,
+                                 max_events, max_jobs, batch=batch,
+                                 net_cap=net_cap)
+    return jax.vmap(
+        lambda r, p: summarize(r, p, n_users, fleet.r, max_events))(
+            res, p_lanes)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_users", "max_events", "max_jobs", "batch", "net_cap",
+    "select_free"))
+def _sweep_grid(gridlets_batch, fleet, template, deadlines, budgets,
+                n_users: int, max_events: int, max_jobs: int,
+                batch: int, net_cap: int, select_free: bool):
+    """Jitted deadline x budget grid runner.
+
+    Module-level (not a per-call closure) so repeated sweeps over the
+    same static shapes hit jax's jit cache instead of retracing -- the
+    scenario knobs travel in ``template`` as traced arrays.
+
+    The select-free path flattens the grid deadline-major and runs the
+    lane-batched engine loop (see :func:`_run_lanes_flat`); the
+    reference path keeps the plain nested vmap.
     """
-    deadlines = jnp.asarray(deadlines, jnp.float32)
-    budgets = jnp.asarray(budgets, jnp.float32)
+    if select_free:
+        d_grid, b_grid = deadlines.shape[0], budgets.shape[0]
+        out = _run_lanes_flat(
+            gridlets_batch, fleet, template,
+            jnp.repeat(deadlines, b_grid), jnp.tile(budgets, d_grid),
+            n_users=n_users, max_events=max_events, max_jobs=max_jobs,
+            batch=batch, net_cap=net_cap)
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((d_grid, b_grid) + x.shape[1:]), out)
+
+    def one(d, b):
+        return _run_point(gridlets_batch, fleet, template, d, b,
+                          n_users=n_users, max_events=max_events,
+                          max_jobs=max_jobs, batch=batch,
+                          net_cap=net_cap, select_free=select_free)
+
+    f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
+    return f(deadlines, budgets)
+
+
+def _sweep_statics(gridlets_batch, fleet, deadlines, opt, n_users,
+                   max_events, scenario, batch, net_cap, select_free):
+    """Shared static-argument resolution for sweep / sweep_sharded."""
+    if batch is None:
+        batch = engine.DEFAULT_BATCH if select_free else 1
     if max_events is None:
         horizon = float(deadlines.max()) * 2.0 + 100.0
         max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
-    params0 = engine.default_params(1.0, 1.0, opt, n_users, fleet.r)
-    max_jobs = safe_max_jobs(gridlets_batch, params0, fleet)  # static
+    template = _scenario_params(fleet, 0.0, 0.0, opt, n_users, scenario)
+    max_jobs = safe_max_jobs(gridlets_batch, template, fleet)  # static
     if net_cap is None:
-        net_cap = safe_net_cap(gridlets_batch, params0, fleet, n_users)
+        net_cap = safe_net_cap(gridlets_batch, template, fleet, n_users)
+    return template, max_events, max_jobs, batch, net_cap
 
-    def one(d, b):
-        params = _scenario_params(fleet, d, b, opt, n_users, scenario)
-        res = engine.run_inner(gridlets_batch, fleet, params, n_users,
-                               max_events, max_jobs, batch=batch,
-                               net_cap=net_cap)
-        return summarize(res, params, n_users, fleet.r, max_events)
 
-    f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
-    return jax.jit(f)(deadlines, budgets)
+def sweep(gridlets_batch, fleet, deadlines, budgets, opt=OPT_COST,
+          n_users: int = 1, max_events: int | None = None,
+          scenario: Scenario | None = None, batch: int | None = None,
+          net_cap: int | None = 0, select_free: bool = True):
+    """vmap over the full deadline x budget grid (paper Figs 21-24).
+
+    deadlines: [D], budgets: [B] -> every field gains leading [D, B] dims.
+
+    ``select_free`` (default) routes every lane through the sweep
+    engine (:func:`engine.run_sweep`): supersteps are committed
+    unconditionally with masked no-ops in place of every cond/fallback,
+    so under vmap each lane pays only for the work it commits and
+    ``batch`` defaults to ``engine.DEFAULT_BATCH``.  With
+    ``select_free=False`` the reference path runs instead and ``batch``
+    defaults to 1 (under vmap its ``lax.cond`` speculation lowers to
+    selects that evaluate both branches, so k > 1 saves nothing).
+    Results are bit-for-bit identical either way (asserted by
+    tests/test_sweep_engine.py).  ``net_cap`` as in
+    :func:`run_experiment` (None = auto-size).
+    """
+    deadlines = jnp.asarray(deadlines, jnp.float32)
+    budgets = jnp.asarray(budgets, jnp.float32)
+    template, max_events, max_jobs, batch, net_cap = _sweep_statics(
+        gridlets_batch, fleet, deadlines, opt, n_users, max_events,
+        scenario, batch, net_cap, select_free)
+    return _sweep_grid(gridlets_batch, fleet, template, deadlines,
+                       budgets, n_users=n_users, max_events=max_events,
+                       max_jobs=max_jobs, batch=batch, net_cap=net_cap,
+                       select_free=select_free)
+
+
+def sweep_sharded(gridlets_batch, fleet, deadlines, budgets,
+                  opt=OPT_COST, n_users: int = 1,
+                  max_events: int | None = None,
+                  scenario: Scenario | None = None,
+                  batch: int | None = None, net_cap: int | None = 0,
+                  select_free: bool = True, devices=None):
+    """:func:`sweep` with the scenario axis sharded across devices.
+
+    The [D, B] grid is flattened deadline-major into one scenario axis
+    of S = D*B lanes, padded up to a device multiple, and split across
+    ``devices`` (default: all of them) with ``shard_map`` -- each
+    device runs its contiguous slice of lanes as an independent vmap,
+    so lanes that finish early stop costing while-loop iterations on
+    *other* devices (the single-vmap convoy effect).  Inputs are passed
+    as replicated operands (no closure capture) and the flattened
+    deadline/budget vectors are donated.  Falls back to ``pmap`` when
+    ``shard_map`` is unavailable.  Results are bit-for-bit identical to
+    :func:`sweep` (asserted by tests/test_sweep_engine.py).
+    """
+    deadlines = jnp.asarray(deadlines, jnp.float32)
+    budgets = jnp.asarray(budgets, jnp.float32)
+    template, max_events, max_jobs, batch, net_cap = _sweep_statics(
+        gridlets_batch, fleet, deadlines, opt, n_users, max_events,
+        scenario, batch, net_cap, select_free)
+    d_grid, b_grid = deadlines.shape[0], budgets.shape[0]
+    s = d_grid * b_grid
+    devices = jax.devices() if devices is None else list(devices)
+    n_dev = max(1, len(devices))
+    s_pad = -(-s // n_dev) * n_dev
+    dd = jnp.repeat(deadlines, b_grid)   # deadline-major flatten [S]
+    bb = jnp.tile(budgets, d_grid)
+    if s_pad != s:   # pad with copies of the last lane (discarded below)
+        dd = jnp.concatenate([dd, jnp.broadcast_to(dd[-1:], (s_pad - s,))])
+        bb = jnp.concatenate([bb, jnp.broadcast_to(bb[-1:], (s_pad - s,))])
+
+    def run_lanes(g, f, tmpl, dd_l, bb_l):
+        if select_free:
+            # Lane-batched engine loop per shard: each device's
+            # any-lane cond predicates see only ITS lanes, so a shard
+            # whose lanes never poll/reseed skips work other shards pay
+            # for -- on top of the convoy-effect win.
+            return _run_lanes_flat(g, f, tmpl, dd_l, bb_l,
+                                   n_users=n_users,
+                                   max_events=max_events,
+                                   max_jobs=max_jobs, batch=batch,
+                                   net_cap=net_cap)
+
+        def one(d, b):
+            return _run_point(g, f, tmpl, d, b, n_users=n_users,
+                              max_events=max_events, max_jobs=max_jobs,
+                              batch=batch, net_cap=net_cap,
+                              select_free=select_free)
+        return jax.vmap(one)(dd_l, bb_l)
+
+    out = None
+    if n_dev > 1:
+        try:
+            import numpy as np
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec as P
+            mesh = Mesh(np.asarray(devices), ("s",))
+            fn = shard_map(run_lanes, mesh=mesh,
+                           in_specs=(P(), P(), P(), P("s"), P("s")),
+                           out_specs=P("s"), check_rep=False)
+            out = jax.jit(fn, donate_argnums=(3, 4))(
+                gridlets_batch, fleet, template, dd, bb)
+        except (ImportError, AttributeError):
+            fn = jax.pmap(run_lanes, in_axes=(None, None, None, 0, 0),
+                          devices=devices)
+            out = fn(gridlets_batch, fleet, template,
+                     dd.reshape(n_dev, -1), bb.reshape(n_dev, -1))
+            out = jax.tree_util.tree_map(
+                lambda x: x.reshape((s_pad,) + x.shape[2:]), out)
+    if out is None:     # single device: plain jit, same lane layout
+        out = jax.jit(run_lanes)(gridlets_batch, fleet, template, dd, bb)
+    return jax.tree_util.tree_map(
+        lambda x: x[:s].reshape((d_grid, b_grid) + x.shape[1:]), out)

@@ -501,12 +501,18 @@ def _slab_kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
 
 
 def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
-                    pe_blocked=None, row_ok=None, *,
+                    pe_blocked=None, row_ok=None, live=None, *,
                     block_r: int = 8, interpret: bool = False):
     """Forecast each row's next ``k`` completions in one kernel call.
 
     Same inputs/masking as :func:`event_scan` plus the static slab depth
-    ``k``.  Returns ``(t_wave f32[R, k], col_wave i32[R, k])``: the time
+    ``k`` and an optional scalar ``live`` gate: ``live=False`` turns the
+    whole call into a masked no-op superstep -- every row is treated as
+    masked off, so all k waves come back as the (BIG, J) empty-wave
+    sentinel, bitwise identical to passing ``row_ok=False`` everywhere.
+    The sweep engine commits slabs unconditionally and relies on this
+    (one traced computation, no cond/select pair; see
+    engine.step_sweep).  Returns ``(t_wave f32[R, k], col_wave i32[R, k])``: the time
     from now (NOT absolute time) and column of the row's w-th completion
     under uninterrupted Fig 8 dynamics -- shares recomputed in-register
     after every wave -- with BIG / J padding past the row's job count.
@@ -523,6 +529,8 @@ def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
     r, j = remaining.shape
     remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
         remaining, tie, policy, pe_blocked, row_ok)
+    if live is not None:
+        row_ok = jnp.where(jnp.asarray(live, bool), row_ok, 0.0)
     remaining, tie, j_pad = _lane_pad(remaining, tie, j)
     block_r = min(block_r, r)
     assert r % block_r == 0, "pad the resource axis upstream"
@@ -561,13 +569,16 @@ def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
 
 
 def event_scan_slab_xla(remaining, mips_eff, num_pe, k, tie=None,
-                        policy=None, pe_blocked=None, row_ok=None):
+                        policy=None, pe_blocked=None, row_ok=None,
+                        live=None):
     """Vectorised jnp fallback for :func:`event_scan_slab` -- identical
     wave arithmetic (shared ``_slab_waves``), with the kernel's O(J^2)
     pairwise rank replaced by one O(J log J) lexsort."""
     r, j = remaining.shape
     remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
         remaining, tie, policy, pe_blocked, row_ok)
+    if live is not None:
+        row_ok = jnp.where(jnp.asarray(live, bool), row_ok, 0.0)
     mips = mips_eff.astype(jnp.float32)[:, None]
     npe = num_pe.astype(jnp.float32)[:, None]
     pol = policy[:, None]

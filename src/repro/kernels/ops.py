@@ -84,26 +84,30 @@ def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None,
 
 @functools.partial(jax.jit, static_argnames=("k", "block_r", "interpret"))
 def event_scan_slab(remaining, mips_eff, num_pe, k=8, tie=None,
-                    policy=None, pe_blocked=None, row_ok=None, *,
-                    block_r=8, interpret=None):
+                    policy=None, pe_blocked=None, row_ok=None,
+                    live=None, *, block_r=8, interpret=None):
     """Next-k completion forecast per resource row in one fused call
     (the TPU-target primitive behind the engine's k-step superstep
     batching; see kernels.event_scan.event_scan_slab for semantics).
 
-    Returns (t_wave [R, k] f32 -- time from now of each row's w-th
-    completion, BIG-padded; col_wave [R, k] i32, J-padded).  Routing
-    mirrors :func:`event_scan`: compiled Pallas on TPU, the vectorised
-    XLA fallback on CPU hosts, Pallas interpret mode only on request.
+    ``live`` (scalar bool, optional) is the masked no-op gate:
+    ``live=False`` returns all-sentinel waves, bitwise identical to
+    masking every row off -- the sweep engine's unconditional slab
+    commit relies on it.  Returns (t_wave [R, k] f32 -- time from now
+    of each row's w-th completion, BIG-padded; col_wave [R, k] i32,
+    J-padded).  Routing mirrors :func:`event_scan`: compiled Pallas on
+    TPU, the vectorised XLA fallback on CPU hosts, Pallas interpret
+    mode only on request.
     """
     if interpret is None and jax.default_backend() != "tpu":
         return _event.event_scan_slab_xla(remaining, mips_eff, num_pe, k,
                                           tie=tie, policy=policy,
                                           pe_blocked=pe_blocked,
-                                          row_ok=row_ok)
+                                          row_ok=row_ok, live=live)
     return _event.event_scan_slab(remaining, mips_eff, num_pe, k,
                                   tie=tie, policy=policy,
                                   pe_blocked=pe_blocked, row_ok=row_ok,
-                                  block_r=block_r,
+                                  live=live, block_r=block_r,
                                   interpret=_auto_interpret(interpret))
 
 

@@ -150,7 +150,8 @@ def event_scan_ref(remaining, mips_eff, num_pe, tie=None, policy=None,
 
 
 def event_scan_slab_ref(remaining, mips_eff, num_pe, k, tie=None,
-                        policy=None, pe_blocked=None, row_ok=None):
+                        policy=None, pe_blocked=None, row_ok=None,
+                        live=None):
     """Oracle for the k-wave slab forecast: literally iterate
     :func:`event_scan_ref` k times, after each wave advancing every job
     of a row by its own rate over that row's head completion interval
@@ -162,6 +163,11 @@ def event_scan_slab_ref(remaining, mips_eff, num_pe, k, tie=None,
     import numpy as np
     rem = np.array(remaining, np.float64)
     r_n, j_n = rem.shape
+    if live is not None:
+        # scalar no-op gate: live=False == every row masked off
+        base = (np.ones(r_n, bool) if row_ok is None
+                else np.asarray(row_ok, bool))
+        row_ok = base & bool(live)
     t_acc = np.zeros((r_n,))
     t_out = np.full((r_n, k), 3.0e38)
     col_out = np.full((r_n, k), j_n, np.int32)

@@ -25,6 +25,12 @@ def naive(q, k, v, causal, window, cap):
     return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
 
 
+@pytest.mark.xfail(
+    not hasattr(jax.sharding, "get_abstract_mesh"),
+    reason="pre-existing seed failure (tracked in CHANGES.md, PR 6): "
+           "models/common.py uses jax.sharding.get_abstract_mesh, "
+           "added after the installed jax release",
+    raises=AttributeError)
 @pytest.mark.parametrize("causal,window,cap", [
     (True, 0, 0.0), (True, 8, 0.0), (True, 0, 30.0),
     (False, 0, 0.0), (True, 8, 30.0),
