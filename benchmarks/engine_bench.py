@@ -56,6 +56,7 @@ kernels.event_scan / event_scan_slab.
 from __future__ import annotations
 
 import json
+import math
 import os
 import subprocess
 import sys
@@ -389,6 +390,13 @@ def run():
             "scan_reseeds": int(np.asarray(r.n_reseeds)),
             "slab_hit_rate": 1.0 - (int(np.asarray(r.n_reseeds)) /
                                     max(int(np.asarray(r.n_scans)), 1)),
+            # Mean speculative micro-steps riding each committed
+            # superstep, and the dependent-step depth of the
+            # associative-scan slab solve (log2 tree over k waves vs
+            # the old k sequential fori iterations).
+            "slab_depth_mean": int(np.asarray(r.n_spec)) / max(steps, 1),
+            "scan_depth": int(math.ceil(math.log2(
+                engine.DEFAULT_BATCH))) + 1,
             "n_done": float(np.asarray(r.n_done).sum()),
             "spent": float(np.asarray(r.spent).sum()),
             "overflow": int(np.asarray(r.overflow)),

@@ -82,7 +82,19 @@ with
     actually interfere (a per-resource failure stream with ``mtbf = 0``
     is +inf and cuts nothing -- its row can never be hit), and
     ``horizon_candidates`` may return something strictly between
-    "my every candidate" and "nothing".
+    "my every candidate" and "nothing".  Sources the speculative
+    micro-steps *apply in-slab* (engine._speculative_step's slab-safe
+    slice: COMPLETION, FAILURE, RECOVERY, NETWORK, RETURN) sharpen
+    this further: their hooks expose only the firings the micro-steps
+    can NOT reproduce -- a strike on a resource with resident work, a
+    staging drain that matures an ARRIVAL, a pending link entry --
+    under two obligations: (1) every exposed bound must stay a valid
+    lower bound across any in-slab state evolution (the horizon is
+    evaluated ONCE per slab, so bounds must be invariant under
+    membership/rate changes the slab itself is allowed to make), and
+    (2) every *non*-exposed firing must be exactly reproducible by the
+    micro-step slice at its due instant, including trace rows, RNG
+    consumption and the masked no-op contract when declined.
 
 :class:`FnSource` is the plain-closure implementation the engine and
 user extensions build sources from; see docs/ARCHITECTURE.md for the

@@ -433,6 +433,21 @@ def _net_on(state) -> bool:
     return state.link_rem.shape[1] > 0
 
 
+def _residents_r(state, n_resources):
+    """bool[R]: the resource hosts *resident* work -- RUNNING or QUEUED
+    gridlets a failure/recovery strike would actually interfere with.
+    Used by the speculation horizon: the resident set of a resource can
+    only shrink inside a slab (queue admissions draw from already-
+    resident QUEUED jobs; arrivals and broker dispatches cut the
+    horizon), so a strike gated off here stays non-interfering for the
+    whole slab and is fired by the speculative micro-steps instead."""
+    g = state.g
+    res = jnp.clip(g.resource, 0, n_resources - 1)
+    resident = (g.status == RUNNING) | (g.status == QUEUED)
+    return jax.ops.segment_sum(resident.astype(jnp.int32), res,
+                               num_segments=n_resources) > 0
+
+
 def _xfer_bytes(g):
     """Payload of each gridlet's pending/possible transfer: input files
     while staging (IN_TRANSIT), result files on the way back."""
@@ -1214,56 +1229,79 @@ def _make_sources(fleet, params, n_users, ctx):
             state = replace(state, g=replace(g2, t_event=t_ev))
         return state
 
-    # COMPLETION and RETURN are speculation-safe (horizon_fn): applying
-    # them never pulls another source's pending instant earlier, so they
-    # keep the k-step batching horizon open (no horizon candidates).
-    # Every other source keeps the conservative default -- each of its
-    # candidate streams cuts the horizon at its own instant; a stream
-    # that can never fire (mtbf = 0 failure row, empty reservation
-    # table) is +inf and cuts nothing, which is the source-aware form
-    # the fused frontier consumes.  With the network subsystem ON,
-    # COMPLETION is only *partially* safe: a completion whose result
-    # payload contends for a link creates a transfer mid-slab, changing
-    # every fair share on that link -- so each such job contributes a
-    # horizon cut at a lower bound on its completion instant (remaining
-    # at the full effective PE rate: shares only divide eff, and every
-    # rate-changing boundary -- calendar, reservation, failure -- cuts
-    # the horizon itself, so the bound holds throughout the slab).
-    # Zero-payload completions stay fully speculation-safe, which is
-    # why zero-byte scenarios keep their whole batching win with the
-    # subsystem on.
-    def completion_horizon(state):
+    # Speculation-safety is per source (des.EventSource horizon hooks),
+    # and the micro-steps now fire the full *slab-safe* source subset --
+    # COMPLETION, FAILURE, RECOVERY, NETWORK drains, RETURN -- so only
+    # genuinely interfering firings cut the horizon:
+    #
+    # * COMPLETION and RETURN are fully speculation-safe (horizon_fn =
+    #   no_interference): applying them never pulls another source's
+    #   pending instant earlier.  With the network subsystem ON a
+    #   completion may *create* a return transfer mid-slab; that is
+    #   safe too, because the micro-steps run the same end-of-superstep
+    #   link-entry pass as a commit and re-derive fair shares each
+    #   micro-scan -- and the IN_TRANSIT bounds below are membership-
+    #   invariant, so a new link member never invalidates them.
+    # * FAILURE / RECOVERY cut only when the resource has *resident*
+    #   (RUNNING | QUEUED) work to interfere with; a strike on an idle
+    #   or purely-transit resource fires inside the slab through the
+    #   micro-steps' failure/recovery applies.  The resident set per
+    #   resource can only shrink mid-slab (admissions come from QUEUED
+    #   residents; arrivals and broker dispatches cut the horizon), so
+    #   a gate that holds at commit time holds slab-wide.
+    # * NETWORK cuts at (a) each pending entry's network-entry instant
+    #   (joining a link re-divides its fair shares) and (b) a
+    #   membership-invariant lower bound on each in-flight *staging*
+    #   (IN_TRANSIT) drain -- network.fastest_drain, the sole-member
+    #   rate -- because a staging drain matures an ARRIVAL, which only
+    #   the committing superstep applies.  Result-return (RETURNING)
+    #   drains cut nothing: the micro-steps' NETWORK apply releases
+    #   them and the same-superstep RETURN batch consumes them, exactly
+    #   the commit path's slice.
+    # * Every other source keeps the conservative default -- each
+    #   candidate stream cuts at its own instant; +inf streams (an
+    #   empty reservation table, a never-polling broker) cut nothing.
+    def failure_horizon(state):
+        return jnp.where(_residents_r(state, n_resources),
+                         state.next_fail, INF)
+
+    def recovery_horizon(state):
+        return jnp.where(_residents_r(state, n_resources),
+                         state.next_recover, INF)
+
+    def network_horizon(state):
         if not _net_on(state):
-            return jnp.zeros((0,), jnp.float32)     # speculation-safe
+            return jnp.zeros((0,), jnp.float32)
         g = state.g
-        res = jnp.clip(g.resource, 0, n_resources - 1)
-        eff = calendar.effective_mips(fleet, state.t)
-        # QUEUED jobs are risky too: a mid-slab queue admission (it
-        # rides inside completion_apply) turns one RUNNING, and it can
-        # then complete -- and create its return transfer -- before
-        # the slab ends.  The same bound covers it: a queued job
-        # cannot start before now, so t + remaining/eff still
-        # lower-bounds its completion.  (IN_TRANSIT needs no cut:
-        # arrivals cannot fire inside a slab -- analytic ones cut via
-        # the ARRIVAL candidates, tabled ones via the link forecast.)
-        risky = ((g.status == RUNNING) | (g.status == QUEUED)) & \
-            network.link_tabled(g.out_bytes, params.link_baud[res])
-        return jnp.where(
-            risky,
-            state.t + g.remaining / jnp.maximum(eff[res], 1e-30), INF)
+        r_pad = state.row_gridlet.shape[0]
+        pad = r_pad - n_resources
+        baud = jnp.pad(params.link_baud, (0, pad), constant_values=1.0)
+        bg = jnp.pad(params.bg_flows, (0, pad))
+        gid = state.link_gridlet
+        staging = (gid >= 0) & \
+            (g.status[jnp.clip(gid, 0, g.n - 1)] == IN_TRANSIT)
+        bound = state.t + network.fastest_drain(
+            state.link_rem, baud[:, None], bg[:, None])
+        pend = _pending_entries(state, params, n_resources)
+        return jnp.concatenate(
+            [jnp.where(staging, bound, INF).ravel(),
+             jnp.where(pend, g.t_event, INF)])
 
     sources = (
         des.FnSource(des.K_COMPLETION, "completion",
                      completion_candidates, completion_apply,
-                     horizon_candidates_fn=completion_horizon),
+                     horizon_fn=des.no_interference),
         des.FnSource(des.K_FAILURE, "failure",
-                     lambda s: s.next_fail, failure_apply),
+                     lambda s: s.next_fail, failure_apply,
+                     horizon_candidates_fn=failure_horizon),
         des.FnSource(des.K_RECOVERY, "recovery",
-                     lambda s: s.next_recover, recovery_apply),
+                     lambda s: s.next_recover, recovery_apply,
+                     horizon_candidates_fn=recovery_horizon),
         des.FnSource(des.K_RESERVATION, "reservation",
                      reservation_candidates, reservation_apply),
         des.FnSource(des.K_NETWORK, "network", network_candidates,
-                     network_apply),
+                     network_apply,
+                     horizon_candidates_fn=network_horizon),
         des.FnSource(des.K_RETURN, "return", return_candidates,
                      return_apply, horizon_fn=des.no_interference),
         des.FnSource(des.K_ARRIVAL, "arrival", arrival_candidates,
@@ -1608,13 +1646,16 @@ def _speculative_step(state, fleet, params, n_users, t_safe, slab,
                       finished):
     """One speculative micro-superstep of the k-step batched path.
 
-    Applies the earliest pending COMPLETION/RETURN batch if -- and only
-    if -- it lies *strictly* inside the speculation horizon ``t_safe``.
-    Inside the horizon no other source can fire (see
-    :func:`_speculation_horizon`), so the global earliest pending
-    instant is min(completion, return) and the full superstep machinery
-    reduces to exactly the COMPLETION/RETURN slice applied here -- the
-    resulting state, trace rows and counters are bit-for-bit what
+    Applies the earliest pending batch of the *slab-safe* sources --
+    COMPLETION, FAILURE, RECOVERY, NETWORK drains, RETURN -- if, and
+    only if, it lies *strictly* inside the speculation horizon
+    ``t_safe``.  Inside the horizon no other source (and no
+    *interfering* firing of these: a strike on a resource with resident
+    work, an IN_TRANSIT drain maturing an ARRIVAL, a pending link
+    entry) can fire (see :func:`_speculation_horizon`), so the global
+    earliest pending instant is the min over exactly these streams and
+    the full superstep machinery reduces to the slice applied here --
+    the resulting state, trace rows and counters are bit-for-bit what
     :func:`step` would have produced.
 
     ``slab = (rank, ok)`` is the precomputed-wave carry: the committing
@@ -1628,10 +1669,11 @@ def _speculative_step(state, fleet, params, n_users, t_safe, slab,
     structural change invalidated the carry, the micro-step falls back
     to one exact rescan and reseeds the carry from its fresh rank.
     With the network subsystem on, in-flight transfers drain at their
-    (horizon-constant) fair-share rates across the micro-step's
-    interval exactly as in a committing superstep -- no transfer can
-    *complete* inside the horizon (link forecasts cut it), so the
-    NETWORK apply itself never needs to run here.
+    fair-share rates across the micro-step's interval exactly as in a
+    committing superstep, and RETURNING drains forecast inside the
+    horizon fire through the NETWORK apply (their RETURN rides the same
+    micro-step); only drains that would mature an ARRIVAL -- IN_TRANSIT
+    stagings -- are horizon-cut and land in a commit.
     Returns ``(state, fired, slab', finished')``; ``fired`` False means
     the state was returned untouched (the caller stops speculating:
     pending times only move when events apply) and ``finished`` passes
@@ -1659,26 +1701,53 @@ def _speculative_step(state, fleet, params, n_users, t_safe, slab,
     tmin = ctx["scan"][1].min()
     t_comp = jnp.where(tmin < _BIG, state.t + tmin, INF)
     t_next = jnp.minimum(t_comp, ret.next_time(state))
-    fire = jnp.isfinite(t_next) & (t_next < t_safe)
+    # Slab-safe strikes and link drains fire here too: a FAILURE /
+    # RECOVERY due on a resident-free resource and any RETURNING-drain
+    # forecast can lie inside the horizon (their interfering cases cut
+    # t_safe -- see _make_sources); IN_TRANSIT drains never pass the
+    # `fire` test because their membership-invariant bound cut t_safe.
+    t_next = jnp.minimum(t_next, jnp.min(state.next_fail))
+    t_next = jnp.minimum(t_next, jnp.min(state.next_recover))
+    if _net_on(state):
+        tmin_l = ctx["net_scan"][1].min()
+        t_next = jnp.minimum(
+            t_next, jnp.where(tmin_l < _BIG, state.t + tmin_l, INF))
+    # ~finished.all(): the while loop would have stopped -- a strike
+    # stream never dries up on its own, so without this gate a slab
+    # could keep firing failures past the batch=1 run's last superstep.
+    fire = (jnp.isfinite(t_next) & (t_next < t_safe) &
+            ~finished.all())
 
     def live(s):
         from .types import replace
         if _net_on(s):
             s = _advance_transfers(s, ctx, t_next, fire)
         s = _advance_jobs(s, ctx, t_next, fire, n_resources)
+        # The commit path's apply order, restricted to the slab-safe
+        # sources (priority order: COMP, FAIL, REC, NET, RET).
         s = comp.apply(s, t_next)     # completions + queue admissions
+        s = by_kind[des.K_FAILURE].apply(s, t_next)
+        s = by_kind[des.K_RECOVERY].apply(s, t_next)
+        if _net_on(s):
+            s = by_kind[des.K_NETWORK].apply(s, t_next)
         s = ret.apply(s, t_next)      # incl. zero-delay returns
         s = _alloc_newly(s, ctx, n_resources, r_pad)
         if _net_on(s):                # exact slice of the commit path;
             s = _enqueue_new_transfers(s, params, n_resources, r_pad)
-        kinds = jnp.asarray([des.K_COMPLETION, des.K_RETURN], jnp.int32)
-        counts = jnp.stack([ctx[("count", des.K_COMPLETION)],
-                            ctx[("count", des.K_RETURN)]])
-        whos = jnp.stack([ctx[("who", des.K_COMPLETION)],
-                          ctx[("who", des.K_RETURN)]])
+        kind_list = [des.K_COMPLETION, des.K_FAILURE, des.K_RECOVERY]
+        if _net_on(s):
+            kind_list.append(des.K_NETWORK)
+        kind_list.append(des.K_RETURN)
+        kinds = jnp.asarray(kind_list, jnp.int32)
+        counts = jnp.stack([ctx[("count", k)] for k in kind_list])
+        whos = jnp.stack([ctx[("who", k)] for k in kind_list])
         s, fin = _bookkeep(s, fleet, params, n_users, kinds, counts,
                            whos, t_next)
-        slab2 = _slab_after(s, ctx, ctx["scan"], jnp.asarray(False),
+        # A fired strike restructures rows/slots exactly as in a
+        # commit: invalidate the rank carry so the next scan reseeds.
+        interfering = (ctx[("count", des.K_FAILURE)] +
+                       ctx[("count", des.K_RECOVERY)]) > 0
+        slab2 = _slab_after(s, ctx, ctx["scan"], interfering,
                             fleet, n_resources, r_pad)
         return replace(s, n_spec=s.n_spec + 1), slab2, fin
 
@@ -1756,6 +1825,15 @@ def _sweep_micro(state, fleet, params, n_users, t_safe, slab, finished,
     tmin = scan[1].min()
     t_comp = jnp.where(tmin < _BIG, state.t + tmin, INF)
     t_next = jnp.minimum(t_comp, ret.next_time(state))
+    # Slab-safe strikes and RETURNING link drains fire here too (their
+    # interfering cases cut t_safe; see _make_sources / the unmasked
+    # _speculative_step).
+    t_next = jnp.minimum(t_next, jnp.min(state.next_fail))
+    t_next = jnp.minimum(t_next, jnp.min(state.next_recover))
+    if _net_on(state):
+        tmin_l = ctx["net_scan"][1].min()
+        t_next = jnp.minimum(
+            t_next, jnp.where(tmin_l < _BIG, state.t + tmin_l, INF))
     # Preview (without applying) whether this batch would need a
     # space-shared queue admission; scan outputs are garbage when the
     # carry is invalid, but then ``use`` already kills the gate.
@@ -1771,26 +1849,34 @@ def _sweep_micro(state, fleet, params, n_users, t_safe, slab, finished,
     would_c = has_slot & (state.t + rel <= t_next)
     pred_admit = ((would_c & (fleet.policy[res] == SPACE_SHARED)).any()
                   & (g.status == QUEUED).any())
+    # ~finished.all() mirrors the while-loop stop: strike streams never
+    # dry up, so a slab must not outlive the batch=1 run's last step.
     fire = (jnp.isfinite(t_next) & (t_next < t_safe) & use & alive &
-            (slab[3] | ~pred_admit))
+            (slab[3] | ~pred_admit) & ~finished.all())
     t_eff = jnp.where(fire, t_next, state.t)
     ctx["gate"] = fire
 
-    # ---- the masked COMPLETION/RETURN slice --------------------------
+    # ---- the masked slab-safe slice (COMP, FAIL, REC, NET, RET) ------
     if _net_on(state):
         state = _advance_transfers(state, ctx, t_eff, fire, gate=fire)
     state = _advance_jobs(state, ctx, t_eff, fire, n_resources)
     state = comp.apply(state, t_eff)
+    state = by_kind[des.K_FAILURE].apply(state, t_eff)
+    state = by_kind[des.K_RECOVERY].apply(state, t_eff)
+    if _net_on(state):
+        state = by_kind[des.K_NETWORK].apply(state, t_eff)
     state = ret.apply(state, t_eff)
     state = _alloc_newly(state, ctx, n_resources, r_pad)
     if _net_on(state):
         state = _enqueue_new_transfers(state, params, n_resources,
                                        r_pad, select_free=True)
-    kinds = jnp.asarray([des.K_COMPLETION, des.K_RETURN], jnp.int32)
-    counts = jnp.stack([ctx[("count", des.K_COMPLETION)],
-                        ctx[("count", des.K_RETURN)]])
-    whos = jnp.stack([ctx[("who", des.K_COMPLETION)],
-                      ctx[("who", des.K_RETURN)]])
+    kind_list = [des.K_COMPLETION, des.K_FAILURE, des.K_RECOVERY]
+    if _net_on(state):
+        kind_list.append(des.K_NETWORK)
+    kind_list.append(des.K_RETURN)
+    kinds = jnp.asarray(kind_list, jnp.int32)
+    counts = jnp.stack([ctx[("count", k)] for k in kind_list])
+    whos = jnp.stack([ctx[("who", k)] for k in kind_list])
     state, finished = _bookkeep(state, fleet, params, n_users, kinds,
                                 counts, whos, t_eff)
     state = _replace(
@@ -1799,31 +1885,40 @@ def _sweep_micro(state, fleet, params, n_users, t_safe, slab, finished,
         n_scans=state.n_scans + alive.astype(jnp.int32))
 
     # Slab: micro admissions are space-shared only (ts_newly is always
-    # empty here), so validity persists from the input; the rank shifts
-    # by the departed per-row completion counts (zero when declined).
+    # empty here), so validity persists from the input unless a strike
+    # fired (it restructures rows/slots; mirror the commit's
+    # invalidation so the next scan reseeds); the rank shifts by the
+    # departed per-row completion counts (zero when declined).
+    interfering = (ctx[("count", des.K_FAILURE)] +
+                   ctx[("count", des.K_RECOVERY)]) > 0
     n_comp_r = jnp.pad(ctx["n_comp_r"], (0, r_pad - n_resources))
     slab2 = (scan[4] - n_comp_r[:, None].astype(jnp.float32),
-             slab[1]) + ctx["qcarry"]
+             slab[1] & ~interfering) + ctx["qcarry"]
     return state, fire, slab2, finished
 
 
 def _speculation_horizon(state, fleet, params, n_users):
-    """Earliest instant at which any source could interfere with
-    speculative COMPLETION/RETURN batching, derived from the registered
-    sources' ``horizon_candidates`` hooks (des.EventSource) through the
-    same fused frontier pass as the committing superstep -- the safety
-    condition is owned by the sources, not hard-coded here.
+    """Earliest instant at which any source could interfere with the
+    speculative micro-steps' slab-safe batching (COMPLETION, FAILURE /
+    RECOVERY strikes on resident-free resources, RETURNING link drains,
+    RETURN), derived from the registered sources' ``horizon_candidates``
+    hooks (des.EventSource) through the same fused frontier pass as the
+    committing superstep -- the safety condition is owned by the
+    sources, not hard-coded here.
 
     COMPLETION and RETURN contribute no candidates (their firings never
-    pull another source's pending instant earlier); every other source
+    pull another source's pending instant earlier); FAILURE / RECOVERY
+    contribute only strikes on resources with resident work; NETWORK
+    contributes pending link-entry instants and membership-invariant
+    lower bounds on IN_TRANSIT staging drains; every other source
     conservatively contributes its own candidate streams, each cutting
     at its own instant (+inf streams -- a zero-rate failure row, an
     empty reservation table -- cut nothing).  The derived cut is safe
-    because within the slab only completions/returns apply, and none of
-    them can (re-)activate a broker, schedule a failure/recovery, move
-    a reservation or calendar boundary, or put a gridlet in transit.
-    Note the completion scan is *not* run here: interference candidates
-    never need the forecast kernel.
+    because within the slab only the slab-safe slice applies, and none
+    of its firings can (re-)activate a broker, pull an interfering
+    strike earlier, move a reservation or calendar boundary, or put a
+    gridlet in transit.  Note the completion scan is *not* run here:
+    interference candidates never need the forecast kernel.
     """
     ctx = {}
     sources = _make_sources(fleet, params, n_users, ctx)

@@ -56,6 +56,30 @@ def transfer_delay(nbytes, baud_rate):
     return d + LATENCY
 
 
+def fastest_drain(nbytes, baud_rate, bg_flows):
+    """Membership-invariant lower bound on the wall-clock time a
+    *tabled* transfer with ``nbytes`` still in flight needs to drain.
+
+    A fair-share link splits ``baud_rate`` equally over its m resident
+    transfers plus ``bg_flows`` phantom background flows, so any single
+    transfer's rate is at most ``baud / (1 + bg)`` (m >= 1) and never
+    exceeds that bound no matter how membership evolves -- new stagings
+    or result returns entering the link only *slow* existing drains.
+    Hence no tabled transfer can complete before
+    ``nbytes * (1 + bg) / baud`` elapses, which is what makes the bound
+    safe as a slab speculation horizon (core/engine.py's NETWORK
+    horizon uses it on the live ``[R_pad, T]`` table).  Clamping matches
+    :func:`transfer_delay`: f32 overflow -> the finite BIG horizon,
+    non-positive payloads or infinite baud -> exactly 0.0.
+    """
+    nbytes = jnp.asarray(nbytes, jnp.float32)
+    baud = jnp.asarray(baud_rate, jnp.float32)
+    bg = jnp.asarray(bg_flows, jnp.float32)
+    safe = jnp.maximum(baud, 1e-30)
+    d = jnp.minimum(nbytes * (1.0 + bg) / safe, BIG)
+    return jnp.where(jnp.isinf(baud) | (nbytes <= 0.0), 0.0, d)
+
+
 def link_tabled(nbytes, baud_rate):
     """True where a transfer contends for link bandwidth, i.e. belongs
     in the fair-share transfer-slot table: a positive payload over a

@@ -479,8 +479,133 @@ def _slab_waves(rem, rank, valid, g, mips, npe_e, pol, col, k):
     return jnp.concatenate(ts, axis=1), jnp.concatenate(cols, axis=1)
 
 
+# --- associative-scan formulation of the same slab -------------------
+#
+# The sequential recurrence above has a hidden linear structure: the
+# Fig 8 rate of a job depends only on its *rank*, the wave index and
+# the row statics -- never on the remaining work.  So the whole slab is
+# a lower-triangular linear system.  Let A[w, p] be the rate the rank-p
+# job runs at during wave w (zero once p < w or p >= g), and srem[p]
+# the remaining MI of the rank-p job at wave 0.  The wave-p head
+# interval then satisfies the forward substitution
+#
+#   dt_p = (srem_p - sum_{v<p} A[v, p] * dt_v) / A[p, p]
+#
+# and each wave is one homogeneous (k+1)x(k+1) matrix acting on the
+# state vector (dt_0 .. dt_{k-1}, 1): identity everywhere except row p,
+# which holds (-A[v, p]/A[p, p] for v < p, 0, srem_p/A[p, p]).  Matrix
+# product is associative, so the composite of all k waves -- whose last
+# column IS the dt vector -- evaluates in O(log k) dependent steps via
+# ``jax.lax.associative_scan`` (XLA path) or a balanced static product
+# tree (Pallas path), instead of k dependent wave steps.  Within-row
+# completion order never inverts under Fig 8 (see the note above), so
+# in exact arithmetic every dt_p is nonnegative and the sequential
+# path's per-wave clamp only ever fires on exact ties; one final
+# clamp ``max(dt, 0)`` reproduces it to rounding.  Wave 0's row
+# composes through untouched identity rows, so t_wave[:, 0] stays
+# *bitwise* equal to the sequential path (and to ``event_scan``).
+
+def _mats_mul(b, a):
+    """Batched (k+1)x(k+1) matrix product ``b @ a`` written as a
+    broadcast-multiply-sum so the Pallas kernel body lowers to plain
+    VPU ops (no dot_general on tiny non-tile shapes)."""
+    return jnp.sum(b[..., :, :, None] * a[..., None, :, :], axis=-2)
+
+
+def _compose_waves(a, b):
+    """The associative wave-compose operator: ``b`` after ``a``.
+
+    Operands are stacks of homogeneous wave matrices [..., k+1, k+1];
+    composing later-wave ``b`` onto earlier-prefix ``a`` is the matrix
+    product ``b @ a``, which is associative -- the property test in
+    tests/test_kernels.py checks it on random wave matrices.
+    """
+    return _mats_mul(b, a)
+
+
+def _slab_assoc_inputs(rem, rank, valid, g, mips, npe_e, pol, col, k):
+    """Rank-indexed slab inputs: per-wave rate table A f32[R, k, k]
+    (A[:, w, p] = wave-w rate of the rank-p job), head remaining
+    srem f32[R, k], head column scol i32[R, k], wave-exists mask
+    has bool[R, k] (rank p exists iff p < g)."""
+    r, j = rem.shape
+    w_i = jax.lax.broadcasted_iota(jnp.float32, (1, k, k), 1)
+    p_i = jax.lax.broadcasted_iota(jnp.float32, (1, k, k), 2)
+    g3 = g[:, :, None]                                  # [R, 1, 1]
+    act = (p_i >= w_i) & (p_i < g3)
+    a_mat = _fig8_rates(p_i, p_i - w_i, act, g3 - w_i, mips[:, :, None],
+                        npe_e[:, :, None], pol[:, :, None])
+    p1 = jax.lax.broadcasted_iota(jnp.float32, (r, k), 1)
+    has = p1 < g                                        # [R, k]
+    srems, scols = [], []
+    for p in range(k):
+        head = valid & (rank == p)
+        srems.append(jnp.sum(jnp.where(head, rem, 0.0), axis=1,
+                             keepdims=True))
+        scols.append(jnp.sum(jnp.where(head, col, 0), axis=1,
+                             keepdims=True))
+    return (a_mat, jnp.concatenate(srems, axis=1),
+            jnp.concatenate(scols, axis=1), has)
+
+
+def _wave_matrices(a_mat, srem, k):
+    """The k homogeneous wave matrices as a list of [R, k+1, k+1].
+
+    Entries are clipped to the finite +-BIG range: a zero-rate head
+    (mips 0 under full calendar load) divides by the 1e-30 guard like
+    the sequential path, and an inf entry would poison unrelated rows
+    of the product with 0 * inf = nan.
+    """
+    row = jax.lax.broadcasted_iota(jnp.int32, (1, k + 1, k + 1), 1)
+    colx = jax.lax.broadcasted_iota(jnp.int32, (1, k + 1, k + 1), 2)
+    eye = (row == colx).astype(jnp.float32)
+    v_i = jax.lax.broadcasted_iota(jnp.float32, (1, k), 1)
+    mats = []
+    for p in range(k):
+        d = jnp.maximum(a_mat[:, p, p], 1e-30)[:, None]      # [R, 1]
+        coeff = jnp.where(v_i < p, -a_mat[:, :, p] / d, 0.0)  # [R, k]
+        rowvals = jnp.clip(
+            jnp.concatenate([coeff, srem[:, p:p + 1] / d], axis=1),
+            -BIG, BIG)                                       # [R, k+1]
+        mats.append(jnp.where(row == p, rowvals[:, None, :], eye))
+    return mats
+
+
+def _slab_waves_assoc(rem, rank, valid, g, mips, npe_e, pol, col, k,
+                      *, tree=False):
+    """Associative-scan evaluation of :func:`_slab_waves` -- same
+    signature and (t_wave, col_wave) contract, O(log k) dependent
+    steps.  ``tree=True`` composes via a balanced static product tree
+    (the Pallas kernel body); the default routes through
+    ``jax.lax.associative_scan``.
+    """
+    r, j = rem.shape
+    a_mat, srem, scol, has = _slab_assoc_inputs(
+        rem, rank, valid, g, mips, npe_e, pol, col, k)
+    mats = _wave_matrices(a_mat, srem, k)
+    if tree:
+        # balanced static product tree; identity padding keeps pairs
+        # whole (built from broadcasted_iota -- Mosaic-safe, no 1D iota)
+        row = jax.lax.broadcasted_iota(jnp.int32, (1, k + 1, k + 1), 1)
+        colx = jax.lax.broadcasted_iota(jnp.int32, (1, k + 1, k + 1), 2)
+        eye = (row == colx).astype(jnp.float32)
+        while len(mats) > 1:
+            if len(mats) % 2:
+                mats.append(eye)
+            mats = [_compose_waves(mats[i], mats[i + 1])
+                    for i in range(0, len(mats), 2)]
+        comp = mats[0]
+    else:
+        stacked = jnp.stack(mats, axis=0)        # [k, R, k+1, k+1]
+        comp = jax.lax.associative_scan(_compose_waves, stacked)[-1]
+    dt = jnp.maximum(jnp.where(has, comp[:, :k, k], 0.0), 0.0)
+    t_wave = jnp.where(has, jnp.cumsum(dt, axis=1), BIG)
+    col_wave = jnp.where(has, scol, j).astype(jnp.int32)
+    return t_wave, col_wave
+
+
 def _slab_kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
-                 blocked_ref, ok_ref, t_ref, col_ref, *, k):
+                 blocked_ref, ok_ref, t_ref, col_ref, *, k, assoc):
     rem = remaining_ref[...]
     tie = tie_ref[...]
     mips = mips_ref[...]
@@ -495,14 +620,20 @@ def _slab_kernel(remaining_ref, tie_ref, mips_ref, pe_ref, policy_ref,
     # bitonic by the static padded width (see _kernel_rank)
     rank, _, _ = _kernel_rank(rem, tie, valid)
     col = jax.lax.broadcasted_iota(jnp.int32, (r, j), 1)
-    t_w, col_w = _slab_waves(rem, rank, valid, g, mips, npe_e, pol, col, k)
+    if assoc:
+        t_w, col_w = _slab_waves_assoc(rem, rank, valid, g, mips, npe_e,
+                                       pol, col, k, tree=True)
+    else:
+        t_w, col_w = _slab_waves(rem, rank, valid, g, mips, npe_e, pol,
+                                 col, k)
     t_ref[...] = t_w
     col_ref[...] = col_w
 
 
 def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
                     pe_blocked=None, row_ok=None, live=None, *,
-                    block_r: int = 8, interpret: bool = False):
+                    block_r: int = 8, interpret: bool = False,
+                    assoc: bool = True):
     """Forecast each row's next ``k`` completions in one kernel call.
 
     Same inputs/masking as :func:`event_scan` plus the static slab depth
@@ -525,6 +656,13 @@ def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
     exists.  The [R_pad, J] state stays resident in VMEM across all k
     waves -- one rank pass amortised over the slab, instead of 3
     segmented sorts per superstep.
+
+    ``assoc`` (static, default True) evaluates the waves through the
+    associative wave-compose operator (O(log k) dependent steps, a
+    balanced product tree in-kernel); ``assoc=False`` keeps the
+    sequential k-step recurrence as the reference path.  Wave 0 is
+    bitwise identical between the two; later waves agree to rounding
+    (the same final values through a different summation order).
     """
     r, j = remaining.shape
     remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
@@ -537,7 +675,7 @@ def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
     assert k >= 1
 
     t_w, col_w = pl.pallas_call(
-        functools.partial(_slab_kernel, k=k),
+        functools.partial(_slab_kernel, k=k, assoc=assoc),
         grid=(r // block_r,),
         in_specs=[
             pl.BlockSpec((block_r, j_pad), lambda i: (i, 0)),
@@ -570,10 +708,13 @@ def event_scan_slab(remaining, mips_eff, num_pe, k, tie=None, policy=None,
 
 def event_scan_slab_xla(remaining, mips_eff, num_pe, k, tie=None,
                         policy=None, pe_blocked=None, row_ok=None,
-                        live=None):
+                        live=None, *, assoc: bool = True):
     """Vectorised jnp fallback for :func:`event_scan_slab` -- identical
-    wave arithmetic (shared ``_slab_waves``), with the kernel's O(J^2)
-    pairwise rank replaced by one O(J log J) lexsort."""
+    wave arithmetic, with the kernel's O(J^2) pairwise rank replaced by
+    one O(J log J) lexsort.  ``assoc`` (default True) evaluates the
+    waves through ``jax.lax.associative_scan`` over the homogeneous
+    wave matrices; ``assoc=False`` runs the sequential recurrence
+    (shared ``_slab_waves``)."""
     r, j = remaining.shape
     remaining, tie, policy, pe_blocked, row_ok = _default_inputs(
         remaining, tie, policy, pe_blocked, row_ok)
@@ -588,7 +729,8 @@ def event_scan_slab_xla(remaining, mips_eff, num_pe, k, tie=None,
     npe_e, valid, g = _row_masks(remaining, npe, pol, blk, ok)
     rank, _, _ = _lexsort_rank(remaining, tie, valid)
     col = jnp.broadcast_to(jnp.arange(j, dtype=jnp.int32)[None, :], (r, j))
-    return _slab_waves(remaining, rank, valid, g, mips, npe_e, pol, col, k)
+    waves = _slab_waves_assoc if assoc else _slab_waves
+    return waves(remaining, rank, valid, g, mips, npe_e, pol, col, k)
 
 
 # ----------------------------------------------------------------------

@@ -82,10 +82,12 @@ def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None,
                              with_rank=with_rank)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_r", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "block_r", "interpret",
+                                             "assoc"))
 def event_scan_slab(remaining, mips_eff, num_pe, k=8, tie=None,
                     policy=None, pe_blocked=None, row_ok=None,
-                    live=None, *, block_r=8, interpret=None):
+                    live=None, *, block_r=8, interpret=None,
+                    assoc=True):
     """Next-k completion forecast per resource row in one fused call
     (the TPU-target primitive behind the engine's k-step superstep
     batching; see kernels.event_scan.event_scan_slab for semantics).
@@ -98,17 +100,26 @@ def event_scan_slab(remaining, mips_eff, num_pe, k=8, tie=None,
     J-padded).  Routing mirrors :func:`event_scan`: compiled Pallas on
     TPU, the vectorised XLA fallback on CPU hosts, Pallas interpret
     mode only on request.
+
+    ``assoc`` (static, default True) evaluates the k waves through the
+    associative wave-compose operator -- ``jax.lax.associative_scan``
+    on the XLA path, a balanced product tree in-kernel -- for O(log k)
+    dependent steps; ``assoc=False`` keeps the sequential k-step
+    recurrence (the reference path the differential tests pin the scan
+    against).  Wave 0 is bitwise identical either way.
     """
     if interpret is None and jax.default_backend() != "tpu":
         return _event.event_scan_slab_xla(remaining, mips_eff, num_pe, k,
                                           tie=tie, policy=policy,
                                           pe_blocked=pe_blocked,
-                                          row_ok=row_ok, live=live)
+                                          row_ok=row_ok, live=live,
+                                          assoc=assoc)
     return _event.event_scan_slab(remaining, mips_eff, num_pe, k,
                                   tie=tie, policy=policy,
                                   pe_blocked=pe_blocked, row_ok=row_ok,
                                   live=live, block_r=block_r,
-                                  interpret=_auto_interpret(interpret))
+                                  interpret=_auto_interpret(interpret),
+                                  assoc=assoc)
 
 
 @functools.partial(jax.jit, static_argnames=("block_l", "interpret"))

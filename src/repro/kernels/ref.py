@@ -194,6 +194,74 @@ def event_scan_slab_ref(remaining, mips_eff, num_pe, k, tie=None,
             jnp.asarray(col_out, jnp.int32))
 
 
+def event_scan_slab_assoc_ref(remaining, mips_eff, num_pe, k, tie=None,
+                              policy=None, pe_blocked=None, row_ok=None,
+                              live=None):
+    """Float64 forward-substitution oracle of the associative slab
+    operator (kernels.event_scan._slab_waves_assoc).
+
+    The slab is a lower-triangular linear system per row: with A[w, p]
+    the Fig 8 rate of the rank-p job during wave w (rank/count math
+    only -- never the remaining work) and srem[p] the rank-p job's
+    remaining MI, the head intervals satisfy
+
+        dt_p = (srem_p - sum_{v<p} A[v, p] dt_v) / A[p, p]
+
+    solved here by direct numpy forward substitution in float64 --
+    an independent evaluation order from both the sequential wave
+    recurrence and the matrix-compose scan.  Returns the usual
+    (t_wave f32[R, k] BIG-padded, col_wave i32[R, k] J-padded).
+    """
+    import numpy as np
+    big = 3.0e38
+    rem = np.asarray(remaining, np.float64)
+    r_n, j_n = rem.shape
+    mips = np.asarray(mips_eff, np.float64)
+    npe = np.asarray(num_pe, np.float64)
+    pol = (np.zeros(r_n) if policy is None
+           else np.asarray(policy, np.float64))
+    blk = (np.zeros(r_n) if pe_blocked is None
+           else np.asarray(pe_blocked, np.float64))
+    ok = (np.ones(r_n) if row_ok is None
+          else np.asarray(row_ok, np.float64))
+    if live is not None:
+        ok = ok * float(bool(live))
+    if tie is None:
+        tie = np.broadcast_to(np.arange(j_n, dtype=np.float64),
+                              (r_n, j_n))
+    else:
+        tie = np.asarray(tie, np.float64)
+
+    def fig8_rate(r, rank, g):
+        pe = max(npe[r] - blk[r], 0.0)
+        if pol[r] > 0.5 or g <= pe:
+            return mips[r]
+        kk = np.floor(g / max(pe, 1.0))
+        extra = g - kk * max(pe, 1.0)
+        msc = (pe - extra) * kk
+        div = kk + (1.0 if rank >= msc else 0.0)
+        return mips[r] / max(div, 1.0)
+
+    t_out = np.full((r_n, k), big)
+    col_out = np.full((r_n, k), j_n, np.int32)
+    for r in range(r_n):
+        pe = npe[r] - blk[r]
+        dead = ok[r] < 0.5 or (pol[r] < 0.5 and pe < 0.5)
+        jobs = sorted((rem[r, j], tie[r, j], j) for j in range(j_n)
+                      if 0.0 < rem[r, j] < big and not dead)
+        g = len(jobs)
+        dt = np.zeros(min(g, k))
+        for p in range(min(g, k)):
+            srem_p = jobs[p][0]
+            acc = srem_p - sum(fig8_rate(r, p - v, g - v) * dt[v]
+                               for v in range(p))
+            dt[p] = max(acc, 0.0) / max(fig8_rate(r, 0.0, g - p), 1e-30)
+            t_out[r, p] = dt[:p + 1].sum()
+            col_out[r, p] = jobs[p][2]
+    return (jnp.asarray(t_out, jnp.float32),
+            jnp.asarray(col_out, jnp.int32))
+
+
 def link_scan_ref(remaining, baud, bg=None, tie=None):
     """Fair-share link scan, directly transcribed per link row.
 

@@ -392,3 +392,101 @@ def test_event_frontier_tpu_lane_shapes():
     # t_safe only sees horizon-cutting candidates
     t_star, fired, counts, t_safe, mins = fr
     assert float(t_safe) >= float(t_star)
+
+
+# ------------------------------------------------------------------
+# associative-scan slab: operator property, 3-way agreement, lowering
+# ------------------------------------------------------------------
+def _random_wave_matrix(rng, k, dtype):
+    """A random wave-compose operand: identity except one row, like the
+    matrices _wave_matrices emits (last row stays [0..0 1])."""
+    m = np.eye(k + 1, dtype=dtype)
+    p = rng.randint(0, k)
+    m[p, :] = 0.0
+    m[p, :p] = rng.uniform(-3.0, 0.0, p)
+    m[p, k] = rng.uniform(0.0, 50.0)
+    return m
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), k=st.sampled_from([2, 4, 8]))
+def test_wave_compose_operator_is_associative(seed, k):
+    """The wave-compose operator (matrix product of homogeneous wave
+    updates) is exactly associative in f64 and associative to matmul
+    rounding in f32 -- the property jax.lax.associative_scan and the
+    in-kernel product tree rely on to regroup the k waves freely."""
+    rng = np.random.RandomState(seed)
+    a64, b64, c64 = (_random_wave_matrix(rng, k, np.float64)
+                     for _ in range(3))
+    # exact-precision leg: the operator's definition (compose(a, b) =
+    # b @ a) mirrored in float64 numpy -- jnp would demote to f32
+    left = c64 @ (b64 @ a64)
+    right = (c64 @ b64) @ a64
+    np.testing.assert_allclose(left, right, rtol=1e-12, atol=1e-12)
+    comp = event_scan_mod._compose_waves
+    a, b, c = (x.astype(np.float32) for x in (a64, b64, c64))
+    np.testing.assert_allclose(
+        np.asarray(comp(comp(jnp.asarray(a), jnp.asarray(b)),
+                        jnp.asarray(c))),
+        np.asarray(comp(jnp.asarray(a),
+                        comp(jnp.asarray(b), jnp.asarray(c)))),
+        rtol=2e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 999), j=st.sampled_from([100, 512, 1024]),
+       k=st.sampled_from([1, 4, 8]))
+def test_event_scan_slab_assoc_three_way_agreement(seed, j, k):
+    """Associative slab tri-implementation at engine widths: Pallas
+    interpret (balanced product tree), the XLA associative_scan path,
+    the sequential recurrence and the float64 forward-substitution
+    oracle all agree -- J = 512/1024 route the rank through the bitonic
+    network, J = 100 through the pairwise path."""
+    remaining, mips, pes, kw = _random_slab_case(seed, j=j)
+    jkw = {a: jnp.asarray(v) for a, v in kw.items()}
+    args = (jnp.asarray(remaining), jnp.asarray(mips), jnp.asarray(pes))
+    pallas_out = ops.event_scan_slab(*args, k, **jkw, interpret=True,
+                                     assoc=True)
+    xla_out = ops.event_scan_slab(*args, k, **jkw, assoc=True)
+    seq_out = ops.event_scan_slab(*args, k, **jkw, assoc=False)
+    ref_out = ref.event_scan_slab_assoc_ref(remaining, mips, pes, k,
+                                            **kw)
+    for got, name in ((xla_out, "xla-assoc"), (seq_out, "sequential"),
+                      (ref_out, "oracle")):
+        np.testing.assert_allclose(
+            np.asarray(pallas_out[0]), np.asarray(got[0]), rtol=2e-3,
+            atol=1e-3, err_msg=f"t_wave vs {name}")
+        assert np.array_equal(np.asarray(pallas_out[1]),
+                              np.asarray(got[1])), f"col_wave vs {name}"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_event_scan_slab_assoc_wave0_bitwise(seed):
+    """Wave 0 must be BITWISE identical between the associative and
+    sequential paths (identity prefix rows compose exactly), which is
+    what lets the engine treat the two as interchangeable for the
+    single-wave forecasts its micro-steps consume."""
+    remaining, mips, pes, kw = _random_slab_case(seed)
+    jkw = {a: jnp.asarray(v) for a, v in kw.items()}
+    args = (jnp.asarray(remaining), jnp.asarray(mips), jnp.asarray(pes))
+    t_a, col_a = ops.event_scan_slab(*args, 6, **jkw, assoc=True)
+    t_s, col_s = ops.event_scan_slab(*args, 6, **jkw, assoc=False)
+    assert np.array_equal(np.asarray(t_a[:, 0]), np.asarray(t_s[:, 0]))
+    assert np.array_equal(np.asarray(col_a), np.asarray(col_s))
+    # later waves agree to compose rounding; padding stays exact BIG/J
+    np.testing.assert_allclose(np.asarray(t_a), np.asarray(t_s),
+                               rtol=2e-3, atol=1e-3)
+
+
+def test_event_scan_slab_assoc_lowers_for_tpu_shapes():
+    """Both slab formulations trace/lower at fleet scale (R=256, J=128,
+    k=8) and at the wide bitonic widths J = 512/1024."""
+    for j in (128, 512, 1024):
+        rem = jax.ShapeDtypeStruct((256, j), jnp.float32)
+        v = jax.ShapeDtypeStruct((256,), jnp.float32)
+        for assoc in (True, False):
+            jax.eval_shape(
+                lambda a, m, p, assoc=assoc: ops.event_scan_slab(
+                    a, m, p, 8, interpret=True, assoc=assoc),
+                rem, v, v)

@@ -419,3 +419,65 @@ def test_maintenance_book_method_conflicts():
     res = book.book_maintenance(1, 0.0, 5.0)
     assert res.pes == 2
     assert book.reserved_pes(1, 2.0) == 2
+
+
+def test_fastest_drain_membership_invariant_bound():
+    """fastest_drain is the sole-member (fastest possible) drain time:
+    it lower-bounds the actual fair-share drain for every occupancy m
+    and never decreases when members join, with transfer_delay's exact
+    clamping at the edges."""
+    fd = network.fastest_drain
+    # m members at baud/(m+bg): actual drain m*(..) >= bound for m >= 1
+    for m in (1, 2, 7):
+        for bg in (0.0, 1.0, 2.5):
+            actual = 1e5 * (m + bg) / 9600.0
+            assert actual >= float(fd(1e5, 9600.0, bg)) - 1e-3
+    assert float(fd(1e5, 9600.0, 0.0)) == pytest.approx(1e5 / 9600.0)
+    assert float(fd(0.0, 9600.0, 1.0)) == 0.0       # empty payload
+    assert float(fd(1e5, jnp.inf, 1.0)) == 0.0      # infinite link
+    d_dead = float(fd(1e5, 0.0, 1.0))               # dead link: never
+    assert np.isfinite(d_dead) and d_dead >= 1e30
+    assert float(fd(1e38, 1e-30, 9.0)) == \
+        float(np.float32(network.BIG))              # overflow -> BIG
+
+
+def test_golden_net_trace_pinned_across_batch():
+    """The contended engine_20u_100j_net BENCH row replays the
+    committed golden trace bitwise -- times, kinds, actors, per-gridlet
+    returns, spend, termination -- at batch=1 AND the default batch, so
+    network-slab changes (the associative-scan carry-through) can never
+    silently reorder events."""
+    import json
+    import os
+    with open(os.path.join(os.path.dirname(__file__), "data",
+                           "golden_net_20u.json")) as f:
+        gold = json.load(f)
+    fleet = resource.wwg_fleet()
+    g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=100, n_users=20,
+                          in_bytes=200_000.0, out_bytes=100_000.0)
+    sc = simulation.Scenario(baud_rate=28_000.0, bg_flows=1.0)
+    params = simulation._scenario_params(fleet, 2000.0, 22000.0,
+                                         types.OPT_COST, 20, sc)
+    net_cap = simulation.safe_net_cap(g, params, fleet, 20)
+    max_jobs = simulation.safe_max_jobs(g, params, fleet)
+    for batch in (1, None):
+        kw = {} if batch is None else dict(batch=batch)
+        r = engine.run(g, fleet, params, 20, 16384, max_jobs=max_jobs,
+                       net_cap=net_cap, **kw)
+        tt, kind, who = (np.asarray(x) for x in r.trace)
+        m = kind >= 0
+        assert np.array_equal(tt[m],
+                              np.asarray(gold["trace_t"], np.float32))
+        assert np.array_equal(kind[m], np.asarray(gold["trace_kind"]))
+        assert np.array_equal(who[m], np.asarray(gold["trace_who"]))
+        assert np.array_equal(
+            np.asarray(r.gridlets.returned),
+            np.asarray(gold["returned"], np.float32))
+        assert np.array_equal(np.asarray(r.spent),
+                              np.asarray(gold["spent"], np.float32))
+        assert np.array_equal(np.asarray(r.term_time),
+                              np.asarray(gold["term_time"], np.float32))
+        assert int(np.asarray(r.n_events)) == gold["n_events"]
+        assert int(np.asarray(r.overflow)) == gold["overflow"]
+        assert int((np.asarray(r.gridlets.status)
+                    == types.DONE).sum()) == gold["n_done"]
