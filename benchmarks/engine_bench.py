@@ -23,8 +23,8 @@ cell is additionally compared against the recorded pre-superstep engine
 (tests/data/golden_pre_refactor.json): results must stay identical
 while while-loop iterations keep shrinking (``iteration_ratio``).
 
-Two microbench sections ride along under the ``_`` prefix (skipped by
-the per-scenario renderer columns, rendered as their own tables):
+Three microbench sections ride along under the ``_`` prefix (skipped
+by the per-scenario renderer columns, rendered as their own tables):
 
 * ``_rank_crossover`` -- XLA-compiled wall-clock of the three exact
   in-kernel ranking algorithms (pairwise O(J^2), bitonic O(J log^2 J),
@@ -41,7 +41,13 @@ the per-scenario renderer columns, rendered as their own tables):
   ``simulation.sweep_sharded`` in subprocesses at
   ``--xla_force_host_platform_device_count`` 1 vs 2 on a
   heterogeneous-run-length grid (short-deadline lanes grouped on one
-  device stop costing while-loop iterations on the other).
+  device stop costing while-loop iterations on the other);
+* ``_strategy_sweep`` -- the economic-broker section: the four DBC
+  strategies plus the commodity/auction pricing models and plan-ahead
+  dispatch as lanes of one ``engine.run_sweep_lanes`` call, with
+  CI-gated ``strategy_identical`` (every lane bitwise equal to its
+  ``engine.run(batch=1)`` reference) and ``table1_ordering`` (cost-min
+  spends no more than time-min; time-min finishes no later) bits.
 
 The module enables the JAX persistent compilation cache
 (``jax_compilation_cache_dir``; override the directory with the
@@ -342,6 +348,87 @@ def _sweep_bench():
     return out
 
 
+def _strategy_sweep():
+    """The economic-broker section: every DBC strategy and pricing
+    model as a ``Scenario`` lane of ONE ``engine.run_sweep_lanes``
+    call -- the Table-1 experiment (strategy x deadline/budget) on the
+    lane-batched engine.  Seven lanes: the four broker optimisations
+    under static pricing, then the cost optimiser under commodity
+    repricing, sealed-bid auctions and plan-ahead (cs/0203020)
+    dispatch.
+
+    Two gate bits ride into CI like the sweep gates:
+
+    * ``strategy_identical`` -- every lane is bitwise identical (all
+      "what" fields) to its own ``engine.run(batch=1)`` reference, so
+      the policy/pricing axis rides the select-free lane machinery
+      without changing a single event;
+    * ``table1_ordering`` -- the paper's qualitative result holds:
+      cost-minimisation spends no more than time-minimisation, and
+      time-minimisation finishes no later than cost-minimisation.
+    """
+    fleet = resource.wwg_fleet()
+    n_users = 20
+    g = gridlet.task_farm(jax.random.PRNGKey(3), n_jobs=25,
+                          n_users=n_users)
+    deadline, budget = 2000.0, 22000.0
+    max_events = simulation._max_events(g.n, n_users, deadline, 1.0)
+    lanes_sc = (
+        ("cost", simulation.Scenario(policy=types.OPT_COST)),
+        ("time", simulation.Scenario(policy=types.OPT_TIME)),
+        ("cost_time", simulation.Scenario(policy=types.OPT_COST_TIME)),
+        ("none", simulation.Scenario(policy=types.OPT_NONE)),
+        ("cost_commodity", simulation.Scenario(
+            policy=types.OPT_COST, pricing_model="commodity",
+            market_period=60.0, market_gain=0.25)),
+        ("cost_auction", simulation.Scenario(
+            policy=types.OPT_COST, pricing_model="auction",
+            auction_period=60.0, seed=5)),
+        ("cost_plan", simulation.Scenario(policy=types.OPT_COST,
+                                          plan_ahead=True)),
+    )
+    ps = [simulation._scenario_params(fleet, deadline, budget,
+                                      types.OPT_COST, n_users, sc)
+          for _, sc in lanes_sc]
+    p_lanes = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+    f = jax.jit(lambda pp: engine.run_sweep_lanes(
+        g, fleet, pp, n_users, max_events, batch=engine.DEFAULT_BATCH))
+    t0 = time.perf_counter()
+    r = f(p_lanes)
+    jax.block_until_ready(r.spent)
+    first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r = f(p_lanes)
+    jax.block_until_ready(r.spent)
+    wall = time.perf_counter() - t0
+    out = {"grid": f"20u/25j wwg, 7 policy/pricing lanes, "
+                   f"deadline={deadline:.0f} budget={budget:.0f}",
+           "wall_s": wall, "compile_s": max(first - wall, 0.0),
+           "batch": engine.DEFAULT_BATCH, "lanes": {}}
+    identical = True
+    for i, (name, _) in enumerate(lanes_sc):
+        ref = engine.run(
+            g, fleet, jax.tree_util.tree_map(lambda x: x[i], p_lanes),
+            n_users, max_events, batch=1)
+        lane = jax.tree_util.tree_map(lambda a: a[i], r)
+        identical = identical and _results_identical(ref, lane)
+        identical = identical and (int(np.asarray(ref.n_steps)) +
+                                   int(np.asarray(ref.n_spec))
+                                   < max_events)
+        out["lanes"][name] = {
+            "n_done": int((np.asarray(lane.gridlets.status)
+                           == types.DONE).sum()),
+            "finish_t": float(np.asarray(lane.term_time).max()),
+            "spent": float(np.asarray(lane.spent).sum()),
+        }
+    out["strategy_identical"] = bool(identical)
+    rows = out["lanes"]
+    out["table1_ordering"] = bool(
+        rows["cost"]["spent"] <= rows["time"]["spent"] and
+        rows["time"]["finish_t"] <= rows["cost"]["finish_t"])
+    return out
+
+
 def run():
     enable_compilation_cache()
     try:
@@ -453,6 +540,7 @@ def run():
 
     report["_rank_crossover"] = _rank_crossover()
     report["_sweep_bench"] = _sweep_bench()
+    report["_strategy_sweep"] = _strategy_sweep()
     out.append(("rank_crossover", 0.0,
                 " ".join(f"{k}:p{v['pairwise_o_j2']:.0f}us/"
                          f"b{v['bitonic_o_jlog2j']:.0f}us"
@@ -465,6 +553,12 @@ def run():
                 f"identical={sb['sweep_identical']} "
                 f"sharded={sb['sharded_identical']} "
                 f"2dev/1dev={ds.get('device_speedup', float('nan')):.2f}x"))
+    ss = report["_strategy_sweep"]
+    out.append(("strategy_sweep", ss["wall_s"] * 1e6,
+                f"7 lanes identical={ss['strategy_identical']} "
+                f"table1={ss['table1_ordering']} "
+                f"cost_spent={ss['lanes']['cost']['spent']:.0f} "
+                f"time_t={ss['lanes']['time']['finish_t']:.0f}"))
 
     with open(art_path("BENCH_engine.json"), "w") as f:
         json.dump(report, f, indent=1)

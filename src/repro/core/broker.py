@@ -33,9 +33,10 @@ job-slot table (a Gridlet's slot column is an engine implementation
 detail), which is what lets one broker event run inside a superstep at
 any point after completions and returns have been applied.  BROKER is
 the lowest-priority event kind in the engine's COMPLETION > FAILURE >
-RECOVERY > RESERVATION > NETWORK > RETURN > ARRIVAL > CALENDAR_STEP >
-BROKER tie-break: at an equal timestamp the broker observes every other
-batch's effects.
+RECOVERY > RESERVATION > MARKET > AUCTION > NETWORK > RETURN > ARRIVAL >
+CALENDAR_STEP > BROKER tie-break: at an equal timestamp the broker
+observes every other batch's effects -- including same-instant pricing
+rounds, so the trading metric below always reads fresh posted prices.
 
 The measurement in step 2 counts fractional progress of in-flight jobs so
 the estimate ramps smoothly from the advertised rate to the observed share
@@ -61,7 +62,7 @@ from . import calendar, network
 from . import reservation as resv_mod
 
 
-def _policy_keys(opt, cost_per_mi, est_rate, r_index):
+def _policy_keys(opt, cost_per_mi, est_rate, r_index, plan_ahead=False):
     """Composite per-resource ordering key for each optimisation mode.
 
     cost: cheapest G$/MI first (ties by index, paper Fig 20 step 4);
@@ -69,14 +70,30 @@ def _policy_keys(opt, cost_per_mi, est_rate, r_index):
     cost-time: cheapest first, equal-cost resources ordered fastest-first
                (the [23] variant -- same-cost pools scheduled for time);
     none: resource index order.
+
+    ``plan_ahead`` switches cost-time to the full cs/0203020 algorithm:
+    resources are partitioned into *exact* equal-cost groups (a dense
+    rank of the G$/MI metric, so two resources share a group iff their
+    costs are bit-equal) and each group is ordered fastest-first.  The
+    legacy key approximates the same ordering with a fixed 1e-4 rate
+    nudge, which can jump a near-tie cost gap; the grouped key cannot
+    -- group ranks differ by >= 1 and the within-group term is < 1.
     """
     shape = est_rate.shape
     est_norm = est_rate / jnp.maximum(est_rate.max(axis=-1, keepdims=True),
                                       1e-30)
     key_cost = jnp.broadcast_to(cost_per_mi + 1e-7 * r_index, shape)
     key_time = -est_rate + 1e-7 * r_index
-    key_cost_time = jnp.broadcast_to(cost_per_mi, shape) - 1e-4 * est_norm \
-        + 1e-7 * r_index
+    key_ct_legacy = jnp.broadcast_to(cost_per_mi, shape) \
+        - 1e-4 * est_norm + 1e-7 * r_index
+    # Dense cost rank: #resources strictly cheaper == group id; the
+    # within-group term spans [0, 0.5] + eps so it never crosses the
+    # unit gap between adjacent groups.
+    cost = jnp.broadcast_to(cost_per_mi, shape)
+    grp = jnp.sum((cost[..., None, :] < cost[..., :, None]),
+                  axis=-1).astype(jnp.float32)
+    key_ct_plan = grp + (1.0 - est_norm) * 0.5 + 1e-7 * r_index
+    key_cost_time = jnp.where(plan_ahead, key_ct_plan, key_ct_legacy)
     key_none = jnp.broadcast_to(r_index * 1.0, shape)
     return jnp.select(
         [opt[:, None] == OPT_COST, opt[:, None] == OPT_TIME,
@@ -84,16 +101,19 @@ def _policy_keys(opt, cost_per_mi, est_rate, r_index):
         [key_cost, key_time, key_cost_time, key_none])
 
 
-def min_affordable_cost(g, fleet, n_users: int):
+def min_affordable_cost(g, fleet, n_users: int, price=None):
     """Cheapest possible next purchase per user: the smallest
     still-undispatched (CREATED, or FAILED awaiting resubmission)
     Gridlet priced at the best G$/MI.  +inf when nothing is left to
-    dispatch."""
+    dispatch.  ``price`` overrides the advertised G$/MI metric with the
+    grid's posted per-MI prices (SimState.price) under dynamic
+    pricing."""
     undispatched = (g.status == CREATED) | (g.status == FAILED)
     min_mi = jax.ops.segment_min(
         jnp.where(undispatched, g.length_mi, INF), g.user,
         num_segments=n_users)
-    return min_mi * (fleet.cost_per_sec / fleet.mips_per_pe).min()
+    per_mi = fleet.cost_per_mi() if price is None else price
+    return min_mi * per_mi.min()
 
 
 def _measure(state, fleet, params, n_users: int):
@@ -109,9 +129,18 @@ def _measure(state, fleet, params, n_users: int):
                                    params.resv_start, params.resv_end,
                                    t, R)
     eff = calendar.effective_mips(fleet, t)                      # [R]
-    adv_rate = eff * jnp.maximum(fleet.num_pe - reserved,
-                                 0).astype(jnp.float32)          # MIPS
-    cost_per_mi = fleet.cost_per_sec / fleet.mips_per_pe         # [R]
+    # Plan-ahead (cs/0203020) advertises the FULL PE count here and
+    # prices the reservation windows into the capacity integral below
+    # instead; the legacy reactive broker subtracts currently-reserved
+    # PEs from the advertised rate (and so re-discovers each window
+    # only while it is open).
+    plan = params.plan_ahead
+    adv_rate = eff * jnp.maximum(
+        fleet.num_pe - jnp.where(plan, 0, reserved),
+        0).astype(jnp.float32)                                   # MIPS
+    # Trading (Table 2 metric) off the POSTED per-MI price: bitwise
+    # fleet.cost_per_mi() until a pricing round moves it.
+    cost_per_mi = state.price                                    # [R]
 
     ones = jnp.ones((g.n,), jnp.float32)
     cnt_per_user = jax.ops.segment_sum(ones, u_idx, num_segments=n_users)
@@ -137,10 +166,44 @@ def _measure(state, fleet, params, n_users: int):
     est_jobs = jnp.where(registered[None, :], est_jobs, 0.0)     # [U,R]
 
     time_left = jnp.maximum(params.deadline - t, 0.0)            # [U]
-    cap_jobs = jnp.floor(est_jobs * time_left[:, None]).astype(jnp.int32)
+    cap_legacy = jnp.floor(est_jobs * time_left[:, None]).astype(jnp.int32)
+
+    # ---- plan-ahead capacity (cs/0203020) ----------------------------
+    # (a) Reservation windows: integrate the PE-time each window blocks
+    # over [t, deadline_u] and convert it to jobs-equivalent at the
+    # current calendar rate -- the capacity those windows will remove
+    # before the deadline, charged NOW rather than rediscovered when
+    # the window opens.
+    dl = params.deadline                                         # [U]
+    ov = jnp.clip(jnp.minimum(params.resv_end[None, :], dl[:, None]) -
+                  jnp.maximum(params.resv_start[None, :], t),
+                  0.0, None)                                     # [U,K]
+    onehot = (params.resv_res[None, :] ==
+              jnp.arange(R, dtype=params.resv_res.dtype)[:, None])
+    blocked_pe_time = jnp.einsum(
+        "uk,rk->ur", params.resv_pes.astype(jnp.float32)[None, :] * ov,
+        onehot.astype(jnp.float32))                              # [U,R]
+    blocked_jobs = blocked_pe_time * eff[None, :] / \
+        jnp.maximum(avg_mi[:, None], 1e-30)
+    # (b) Link queueing: bytes already queued on each resource's link
+    # bound the earliest a fresh dispatch can even START computing
+    # (fastest_drain is the membership-invariant per-transfer bound),
+    # so plan-ahead buys capacity only over the post-drain window.
+    if state.link_rem.shape[1] > 0:
+        link_delay = network.fastest_drain(
+            state.link_rem[:R].sum(axis=1), params.link_baud,
+            params.bg_flows)                                     # [R]
+    else:
+        link_delay = jnp.zeros((R,), jnp.float32)
+    cap_plan = jnp.floor(jnp.maximum(
+        est_jobs * jnp.maximum(time_left[:, None] - link_delay[None, :],
+                               0.0) - blocked_jobs,
+        0.0)).astype(jnp.int32)
+    cap_jobs = jnp.where(plan, cap_plan, cap_legacy)
 
     active = ((t < params.deadline) &
-              (state.spent + min_affordable_cost(g, fleet, n_users)
+              (state.spent + min_affordable_cost(g, fleet, n_users,
+                                                 price=state.price)
                <= params.budget))
 
     return dict(registered=registered, cost_per_mi=cost_per_mi,
@@ -195,7 +258,8 @@ def _assign(state, ctx, assigned, n_committed, params, n_users: int,
                               0.0)
 
     keys = _policy_keys(params.opt, cost_per_mi[None, :], ctx["est_jobs"],
-                        jnp.arange(R, dtype=jnp.float32)[None, :])
+                        jnp.arange(R, dtype=jnp.float32)[None, :],
+                        plan_ahead=params.plan_ahead)
     keys = jnp.where(registered[None, :], keys, INF)
     order = jnp.argsort(keys, axis=-1)                           # [U,R]
     inv_order = jnp.zeros_like(order).at[

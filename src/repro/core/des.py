@@ -40,8 +40,9 @@ with
     also its rank in the fixed tie-break priority order
     ``PRIORITY_ORDER``:
 
-        COMPLETION > FAILURE > RECOVERY > RESERVATION > NETWORK
-                   > RETURN > ARRIVAL > CALENDAR_STEP > BROKER
+        COMPLETION > FAILURE > RECOVERY > RESERVATION > MARKET
+                   > AUCTION > NETWORK > RETURN > ARRIVAL
+                   > CALENDAR_STEP > BROKER
 
   * ``candidates(state) -> f32[C]`` -- the source's pending instants as
     a fixed-shape vector of absolute times, ``+inf`` where nothing is
@@ -151,20 +152,30 @@ K_RESERVATION = 6   # advance-reservation window opens/closes
 K_CALENDAR = 7      # local load calendar step (weekend boundary)
 K_NETWORK = 8       # fair-share link event: a transfer completes its
                     # last byte, or a staged transfer enters its link
+K_MARKET = 9        # commodity-market repricing round (posted-price
+                    # adjustment from demand; economy.commodity_reprice)
+K_AUCTION = 10      # sealed-bid auction/tender round (economy.
+                    # auction_round; PRNG-keyed, see the masked contract)
 
 # Tie-break order among sources due at the same instant.  NETWORK sits
-# between RESERVATION and RETURN: a transfer that drains at t* releases
-# its Gridlet's pending RETURN/ARRIVAL instant to t*, so the release
-# must be applied before those sources collect their due batches (the
-# released events then fold into the same superstep, exactly like the
-# zero-delay analytic transfers always have).  Application order inside
-# a superstep differs from this ranking in exactly one place: the
-# engine applies BROKER before ARRIVAL so the broker's zero-delay
-# dispatches arrive within the same superstep, while ARRIVAL keeps
-# semantic priority (pre-broker arrivals hold admission precedence --
-# see engine._apply_arrivals).
+# between the pricing rounds and RETURN: a transfer that drains at t*
+# releases its Gridlet's pending RETURN/ARRIVAL instant to t*, so the
+# release must be applied before those sources collect their due
+# batches (the released events then fold into the same superstep,
+# exactly like the zero-delay analytic transfers always have).  MARKET
+# and AUCTION sit with the other resource-state changes, crucially
+# ABOVE BROKER -- a broker poll sharing an instant with a repricing
+# round must observe the new posted prices (the engine's in-superstep
+# application order moves only BROKER, so any rank above ARRIVAL keeps
+# the pricing rounds ahead of the broker's dispatch batch).
+# Application order inside a superstep differs from this ranking in
+# exactly one place: the engine applies BROKER before ARRIVAL so the
+# broker's zero-delay dispatches arrive within the same superstep,
+# while ARRIVAL keeps semantic priority (pre-broker arrivals hold
+# admission precedence -- see engine._apply_arrivals).
 PRIORITY_ORDER = (K_COMPLETION, K_FAILURE, K_RECOVERY, K_RESERVATION,
-                  K_NETWORK, K_RETURN, K_ARRIVAL, K_CALENDAR, K_BROKER)
+                  K_MARKET, K_AUCTION, K_NETWORK, K_RETURN, K_ARRIVAL,
+                  K_CALENDAR, K_BROKER)
 
 
 def no_interference(state, t_max) -> jax.Array:

@@ -169,6 +169,7 @@ import jax.numpy as jnp
 
 from . import broker as broker_mod
 from . import calendar, des, network, rand
+from . import economy as econ_mod
 from . import reservation as resv_mod
 from ..kernels import event_scan as _event_kernels
 from ..kernels import ops as kernel_ops
@@ -206,13 +207,31 @@ class SimParams:
     bg_flows: jax.Array        # f32[R] phantom background flows riding
                                #     each link (net mode; may be
                                #     fractional)
+    pricing_model: jax.Array   # i32[] economy.PRICE_* (0 = static --
+                               #     both pricing sources inert)
+    market_period: jax.Array   # f32[] commodity repricing period
+    market_gain: jax.Array     # f32[] posted-price adjustment rate per
+                               #     unit of excess demand
+    price_floor: jax.Array     # f32[] posted-price clamp, x base price
+    price_cap: jax.Array       # f32[] posted-price clamp, x base price
+    auction_period: jax.Array  # f32[] sealed-bid auction round period
+    auction_key: jax.Array     # PRNG key seeding the bid draws
+    plan_ahead: jax.Array      # bool[] plan-ahead DBC dispatch: price
+                               #     reservation windows + link queueing
+                               #     into the capacity estimates and run
+                               #     the exact cost-time grouping
+                               #     (cs/0203020) -- see broker._measure
 
 
 def default_params(deadline, budget, opt, n_users: int,
                    n_resources: int = 1, registered=None, mtbf=None,
                    mttr=None, reservations=None,
                    fail_key=None, link_baud=None,
-                   bg_flows=None) -> SimParams:
+                   bg_flows=None, pricing_model=econ_mod.PRICE_STATIC,
+                   market_period=None, market_gain=None,
+                   price_floor=None, price_cap=None,
+                   auction_period=None, auction_key=None,
+                   plan_ahead=False) -> SimParams:
     """``mtbf``/``mttr`` broadcast to [R]; 0 disables the failure source.
     ``reservations`` is a ReservationBook, an iterable of (resource,
     pes, start, end) tuples, or the 4-array table itself.
@@ -220,7 +239,12 @@ def default_params(deadline, budget, opt, n_users: int,
     (only consulted when the engine runs with ``net_cap > 0``); the
     default infinite ``link_baud`` makes every link uncontended --
     callers that enable the subsystem pass ``fleet.baud_rate`` (or a
-    scenario override) here."""
+    scenario override) here.  ``pricing_model`` selects the dynamic
+    pricing source (economy.PRICE_*; the default keeps fleet prices
+    static and both pricing sources inert, bit-identical to the
+    pre-economy engine); the remaining knobs default to the thesis-ish
+    settings (reprice/auction every 10 time units, +-25% adjustment,
+    posted prices clamped to [0.5, 2.0] x base)."""
     f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n_users,))
     r = lambda x: jnp.broadcast_to(jnp.asarray(
         0.0 if x is None else x, jnp.float32), (n_resources,))
@@ -251,6 +275,21 @@ def default_params(deadline, budget, opt, n_users: int,
             jnp.asarray(INF if link_baud is None else link_baud,
                         jnp.float32), (n_resources,)),
         bg_flows=r(bg_flows),
+        pricing_model=jnp.asarray(pricing_model, jnp.int32),
+        market_period=jnp.asarray(
+            10.0 if market_period is None else market_period, jnp.float32),
+        market_gain=jnp.asarray(
+            0.25 if market_gain is None else market_gain, jnp.float32),
+        price_floor=jnp.asarray(
+            0.5 if price_floor is None else price_floor, jnp.float32),
+        price_cap=jnp.asarray(
+            2.0 if price_cap is None else price_cap, jnp.float32),
+        auction_period=jnp.asarray(
+            10.0 if auction_period is None else auction_period,
+            jnp.float32),
+        auction_key=(jax.random.PRNGKey(0) if auction_key is None
+                     else auction_key),
+        plan_ahead=jnp.asarray(plan_ahead, bool),
     )
 
 
@@ -278,6 +317,20 @@ class SimState:
     fail_since: jax.Array      # f32[R] instant the resource went down
     downtime: jax.Array        # f32[R] accumulated down intervals
     rng_key: jax.Array         # PRNG key for the MTBF/MTTR streams
+    price: jax.Array           # f32[R] posted G$/MI trading metric
+                               #     (== fleet.cost_per_mi() until a
+                               #     pricing round moves it; per-MI so
+                               #     the broker never divides a carried
+                               #     array by an invariant in-loop --
+                               #     XLA may compile that division
+                               #     differently per path, breaking the
+                               #     bitwise cross-path contract)
+    next_market: jax.Array     # f32 next commodity repricing instant
+                               #     (inf = market source off)
+    next_auction: jax.Array    # f32 next auction round instant (inf =
+                               #     auction source off)
+    auction_key: jax.Array     # PRNG key for sealed-bid draws (one
+                               #     split consumed per fired round)
     n_events: jax.Array        # i32 applied events (batched kinds summed)
     n_steps: jax.Array         # i32 while-loop iterations (committing
                                #     supersteps; speculative ones excluded)
@@ -1073,6 +1126,62 @@ def _make_sources(fleet, params, n_users, ctx):
         ctx["free_pe"] = ctx["free_pe"] - n_admit_r
         return state
 
+    # -- MARKET / AUCTION: dynamic pricing rounds (economy layer) -------
+    # Both write only SimState.price / their own next-round instant, so
+    # they are naturally maskable (every write gated on `due`, False at
+    # a garbage `now`) and carry NO slab-invalidation duty: the posted
+    # price never enters the Fig 8 rate arithmetic, it only shifts what
+    # the broker buys at its next poll.  They keep the conservative
+    # default horizon (own candidates), so speculation slabs cut at
+    # each round boundary and the sources fire only in committing
+    # supersteps -- speculation-safe with zero micro-step changes.
+    def market_candidates(state):
+        return state.next_market.reshape(1)
+
+    def market_apply(state, now):
+        from .types import replace
+        due = jnp.isfinite(state.next_market) & (state.next_market <= now)
+        g = state.g
+        res = jnp.clip(g.resource, 0, n_resources - 1)
+        resident = (g.status == RUNNING) | (g.status == QUEUED)
+        n_res = jax.ops.segment_sum(resident.astype(jnp.float32), res,
+                                    num_segments=n_resources)
+        demand = n_res / jnp.maximum(fleet.num_pe.astype(jnp.float32),
+                                     1.0)
+        base = jnp.asarray(fleet.cost_per_mi(), jnp.float32)
+        newp = econ_mod.commodity_reprice(state.price, base, demand,
+                                          params.market_gain,
+                                          params.price_floor,
+                                          params.price_cap)
+        return replace(
+            state,
+            price=jnp.where(due, newp, state.price),
+            next_market=jnp.where(due, now + params.market_period,
+                                  state.next_market))
+
+    def auction_candidates(state):
+        return state.next_auction.reshape(1)
+
+    def auction_apply(state, now):
+        from .types import replace
+        due = jnp.isfinite(state.next_auction) & \
+            (state.next_auction <= now)
+        # Masked PRNG contract (same pattern as _apply_failures): split
+        # unconditionally, select the advanced key back only when the
+        # round actually fired, so a masked-off apply is bitwise
+        # identity and every fired round consumes exactly one split.
+        key, kbid = jax.random.split(state.auction_key)
+        key = jnp.where(due, key, state.auction_key)
+        base = jnp.asarray(fleet.cost_per_mi(), jnp.float32)
+        newp = econ_mod.auction_round(kbid, base, params.price_floor,
+                                      params.price_cap)
+        return replace(
+            state,
+            price=jnp.where(due, newp, state.price),
+            next_auction=jnp.where(due, now + params.auction_period,
+                                   state.next_auction),
+            auction_key=key)
+
     # -- NETWORK: fair-share links (the [R_pad, T] transfer table) ------
     def network_candidates(state):
         # With the subsystem off the source exposes no candidates and
@@ -1299,6 +1408,10 @@ def _make_sources(fleet, params, n_users, ctx):
                      horizon_candidates_fn=recovery_horizon),
         des.FnSource(des.K_RESERVATION, "reservation",
                      reservation_candidates, reservation_apply),
+        des.FnSource(des.K_MARKET, "market",
+                     market_candidates, market_apply),
+        des.FnSource(des.K_AUCTION, "auction",
+                     auction_candidates, auction_apply),
         des.FnSource(des.K_NETWORK, "network", network_candidates,
                      network_apply,
                      horizon_candidates_fn=network_horizon),
@@ -1341,7 +1454,8 @@ def _user_flags(state, params, fleet, n_users):
                 (g.status == RUNNING) | (g.status == RETURNING))
     n_inflight = jax.ops.segment_sum(inflight.astype(jnp.int32), u,
                                      num_segments=n_users)
-    min_job_cost = broker_mod.min_affordable_cost(g, fleet, n_users)
+    min_job_cost = broker_mod.min_affordable_cost(g, fleet, n_users,
+                                                  price=state.price)
     all_done = n_not_done == 0
     active = ((state.t < params.deadline) &
               (state.spent + min_job_cost <= params.budget) &
@@ -2039,9 +2153,24 @@ def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
     if params is None:
         key = jax.random.PRNGKey(0)
         next_fail = jnp.full((fleet.r,), INF, jnp.float32)
+        next_market = jnp.asarray(INF, jnp.float32)
+        next_auction = jnp.asarray(INF, jnp.float32)
+        auction_key = jax.random.PRNGKey(0)
     else:
         key, k1 = jax.random.split(params.fail_key)
         next_fail = rand.exponential(k1, params.mtbf)  # inf if mtbf <= 0
+        # First pricing round one full period in (inf = model off), so
+        # PRICE_STATIC runs never see the sources fire and stay bitwise
+        # identical to pre-pricing builds.
+        next_market = jnp.where(
+            (params.pricing_model == econ_mod.PRICE_COMMODITY) &
+            (params.market_period > 0),
+            params.market_period, INF).astype(jnp.float32)
+        next_auction = jnp.where(
+            (params.pricing_model == econ_mod.PRICE_AUCTION) &
+            (params.auction_period > 0),
+            params.auction_period, INF).astype(jnp.float32)
+        auction_key = params.auction_key
     return SimState(
         t=jnp.asarray(0.0, jnp.float32),
         g=gridlets,
@@ -2061,6 +2190,11 @@ def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
         fail_since=jnp.full((fleet.r,), INF, jnp.float32),
         downtime=jnp.zeros((fleet.r,), jnp.float32),
         rng_key=key,
+        price=jnp.broadcast_to(
+            jnp.asarray(fleet.cost_per_mi(), jnp.float32), (fleet.r,)),
+        next_market=next_market,
+        next_auction=next_auction,
+        auction_key=auction_key,
         n_events=jnp.asarray(0, jnp.int32),
         n_steps=jnp.asarray(0, jnp.int32),
         n_spec=jnp.asarray(0, jnp.int32),
@@ -2361,6 +2495,26 @@ def _commit_lanes(state, fleet, params, n_users, slab):
     state, pack = jax.lax.cond(
         jnp.any(fired_resv), resv_taken, lambda ops: (ops[0], ops[3]),
         (state, params, t_next, pack))
+
+    # ---- MARKET + AUCTION: cond on any lane's pricing round firing ---
+    # (both applies are pure functions of state + t_next with no ctx
+    # traffic; their counts fall through to the tail's default wiring)
+    fired_px = (fired[:, pos[des.K_MARKET]] |
+                fired[:, pos[des.K_AUCTION]])
+
+    def px_taken(ops):
+        state, params, t_next = ops
+
+        def one(state, params, t_next):
+            src = _make_sources(fleet, params, n_users,
+                                {"select_free": True})
+            state = src[pos[des.K_MARKET]].apply(state, t_next)
+            return src[pos[des.K_AUCTION]].apply(state, t_next)
+
+        return jax.vmap(one)(state, params, t_next)
+
+    state = jax.lax.cond(jnp.any(fired_px), px_taken,
+                         lambda ops: ops[0], (state, params, t_next))
 
     # ---- NETWORK: static python gate (off = the source is inert) -----
     if net:

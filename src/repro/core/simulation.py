@@ -54,7 +54,23 @@ class Scenario(NamedTuple):
         sched_frac * deadline_left)`` simulated seconds; coarser
         polling trades scheduling reactivity for fewer pure-poll
         supersteps and deeper speculation horizons (see
-        docs/PERFORMANCE.md, "Profiling checklist").
+        docs/PERFORMANCE.md, "Profiling checklist"),
+    policy: broker optimisation strategy override (an OPT_* code;
+        default None = the ``opt`` argument of the driver call).  Makes
+        the strategy a first-class scenario axis: stack Scenario-built
+        params over lanes and the same sweep compares policies,
+    pricing_model: "static" (default), "commodity", or "auction" (or a
+        PRICE_* code) -- selects which dynamic-pricing event source
+        runs (see core/economy.py),
+    market_period / market_gain: commodity-market repricing period and
+        demand gain (defaults: engine defaults 10.0 / 0.25),
+    auction_period: sealed-bid round period (default 10.0),
+    auction_seed: PRNG seed for the auction bid draws (default: the
+        scenario ``seed``, so auctions are deterministic per scenario),
+    plan_ahead: enable the cs/0203020 plan-ahead DBC dispatch --
+        reservation windows and link queueing delay priced into the
+        capacity prediction, and the exact grouped cost-time key
+        (default False = the legacy reactive broker).
     """
     mtbf: Any = None
     mttr: Any = None
@@ -64,6 +80,13 @@ class Scenario(NamedTuple):
     bg_flows: Any = None
     sched_min_period: Any = None
     sched_frac: Any = None
+    policy: Any = None
+    pricing_model: Any = None
+    market_period: Any = None
+    market_gain: Any = None
+    auction_period: Any = None
+    auction_seed: Any = None
+    plan_ahead: Any = None
 
 
 class ExperimentResult(NamedTuple):
@@ -157,12 +180,22 @@ def _scenario_params(fleet, deadline, budget, opt, n_users,
                      scenario: Scenario | None) -> engine.SimParams:
     s = scenario or Scenario()
     p = engine.default_params(
-        deadline, budget, opt, n_users, fleet.r,
+        deadline, budget,
+        opt if s.policy is None else s.policy,
+        n_users, fleet.r,
         mtbf=s.mtbf, mttr=s.mttr, reservations=s.reservations,
         fail_key=jax.random.PRNGKey(s.seed),
         link_baud=(fleet.baud_rate if s.baud_rate is None
                    else s.baud_rate),
-        bg_flows=s.bg_flows)
+        bg_flows=s.bg_flows,
+        pricing_model=economy.as_pricing_model(s.pricing_model),
+        market_period=s.market_period,
+        market_gain=s.market_gain,
+        auction_period=s.auction_period,
+        auction_key=jax.random.PRNGKey(
+            s.seed if s.auction_seed is None else s.auction_seed),
+        plan_ahead=bool(s.plan_ahead) if s.plan_ahead is not None
+        else False)
     if s.sched_min_period is not None:
         p = treplace(p, sched_min_period=jnp.asarray(
             s.sched_min_period, jnp.float32))

@@ -29,10 +29,12 @@ except ImportError:  # container without dev deps: seeded fallback
 
 from repro.core import engine, gridlet, resource, simulation, types
 
-# Deterministic seeded corpus: chosen to cover both policies, both
-# optimisations, failures on/off and the network subsystem on/off
+# Deterministic seeded corpus: chosen to cover both resource policies,
+# all four broker optimisations, failures on/off, the network subsystem
+# on/off, the dynamic-pricing models (each of K_MARKET and K_AUCTION
+# fires in at least one seed -- asserted below) and plan-ahead dispatch
 # (_build_case draws all of those from the seed).
-CORPUS = (0, 3, 7, 42, 101, 555)
+CORPUS = (0, 3, 7, 42, 101, 555, 601, 607)
 
 MAX_EVENTS = 4096
 
@@ -64,11 +66,28 @@ def _build_case(seed):
         sc_kw.update(mtbf=float(rng.choice([150.0, 600.0])),
                      mttr=float(rng.choice([5.0, 40.0])),
                      seed=int(rng.randint(0, 100)))
+    deadline = float(rng.choice([200.0, 500.0, 2000.0]))
+    budget = float(rng.choice([5_000.0, 50_000.0]))
+    # The policy axis: all four broker optimisations, the three pricing
+    # models (static weighted double so most scenarios keep advertised
+    # prices) and plan-ahead dispatch.  Drawn AFTER every legacy knob so
+    # the pre-policy-axis scenario shapes replay unchanged per seed.
+    opt = int(rng.choice([types.OPT_COST, types.OPT_TIME,
+                          types.OPT_COST_TIME, types.OPT_NONE]))
+    pricing = int(rng.choice([0, 0, 1, 2]))
+    if pricing == 1:
+        sc_kw.update(pricing_model="commodity",
+                     market_period=float(rng.choice([20.0, 75.0])),
+                     market_gain=float(rng.choice([0.1, 0.5])))
+    elif pricing == 2:
+        sc_kw.update(pricing_model="auction",
+                     auction_period=float(rng.choice([25.0, 90.0])),
+                     auction_seed=int(rng.randint(0, 100)))
+    if rng.randint(0, 2):
+        sc_kw.update(plan_ahead=True)
     sc = simulation.Scenario(**sc_kw) if sc_kw else None
-    params = simulation._scenario_params(
-        fleet, float(rng.choice([200.0, 500.0, 2000.0])),
-        float(rng.choice([5_000.0, 50_000.0])),
-        int(rng.choice([types.OPT_COST, types.OPT_TIME])), n_users, sc)
+    params = simulation._scenario_params(fleet, deadline, budget, opt,
+                                         n_users, sc)
     max_jobs = simulation.safe_max_jobs(g, params, fleet)
     net_cap = simulation.safe_net_cap(g, params, fleet, n_users) \
         if net_on else 0
@@ -135,6 +154,21 @@ def test_fuzz_corpus_paths_identical(seed):
     """The committed corpus: every engine path replays every scenario
     bitwise at every batch depth."""
     _assert_paths_identical(seed)
+
+
+def test_fuzz_corpus_covers_pricing_kinds():
+    """The committed corpus exercises each dynamic-pricing event kind
+    at least once (a corpus re-roll that silently loses coverage of
+    K_MARKET or K_AUCTION fails here, not in review)."""
+    from repro.core import des
+    seen = set()
+    for seed in CORPUS:
+        g, fleet, params, n_users, max_jobs, net_cap = _build_case(seed)
+        r = engine.run(g, fleet, params, n_users, MAX_EVENTS, batch=1,
+                       max_jobs=max_jobs, net_cap=net_cap)
+        seen |= set(np.asarray(r.trace[1]).tolist())
+    assert des.K_MARKET in seen, "no corpus seed fires a market round"
+    assert des.K_AUCTION in seen, "no corpus seed fires an auction round"
 
 
 @settings(max_examples=3, deadline=None)

@@ -225,6 +225,47 @@ def test_masked_apply_contract():
         assert np.array_equal(np.asarray(x), np.asarray(y))
 
 
+@pytest.mark.parametrize("model,kind_name", [("commodity", "market"),
+                                             ("auction", "auction")])
+def test_pricing_sources_masked_apply_noop(model, kind_name):
+    """The MARKET and AUCTION sources honour the masked-apply contract
+    on the REAL engine sources: fire=True == apply bitwise; fire=False
+    == bitwise identity even at a garbage event time (every write is
+    gated on the round being due, and the auction's PRNG split is
+    selected back).  This is what lets the sweep paths run pricing
+    rounds unconditionally."""
+    from repro.core import des
+    fleet = resource.wwg_fleet()
+    g = gridlet.task_farm(jax.random.PRNGKey(2), n_jobs=6, n_users=2)
+    params = simulation._scenario_params(
+        fleet, 900.0, 9000.0, types.OPT_COST, 2,
+        simulation.Scenario(pricing_model=model, market_period=40.0,
+                            auction_period=40.0, seed=5))
+    state = engine.init_state(g, fleet, 2, params=params)
+    sources = engine._make_sources(fleet, params, 2,
+                                   {"select_free": True})
+    pos = {s.kind: i for i, s in enumerate(sources)}
+    kind = des.K_MARKET if model == "commodity" else des.K_AUCTION
+    src = sources[pos[kind]]
+    assert src.name == kind_name
+
+    t_due = jnp.asarray(40.0, jnp.float32)      # the round IS due
+    garbage = jnp.asarray(-1.0e30, jnp.float32)
+    on = src.masked_apply(state, t_due, jnp.asarray(True))
+    want = src.apply(state, t_due)
+    off = src.masked_apply(state, garbage, jnp.asarray(False))
+    for x, y in zip(jax.tree_util.tree_leaves(on),
+                    jax.tree_util.tree_leaves(want)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree_util.tree_leaves(off),
+                    jax.tree_util.tree_leaves(state)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    # The fired round really moved the posted price and rescheduled.
+    assert not np.array_equal(np.asarray(on.price), np.asarray(state.price))
+    nxt = on.next_market if model == "commodity" else on.next_auction
+    assert float(nxt) == 80.0
+
+
 def test_run_sweep_lanes_matches_per_lane_reference():
     """engine.run_sweep_lanes (the lane-batched loop with any-lane
     cond skips) == running each lane's params through engine.run_inner
