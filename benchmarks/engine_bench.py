@@ -2,7 +2,9 @@
 
 The 2002 toolkit ran one JVM thread per entity; the array engine's cost
 is events/second at fleet scale.  Three WWG scenarios (1 / 20 / 200
-users), a failure scenario and a large-J deep-queue scenario are timed
+users), a failure scenario, a correlated trunk-cut scenario (shared
+failure domain + trace-driven injection + the retry/backoff broker)
+and a large-J deep-queue scenario are timed
 and written to ``benchmarks/artifacts/BENCH_engine.json`` with
 steady-state events/sec, compile time, while-loop iterations and
 wall-clock, so future PRs have a perf trajectory (the full schema and
@@ -131,6 +133,17 @@ SCENARIOS = (
      None, 2000.0, 22000.0,
      dict(suffix="_net", net=True, in_bytes=200_000.0,
           out_bytes=100_000.0)),
+    # The correlated-failure cell: the WWG fleet's first five resources
+    # share one trunk (11 = R + trunk id 0 targets the whole domain) and
+    # a replayable trace cuts it mid-run for 100 time units -- every
+    # resource behind the trunk fails in ONE superstep, in-flight
+    # gridlets refund and resubmit, and the retry/backoff broker knobs
+    # are live so the perf trajectory tracks the fault-tolerant path.
+    (20, 100, simulation.Scenario(
+        trunk_of=[0, 0, 0, 0, 0, -1, -1, -1, -1, -1, -1],
+        fault_trace=[(500.0, 11, 0), (600.0, 11, 1)],
+        retry_limit=8, backoff_base=1.0, blacklist_cooldown=5.0),
+     None, 2000.0, 22000.0, dict(suffix="_trunk")),
 )
 
 
@@ -487,12 +500,26 @@ def run():
             "n_done": float(np.asarray(r.n_done).sum()),
             "spent": float(np.asarray(r.spent).sum()),
             "overflow": int(np.asarray(r.overflow)),
+            "truncated": bool(np.asarray(r.truncated)),
         }
         name = f"engine_{n_users}u_{n_jobs}j" + extras.get("suffix", "")
         if extras.get("suffix") == "_fail":
             cell["scenario"] = {"mtbf": float(np.asarray(scenario.mtbf)),
                                 "mttr": float(np.asarray(scenario.mttr)),
                                 "seed": scenario.seed}
+            cell["n_failed"] = int(np.asarray(r.n_failed))
+            cell["n_resubmits"] = int(np.asarray(r.n_resubmits))
+            cell["downtime_total"] = float(np.asarray(r.downtime).sum())
+        if extras.get("suffix") == "_trunk":
+            cell["scenario"] = {
+                "trunk_members": int(np.sum(
+                    np.asarray(scenario.trunk_of) == 0)),
+                "fault_trace": [list(row) for row
+                                in scenario.fault_trace],
+                "retry_limit": scenario.retry_limit,
+                "backoff_base": scenario.backoff_base,
+                "blacklist_cooldown": scenario.blacklist_cooldown,
+            }
             cell["n_failed"] = int(np.asarray(r.n_failed))
             cell["n_resubmits"] = int(np.asarray(r.n_resubmits))
             cell["downtime_total"] = float(np.asarray(r.downtime).sum())

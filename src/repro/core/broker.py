@@ -101,14 +101,43 @@ def _policy_keys(opt, cost_per_mi, est_rate, r_index, plan_ahead=False):
         [key_cost, key_time, key_cost_time, key_none])
 
 
-def min_affordable_cost(g, fleet, n_users: int, price=None):
+def _retryable(g, params, t):
+    """Dispatchable-now mask: CREATED, or FAILED with retries left in
+    its budget (``params.retry_limit``) whose exponential-backoff
+    instant (``g.retry_at``, stamped by engine._fail_gridlets) has
+    passed.  At the default knobs (unbounded limit, zero backoff base)
+    this is exactly the legacy ``CREATED | FAILED`` mask, bit for
+    bit."""
+    ok = (g.n_retries <= params.retry_limit) & (t >= g.retry_at)
+    return (g.status == CREATED) | ((g.status == FAILED) & ok)
+
+
+def _not_abandoned(g, params):
+    """CREATED, or FAILED still inside its retry budget -- including
+    gridlets merely *waiting out* a backoff window.  This is the
+    activity mask: a backoff wait must keep the broker polling (the
+    retry fires at the first poll past ``retry_at``), whereas a
+    gridlet beyond ``retry_limit`` is abandoned for good and must stop
+    propping the broker's activity, or the run would poll until the
+    deadline."""
+    within = g.n_retries <= params.retry_limit
+    return (g.status == CREATED) | ((g.status == FAILED) & within)
+
+
+def min_affordable_cost(g, fleet, n_users: int, price=None,
+                        params=None):
     """Cheapest possible next purchase per user: the smallest
     still-undispatched (CREATED, or FAILED awaiting resubmission)
     Gridlet priced at the best G$/MI.  +inf when nothing is left to
     dispatch.  ``price`` overrides the advertised G$/MI metric with the
     grid's posted per-MI prices (SimState.price) under dynamic
-    pricing."""
-    undispatched = (g.status == CREATED) | (g.status == FAILED)
+    pricing.  ``params`` enables the retry budget: gridlets beyond
+    ``params.retry_limit`` are abandoned and no longer count as a
+    possible purchase (None keeps the legacy unbounded mask)."""
+    if params is None:
+        undispatched = (g.status == CREATED) | (g.status == FAILED)
+    else:
+        undispatched = _not_abandoned(g, params)
     min_mi = jax.ops.segment_min(
         jnp.where(undispatched, g.length_mi, INF), g.user,
         num_segments=n_users)
@@ -124,7 +153,14 @@ def _measure(state, fleet, params, n_users: int):
     R = fleet.r
     u_idx = g.user
 
-    registered = params.registered & state.res_up
+    # Cooldown blacklist: a resource that recovered less than
+    # ``blacklist_cooldown`` ago is dark to discovery/pricing -- a
+    # flapping resource must re-earn trust before the broker commits
+    # new work to it.  recovered_at inits to -inf, so at the default
+    # cooldown of 0.0 no resource is ever blacklisted (bitwise-frozen
+    # legacy discovery).
+    blacklisted = (t - state.recovered_at) < params.blacklist_cooldown
+    registered = params.registered & state.res_up & ~blacklisted
     reserved = resv_mod.active_pes(params.resv_res, params.resv_pes,
                                    params.resv_start, params.resv_end,
                                    t, R)
@@ -203,7 +239,8 @@ def _measure(state, fleet, params, n_users: int):
 
     active = ((t < params.deadline) &
               (state.spent + min_affordable_cost(g, fleet, n_users,
-                                                 price=state.price)
+                                                 price=state.price,
+                                                 params=params)
                <= params.budget))
 
     return dict(registered=registered, cost_per_mi=cost_per_mi,
@@ -211,7 +248,7 @@ def _measure(state, fleet, params, n_users: int):
                 inflight=inflight, ur_res_key=ur_res_key, active=active)
 
 
-def _release(state, ctx, n_users: int, R: int):
+def _release(state, ctx, params, n_users: int, R: int):
     """Fig 20 step 4: release over-committed undispatched jobs."""
     g = state.g
     u_idx = g.user
@@ -224,8 +261,7 @@ def _release(state, ctx, n_users: int, R: int):
         jnp.where(committed, ur_key, n_users * R),
         num_segments=n_users * R + 1)[:n_users * R].reshape(n_users, R)
 
-    undispatched = ((g.status == CREATED) | (g.status == FAILED)) & \
-        (g.assigned >= 0)
+    undispatched = _retryable(g, params, state.t) & (g.assigned >= 0)
     rel_rank, n_undisp = group_rank(ur_key, undispatched, -idx,
                                     n_users * R)
     n_release = jnp.clip(n_committed - ctx["cap_jobs"], 0,
@@ -249,8 +285,7 @@ def _assign(state, ctx, assigned, n_committed, params, n_users: int,
     registered = ctx["registered"]
 
     exact_cost_now = g.length_mi * cost_per_mi[jnp.clip(assigned, 0, R - 1)]
-    planned = (assigned >= 0) & \
-        ((g.status == CREATED) | (g.status == FAILED))
+    planned = (assigned >= 0) & _retryable(g, params, state.t)
     planned_cost = jax.ops.segment_sum(
         jnp.where(planned, exact_cost_now, 0.0), u_idx,
         num_segments=n_users)
@@ -269,9 +304,10 @@ def _assign(state, ctx, assigned, n_committed, params, n_users: int,
     slots = jnp.maximum(ctx["cap_jobs"] - n_committed, 0)        # [U,R]
     job_cost_est = ctx["avg_mi"][:, None] * cost_per_mi[None, :]  # [U,R]
 
-    # FAILED gridlets (engine-refunded) resubmit like fresh CREATED ones.
-    unassigned = ((g.status == CREATED) | (g.status == FAILED)) & \
-        (assigned < 0)
+    # FAILED gridlets (engine-refunded) resubmit like fresh CREATED
+    # ones -- once past their backoff window and within the retry
+    # budget (_retryable; vacuous at the default knobs).
+    unassigned = _retryable(g, params, state.t) & (assigned < 0)
     n_unassigned = jax.ops.segment_sum(
         unassigned.astype(jnp.int32), u_idx, num_segments=n_users)
     active = ctx["active"]
@@ -318,8 +354,7 @@ def _dispatch(state, fleet, ctx, params, new_assigned, inv_order,
     cost_per_mi = ctx["cost_per_mi"]
 
     ur_key2 = u_idx * R + jnp.clip(new_assigned, 0, R - 1)
-    cand = ((g.status == CREATED) | (g.status == FAILED)) & \
-        (new_assigned >= 0)
+    cand = _retryable(g, params, t) & (new_assigned >= 0)
     n_inflight_ur = jax.ops.segment_sum(
         ctx["inflight"].astype(jnp.int32),
         jnp.where(ctx["inflight"], ctx["ur_res_key"], n_users * R),
@@ -372,7 +407,7 @@ def broker_event(state, fleet, params, n_users: int):
     """One full Fig 20 cycle for every broker, plus the next poll."""
     R = fleet.r
     ctx = _measure(state, fleet, params, n_users)
-    assigned, n_committed = _release(state, ctx, n_users, R)
+    assigned, n_committed = _release(state, ctx, params, n_users, R)
     new_assigned, inv_order = _assign(state, ctx, assigned, n_committed,
                                       params, n_users, R)
     state = _dispatch(state, fleet, ctx, params, new_assigned, inv_order,

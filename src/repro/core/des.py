@@ -156,6 +156,10 @@ K_MARKET = 9        # commodity-market repricing round (posted-price
                     # adjustment from demand; economy.commodity_reprice)
 K_AUCTION = 10      # sealed-bid auction/tender round (economy.
                     # auction_round; PRNG-keyed, see the masked contract)
+K_TRACE = 11        # trace-driven fault-injection step: a scheduled
+                    # (time, target, up/down) row from a replayable
+                    # failure trace fires -- target is a resource or a
+                    # shared trunk (every incident resource flips at once)
 
 # Tie-break order among sources due at the same instant.  NETWORK sits
 # between the pricing rounds and RETURN: a transfer that drains at t*
@@ -173,9 +177,13 @@ K_AUCTION = 10      # sealed-bid auction/tender round (economy.
 # broker's zero-delay dispatches arrive within the same superstep,
 # while ARRIVAL keeps semantic priority (pre-broker arrivals hold
 # admission precedence -- see engine._apply_arrivals).
-PRIORITY_ORDER = (K_COMPLETION, K_FAILURE, K_RECOVERY, K_RESERVATION,
-                  K_MARKET, K_AUCTION, K_NETWORK, K_RETURN, K_ARRIVAL,
-                  K_CALENDAR, K_BROKER)
+# TRACE sits directly after the stochastic FAILURE/RECOVERY pair: a
+# trace step is the deterministic twin of those sources (it flips
+# res_up for whole failure domains), so it must land before
+# RESERVATION/pricing/NETWORK observe the superstep's resource-state.
+PRIORITY_ORDER = (K_COMPLETION, K_FAILURE, K_RECOVERY, K_TRACE,
+                  K_RESERVATION, K_MARKET, K_AUCTION, K_NETWORK,
+                  K_RETURN, K_ARRIVAL, K_CALENDAR, K_BROKER)
 
 
 def no_interference(state, t_max) -> jax.Array:

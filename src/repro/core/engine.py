@@ -221,6 +221,33 @@ class SimParams:
                                #     into the capacity estimates and run
                                #     the exact cost-time grouping
                                #     (cs/0203020) -- see broker._measure
+    # --- shared-trunk topology (None = private links only; a None
+    #     field is an empty pytree subtree, so `is None` is a STATIC
+    #     gate -- the default compiles the exact pre-trunk program) ---
+    trunk_of: object           # i32[R] trunk id per resource (-1 =
+                               #     private-only) or None
+    trunk_baud: object         # f32[R] trunk capacity gathered out to
+                               #     per-resource form, or None
+    trunk_bg: object           # f32[R] trunk phantom background flows
+                               #     (per-resource form), or None
+    # --- trace-driven fault injection (None = no trace; same static
+    #     None gate as the trunk fields) ---
+    fault_time: object         # f32[K] scheduled instants, ascending
+    fault_target: object       # i32[K] 0..R-1 = resource; R + id =
+                               #     trunk id (every incident resource
+                               #     flips in one apply)
+    fault_up: object           # bool[K] True = bring up, False = cut
+    # --- fault-tolerant broker knobs (always-present traced scalars;
+    #     the defaults are vacuous, bitwise-frozen legacy behaviour) ---
+    retry_limit: jax.Array     # i32[] max refund+resubmit cycles per
+                               #     gridlet (default 2**30 = unbounded)
+    backoff_base: jax.Array    # f32[] exponential backoff unit: the
+                               #     n-th retry re-dispatches no earlier
+                               #     than fail_t + base * 2**(n-1)
+                               #     (default 0.0 = immediate)
+    blacklist_cooldown: jax.Array  # f32[] broker _measure ignores
+                               #     resources that recovered less than
+                               #     this long ago (default 0.0 = off)
 
 
 def default_params(deadline, budget, opt, n_users: int,
@@ -231,7 +258,10 @@ def default_params(deadline, budget, opt, n_users: int,
                    market_period=None, market_gain=None,
                    price_floor=None, price_cap=None,
                    auction_period=None, auction_key=None,
-                   plan_ahead=False) -> SimParams:
+                   plan_ahead=False, trunk_of=None, trunk_baud=None,
+                   trunk_bg=None, fault_trace=None, retry_limit=None,
+                   backoff_base=None,
+                   blacklist_cooldown=None) -> SimParams:
     """``mtbf``/``mttr`` broadcast to [R]; 0 disables the failure source.
     ``reservations`` is a ReservationBook, an iterable of (resource,
     pes, start, end) tuples, or the 4-array table itself.
@@ -244,7 +274,20 @@ def default_params(deadline, budget, opt, n_users: int,
     static and both pricing sources inert, bit-identical to the
     pre-economy engine); the remaining knobs default to the thesis-ish
     settings (reprice/auction every 10 time units, +-25% adjustment,
-    posted prices clamped to [0.5, 2.0] x base)."""
+    posted prices clamped to [0.5, 2.0] x base).
+
+    ``trunk_of`` (per-resource trunk id, -1 = private) enables the
+    shared-trunk topology: ``trunk_baud``/``trunk_bg`` are per-TRUNK
+    vectors (or scalars), gathered out to per-resource form via
+    network.trunk_topology.  ``fault_trace`` enables trace-driven
+    fault injection: an iterable of (time, target, up) rows or the
+    [K, 3] array itself, where target 0..R-1 names a resource and
+    R + id names a trunk (the whole failure domain flips at once);
+    rows are time-sorted here so the engine's cursor replay is order-
+    independent.  ``retry_limit``/``backoff_base``/
+    ``blacklist_cooldown`` are the fault-tolerant broker knobs; the
+    defaults freeze legacy behaviour bitwise (unbounded immediate
+    retries, no blacklist)."""
     f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n_users,))
     r = lambda x: jnp.broadcast_to(jnp.asarray(
         0.0 if x is None else x, jnp.float32), (n_resources,))
@@ -259,6 +302,24 @@ def default_params(deadline, budget, opt, n_users: int,
         resv = reservations
     else:
         resv = resv_mod.as_tables(reservations)
+    if trunk_of is None:
+        t_of = t_baud = t_bg = None
+    else:
+        t_of, t_baud, t_bg = network.trunk_topology(
+            trunk_of, n_resources, trunk_baud=trunk_baud,
+            trunk_bg=trunk_bg)
+    if fault_trace is None:
+        ft = ftgt = fup = None
+    else:
+        tr = jnp.asarray(
+            [(float(a), int(b), bool(c)) for a, b, c in fault_trace]
+            if not hasattr(fault_trace, "dtype") else fault_trace,
+            jnp.float32).reshape(-1, 3)
+        order = jnp.argsort(tr[:, 0], stable=True)
+        tr = tr[order]
+        ft = tr[:, 0]
+        ftgt = tr[:, 1].astype(jnp.int32)
+        fup = tr[:, 2] > 0.5
     return SimParams(
         deadline=f(deadline), budget=f(budget),
         opt=jnp.broadcast_to(jnp.asarray(opt, jnp.int32), (n_users,)),
@@ -290,6 +351,15 @@ def default_params(deadline, budget, opt, n_users: int,
         auction_key=(jax.random.PRNGKey(0) if auction_key is None
                      else auction_key),
         plan_ahead=jnp.asarray(plan_ahead, bool),
+        trunk_of=t_of, trunk_baud=t_baud, trunk_bg=t_bg,
+        fault_time=ft, fault_target=ftgt, fault_up=fup,
+        retry_limit=jnp.asarray(
+            2**30 if retry_limit is None else retry_limit, jnp.int32),
+        backoff_base=jnp.asarray(
+            0.0 if backoff_base is None else backoff_base, jnp.float32),
+        blacklist_cooldown=jnp.asarray(
+            0.0 if blacklist_cooldown is None else blacklist_cooldown,
+            jnp.float32),
     )
 
 
@@ -316,6 +386,11 @@ class SimState:
     next_recover: jax.Array    # f32[R] scheduled recovery instant
     fail_since: jax.Array      # f32[R] instant the resource went down
     downtime: jax.Array        # f32[R] accumulated down intervals
+    recovered_at: jax.Array    # f32[R] instant of the last recovery
+                               #     (-inf = never; feeds the broker's
+                               #     cooldown blacklist)
+    trace_ptr: jax.Array       # i32 cursor into the fault-injection
+                               #     trace (rows < ptr already applied)
     rng_key: jax.Array         # PRNG key for the MTBF/MTTR streams
     price: jax.Array           # f32[R] posted G$/MI trading metric
                                #     (== fleet.cost_per_mi() until a
@@ -511,13 +586,37 @@ def _link_scan(state, params, n_resources, r_pad):
     """Fair-share rates + next-transfer-completion forecast per link,
     through kernels.ops.link_scan (Pallas on TPU, XLA fallback on CPU).
     The flat gridlet index is the argmin tie-break key, mirroring the
-    job-slot table's FIFO convention."""
+    job-slot table's FIFO convention.
+
+    With a shared-trunk topology (params.trunk_of, a static None gate)
+    each row additionally receives a per-row fair-share rate *cap*:
+    the trunk's capacity divided by its total occupancy across every
+    incident row.  The cross-row occupancy gather runs here -- plain
+    jnp over the [R_pad, T] table -- because the row-blocked kernel
+    grid cannot see other rows; the kernel then just min()s the cap in
+    (kernels.event_scan._link_math).  network.fastest_drain stays a
+    valid speculation lower bound: a trunk can only *lower* rates, so
+    no tabled drain ever finishes earlier than the private-link bound.
+    """
     pad = r_pad - n_resources
     baud = jnp.pad(params.link_baud, (0, pad), constant_values=1.0)
     bg = jnp.pad(params.bg_flows, (0, pad))
     tie = jnp.where(state.link_gridlet >= 0, state.link_gridlet,
                     2 ** 30).astype(jnp.float32)
-    return kernel_ops.link_scan(state.link_rem, baud, bg=bg, tie=tie)
+    cap = None
+    if params.trunk_of is not None:
+        # live-row occupancy, computed exactly like _link_math's m
+        live = (baud > 0.0) & (baud < network.BIG)
+        valid = ((state.link_rem > 0.0) & (state.link_rem < network.BIG)
+                 & live[:, None])
+        occ = jnp.sum(valid.astype(jnp.float32), axis=1)
+        cap = network.trunk_rate_cap(
+            occ,
+            jnp.pad(params.trunk_of, (0, pad), constant_values=-1),
+            jnp.pad(params.trunk_baud, (0, pad), constant_values=1.0),
+            jnp.pad(params.trunk_bg, (0, pad)))
+    return kernel_ops.link_scan(state.link_rem, baud, bg=bg, tie=tie,
+                                cap=cap)
 
 
 def _pending_entries(state, params, n_resources):
@@ -801,30 +900,42 @@ def _apply_returns(state, fleet, t_next, n_users, n_resources,
     return state, ret_due
 
 
-def _fail_gridlets(state, victims, n_users):
-    """The fail-and-refund invariant, shared by the FAILURE source and
-    the down-resource arrival path: ``victims`` move to FAILED, drop
-    their broker assignment and pending event, and their committed cost
-    is refunded (the broker re-bills only on the resubmission
-    dispatch)."""
+def _fail_gridlets(state, victims, n_users, now, params):
+    """The fail-and-refund invariant, shared by the FAILURE source, the
+    trace-injection source and the down-resource arrival path:
+    ``victims`` move to FAILED, drop their broker assignment and
+    pending event, and their committed cost is refunded (the broker
+    re-bills only on the resubmission dispatch).  Each victim's retry
+    counter ticks and its earliest re-dispatch instant moves to
+    ``now + backoff_base * 2**(n_retries - 1)`` -- the broker's
+    ``_retryable`` gate consumes both (at the default knobs the gate is
+    vacuous: retry_at == now and the limit is unbounded, bitwise-frozen
+    legacy behaviour).  Every write is gated on ``victims``, so the
+    body is a bitwise no-op on an empty mask even at garbage ``now``
+    (the masked-apply contract)."""
     from .types import replace
     g = state.g
     refund = jax.ops.segment_sum(jnp.where(victims, g.cost, 0.0),
                                  g.user, num_segments=n_users)
+    n_retries = g.n_retries + victims.astype(jnp.int32)
+    backoff = params.backoff_base * jnp.exp2(jnp.minimum(
+        n_retries - 1, 30).astype(jnp.float32))
     g = replace(
         g,
         status=jnp.where(victims, FAILED, g.status),
         assigned=jnp.where(victims, -1, g.assigned),
         t_event=jnp.where(victims, INF, g.t_event),
         cost=jnp.where(victims, 0.0, g.cost),
+        n_retries=n_retries,
+        retry_at=jnp.where(victims, now + backoff, g.retry_at),
     )
     return replace(
         state, g=g, spent=state.spent - refund,
         n_failed=state.n_failed + jnp.sum(victims, dtype=jnp.int32))
 
 
-def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_users,
-                    n_resources, select_free=False):
+def _apply_arrivals(state, fleet, params, free_pe, arr_pre, t_next,
+                    n_users, n_resources, select_free=False):
     """IN_TRANSIT & due -> RUNNING (time-shared / free PE) or QUEUED,
     for the whole batch; arrivals at a *down* resource fail-and-refund.
 
@@ -860,7 +971,7 @@ def _apply_arrivals(state, fleet, free_pe, arr_pre, t_next, n_users,
             lambda: jnp.full((g.n,), jnp.int32(2 ** 30)))
     arr_run = arr_live & (~is_ss | (rank < free_pe[res]))
     arr_queue = arr_ss & ~arr_run
-    state = _fail_gridlets(state, arr_fail, n_users)
+    state = _fail_gridlets(state, arr_fail, n_users, t_next, params)
     g = state.g
     g = replace(
         g,
@@ -896,7 +1007,7 @@ def _apply_failures(state, fleet, params, due_r, now, n_users,
                        rand.exponential(k1, params.mttr), 0.0)
     on_r = jnp.clip(g.resource, 0, n_resources - 1)
     victim = ((g.status == RUNNING) | (g.status == QUEUED)) & due_r[on_r]
-    state = _fail_gridlets(state, victim, n_users)
+    state = _fail_gridlets(state, victim, n_users, now, params)
     state = replace(
         state, rng_key=key,
         res_up=state.res_up & ~due_r,
@@ -930,7 +1041,74 @@ def _apply_recoveries(state, params, due_r, now, masked=False):
         next_recover=jnp.where(due_r, INF, state.next_recover),
         downtime=state.downtime +
         jnp.where(due_r, now - state.fail_since, 0.0),
-        fail_since=jnp.where(due_r, INF, state.fail_since))
+        fail_since=jnp.where(due_r, INF, state.fail_since),
+        # The broker's cooldown blacklist keys off this stamp; -inf
+        # init means a never-failed resource is never blacklisted.
+        recovered_at=jnp.where(due_r, now, state.recovered_at))
+
+
+def _trace_masks(params, due, n_resources):
+    """Expand the due fault-trace rows into per-resource down/up masks.
+
+    A row's target in ``0..R-1`` names a single resource; ``R + id``
+    names trunk ``id`` -- every resource with ``trunk_of == id`` flips
+    in the same apply (the correlated failure domain).  Rows are
+    expanded independently, downs and ups separately; the caller
+    applies downs first so an up and a down of the same resource at
+    the same instant nets to up (deterministic tie-break).
+    """
+    tgt = params.fault_target
+    r_idx = jnp.arange(n_resources, dtype=jnp.int32)
+    hit = tgt[None, :] == r_idx[:, None]                    # [R, K]
+    if params.trunk_of is not None:
+        hit |= (tgt[None, :] - n_resources) == params.trunk_of[:, None]
+    down_r = jnp.any(hit & (due & ~params.fault_up)[None, :], axis=1)
+    up_r = jnp.any(hit & (due & params.fault_up)[None, :], axis=1)
+    return down_r, up_r
+
+
+def _apply_trace(state, fleet, params, due, down_r, up_r, now, n_users,
+                 n_resources, r_pad):
+    """Apply one batch of due fault-trace rows: scheduled downs follow
+    the FAILURE semantics (residents fail-and-refund, slots freed,
+    measurement window reset), scheduled ups the RECOVERY semantics
+    (downtime accrual, cooldown stamp) -- but both deterministic, no
+    PRNG, and the trace *owns* its targets: a trace-down clears any
+    pending stochastic failure/recovery instant for the resource and a
+    trace-up does not re-arm the MTBF stream (mixing trace targets
+    with nonzero MTBF on the same resource is unsupported; see
+    docs/ARCHITECTURE.md "Failure domains").  Every write is gated on
+    the masks, so the body is a bitwise no-op on an empty ``due``
+    (masked-apply contract; no cond needed on the select-free path).
+    """
+    from .types import replace
+    g = state.g
+    on_r = jnp.clip(g.resource, 0, n_resources - 1)
+    eff_down = down_r & state.res_up
+    victim = ((g.status == RUNNING) | (g.status == QUEUED)) & \
+        down_r[on_r]
+    state = _fail_gridlets(state, victim, n_users, now, params)
+    state = replace(
+        state,
+        res_up=state.res_up & ~down_r,
+        next_fail=jnp.where(down_r, INF, state.next_fail),
+        next_recover=jnp.where(down_r, INF, state.next_recover),
+        fail_since=jnp.where(eff_down, now, state.fail_since),
+        first_dispatch=jnp.where(eff_down[None, :], INF,
+                                 state.first_dispatch),
+        trace_ptr=state.trace_ptr + jnp.sum(due, dtype=jnp.int32))
+    state = _free_slots(state, victim & (state.slot >= 0), on_r, r_pad)
+    # ups after downs: same-instant down+up of one resource nets to up
+    eff_up = up_r & ~state.res_up
+    return replace(
+        state,
+        res_up=state.res_up | up_r,
+        next_recover=jnp.where(up_r, INF, state.next_recover),
+        downtime=state.downtime + jnp.where(
+            eff_up & jnp.isfinite(state.fail_since),
+            now - state.fail_since, 0.0),
+        fail_since=jnp.where(eff_up, INF, state.fail_since),
+        recovered_at=jnp.where(eff_up, now, state.recovered_at))
 
 
 def _admit_after_reservation(state, fleet, params, now, n_resources,
@@ -1083,6 +1261,49 @@ def _make_sources(fleet, params, n_users, ctx):
         return jax.lax.cond(
             due_r.any(),
             lambda s: _apply_recoveries(s, params, due_r, now),
+            lambda s: s, state)
+
+    # -- TRACE: replayable fault-injection schedule ---------------------
+    # The deterministic twin of FAILURE/RECOVERY: a cursor walks the
+    # time-sorted (time, target, up) rows; due rows expand through the
+    # trunk incidence into whole failure domains.  params.fault_time is
+    # None (a static gate -- an empty pytree subtree) in the default
+    # configuration, which compiles the exact pre-trace program: one
+    # all-inf candidate, an identity apply.
+    def trace_candidates(state):
+        if params.fault_time is None:
+            return jnp.full((1,), INF, jnp.float32)
+        k_idx = jnp.arange(params.fault_time.shape[0], dtype=jnp.int32)
+        return jnp.where(k_idx >= state.trace_ptr, params.fault_time,
+                         INF)
+
+    def trace_apply(state, now):
+        if params.fault_time is None:
+            return state
+        r_pad = state.row_gridlet.shape[0]
+        k_idx = jnp.arange(params.fault_time.shape[0], dtype=jnp.int32)
+        # Rows are time-sorted, so the due set is exactly the cursor's
+        # contiguous prefix of instants <= now -- empty whenever the
+        # source did not fire (ascending times guarantee it), which is
+        # what makes the unconditional select-free application a
+        # bitwise no-op.
+        due = (k_idx >= state.trace_ptr) & (params.fault_time <= now)
+        down_r, up_r = _trace_masks(params, due, n_resources)
+        ctx[("count", des.K_TRACE)] = jnp.sum(due, dtype=jnp.int32)
+        ctx[("who", des.K_TRACE)] = jnp.where(
+            due.any(), params.fault_target[jnp.argmax(due)],
+            -1).astype(jnp.int32)
+        # QUEUED victims leave the queue mid-rank (like FAILURE); ups
+        # only add capacity, which never perturbs the carried rank.
+        qr, qok = ctx["qcarry"]
+        ctx["qcarry"] = (qr, qok & ~down_r.any())
+        if ctx.get("select_free"):
+            return _apply_trace(state, fleet, params, due, down_r, up_r,
+                                now, n_users, n_resources, r_pad)
+        return jax.lax.cond(
+            due.any(),
+            lambda s: _apply_trace(s, fleet, params, due, down_r, up_r,
+                                   now, n_users, n_resources, r_pad),
             lambda s: s, state)
 
     # -- RESERVATION: windows open/close at params.resv_* boundaries ----
@@ -1269,8 +1490,9 @@ def _make_sources(fleet, params, n_users, ctx):
 
     def arrival_apply(state, now):
         state, arr_due, arr_run, arr_queue = _apply_arrivals(
-            state, fleet, ctx["free_pe"], ctx["arr_pre"], now, n_users,
-            n_resources, select_free=bool(ctx.get("select_free")))
+            state, fleet, params, ctx["free_pe"], ctx["arr_pre"], now,
+            n_users, n_resources,
+            select_free=bool(ctx.get("select_free")))
         ctx[("count", des.K_ARRIVAL)] = jnp.sum(arr_due, dtype=jnp.int32)
         ctx[("who", des.K_ARRIVAL)] = jnp.argmax(arr_due).astype(jnp.int32)
         ctx["newly"] = ctx["newly"] | arr_run
@@ -1406,6 +1628,13 @@ def _make_sources(fleet, params, n_users, ctx):
         des.FnSource(des.K_RECOVERY, "recovery",
                      lambda s: s.next_recover, recovery_apply,
                      horizon_candidates_fn=recovery_horizon),
+        # TRACE keeps the conservative default horizon: every pending
+        # trace instant cuts the speculation horizon (exactly like a
+        # per-resource FAILURE with residents would), so trace rows
+        # only ever fire in committing supersteps and the speculative
+        # micro-steps never need to know the source exists.
+        des.FnSource(des.K_TRACE, "trace", trace_candidates,
+                     trace_apply),
         des.FnSource(des.K_RESERVATION, "reservation",
                      reservation_candidates, reservation_apply),
         des.FnSource(des.K_MARKET, "market",
@@ -1455,7 +1684,8 @@ def _user_flags(state, params, fleet, n_users):
     n_inflight = jax.ops.segment_sum(inflight.astype(jnp.int32), u,
                                      num_segments=n_users)
     min_job_cost = broker_mod.min_affordable_cost(g, fleet, n_users,
-                                                  price=state.price)
+                                                  price=state.price,
+                                                  params=params)
     all_done = n_not_done == 0
     active = ((state.t < params.deadline) &
               (state.spent + min_job_cost <= params.budget) &
@@ -1637,6 +1867,7 @@ def _step_commit(state: SimState, fleet, params: SimParams,
 
     fired_interfering = (fired_t[pos_of[des.K_FAILURE]]
                          | fired_t[pos_of[des.K_RECOVERY]]
+                         | fired_t[pos_of[des.K_TRACE]]
                          | fired_t[pos_of[des.K_RESERVATION]])
     return state, _slab_after(state, ctx, ctx["scan"], fired_interfering,
                               fleet, n_resources, r_pad), finished
@@ -2189,6 +2420,10 @@ def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
         next_recover=jnp.full((fleet.r,), INF, jnp.float32),
         fail_since=jnp.full((fleet.r,), INF, jnp.float32),
         downtime=jnp.zeros((fleet.r,), jnp.float32),
+        # -inf: t - recovered_at is +inf for a never-failed resource,
+        # so the cooldown blacklist can never trigger on it.
+        recovered_at=jnp.full((fleet.r,), -INF, jnp.float32),
+        trace_ptr=jnp.asarray(0, jnp.int32),
         rng_key=key,
         price=jnp.broadcast_to(
             jnp.asarray(fleet.cost_per_mi(), jnp.float32), (fleet.r,)),
@@ -2476,6 +2711,37 @@ def _commit_lanes(state, fleet, params, n_users, slab):
         jnp.any(fr_due), fr_taken, fr_skip,
         (state, params, t_next, pack))
 
+    # ---- TRACE: static python gate + cond on any lane's cursor due ---
+    # (no trace configured = the source is inert and the counts fall
+    # through to the tail's fired-column default, which is always 0;
+    # with a trace, the conservative horizon guarantees rows fire only
+    # in committing supersteps -- exactly here -- and the ascending
+    # fault times make the per-lane apply a bitwise no-op for lanes
+    # whose cursor row is not yet due)
+    if params.fault_time is not None:
+        fired_tr = fired[:, pos[des.K_TRACE]]
+
+        def trace_taken(ops):
+            state, params, t_next, pack = ops
+
+            def one(state, params, t_next, pack):
+                ctx = _ctx(pack)
+                src = _make_sources(fleet, params, n_users, ctx)
+                state = src[pos[des.K_TRACE]].apply(state, t_next)
+                return (state, dict(pack, qcarry=ctx["qcarry"]),
+                        ctx[("count", des.K_TRACE)],
+                        ctx[("who", des.K_TRACE)])
+
+            return jax.vmap(one)(state, params, t_next, pack)
+
+        def trace_skip(ops):
+            state, params, t_next, pack = ops
+            return state, pack, zero_i, zero_i
+
+        state, pack, c_trace, w_trace = jax.lax.cond(
+            jnp.any(fired_tr), trace_taken, trace_skip,
+            (state, params, t_next, pack))
+
     # ---- RESERVATION: cond on any lane crossing a boundary -----------
     fired_resv = fired[:, pos[des.K_RESERVATION]]
 
@@ -2598,6 +2864,9 @@ def _commit_lanes(state, fleet, params, n_users, slab):
     if net:
         c_by[des.K_NETWORK] = c_net
         w_by[des.K_NETWORK] = w_net
+    if params.fault_time is not None:
+        c_by[des.K_TRACE] = c_trace
+        w_by[des.K_TRACE] = w_trace
     no_who = jnp.full(t_next.shape, -1, jnp.int32)
     counts = jnp.stack(
         [c_by.get(k, fired[:, i].astype(jnp.int32))
@@ -2606,6 +2875,7 @@ def _commit_lanes(state, fleet, params, n_users, slab):
                       for k in des.PRIORITY_ORDER], axis=1)
     fired_int = (fired[:, pos[des.K_FAILURE]]
                  | fired[:, pos[des.K_RECOVERY]]
+                 | fired[:, pos[des.K_TRACE]]
                  | fired[:, pos[des.K_RESERVATION]])
 
     def tail(state, params, t_next, fired_int, pack, counts, whos):

@@ -36,6 +36,8 @@ class GridletBatch:
     finish: jax.Array         # f32: completion instant at the resource
     returned: jax.Array       # f32: instant the result reached the broker
     cost: jax.Array           # f32: committed processing cost (G$)
+    n_retries: jax.Array      # i32: times this gridlet was failed+refunded
+    retry_at: jax.Array       # f32: earliest re-dispatch instant (backoff)
 
     @property
     def n(self) -> int:
@@ -68,6 +70,8 @@ def make_batch(length_mi, in_bytes=None, out_bytes=None, user=None,
         finish=jnp.full((n,), INF, jnp.float32),
         returned=jnp.full((n,), INF, jnp.float32),
         cost=zeros,
+        n_retries=jnp.zeros((n,), jnp.int32),
+        retry_at=zeros,
     )
 
 

@@ -95,6 +95,87 @@ def link_tabled(nbytes, baud_rate):
     return (nbytes > 0.0) & (baud > 0.0) & (baud < BIG)
 
 
+# ----------------------------------------------------------------------
+# Shared-trunk topology: the [L, R] link-incidence map collapsed to a
+# per-resource trunk id.  Each resource keeps its private last-mile link
+# (one [L, T] row as before); a trunk groups rows that additionally
+# share an upstream WAN segment of finite capacity.  Because every
+# resource sits behind at most one trunk, the full [L, R] incidence
+# matrix is rank-structured enough to store as trunk_of: i32[R]
+# (-1 = private-only) plus per-trunk baud/background-flow vectors --
+# the one-hot expansion IS the incidence map, built on demand below.
+# ----------------------------------------------------------------------
+
+def trunk_topology(trunk_of, n_resources, trunk_baud=None, trunk_bg=None):
+    """Build/validate a shared-trunk topology.
+
+    trunk_of: per-resource trunk id (int sequence of length R; -1 =
+        the resource hangs off its private link only).  Ids must be
+        dense 0..n_trunks-1 (any subset of resources per trunk).
+    trunk_baud: per-trunk capacity in bytes/time-unit (scalar or
+        [n_trunks]; default BIG = trunks never bind, private-link
+        behaviour).
+    trunk_bg: per-trunk phantom background flows (scalar or
+        [n_trunks]; default 0).
+
+    Returns ``(trunk_of i32[R], trunk_baud f32[R], trunk_bg f32[R])``
+    with the per-trunk vectors gathered out to per-resource form --
+    the layout SimParams carries (resource-major like every other
+    fleet table, so the engine's r_pad padding applies uniformly).
+    """
+    trunk_of = jnp.asarray(trunk_of, jnp.int32)
+    if trunk_of.shape != (n_resources,):
+        raise ValueError(
+            f"trunk_of must have shape ({n_resources},), "
+            f"got {trunk_of.shape}")
+    n_trunks = int(trunk_of.max()) + 1 if int(trunk_of.max()) >= 0 else 0
+    if int(trunk_of.min()) < -1:
+        raise ValueError("trunk ids must be >= -1")
+    if trunk_baud is None:
+        trunk_baud = BIG
+    if trunk_bg is None:
+        trunk_bg = 0.0
+    baud_t = jnp.broadcast_to(
+        jnp.asarray(trunk_baud, jnp.float32), (max(n_trunks, 1),))
+    bg_t = jnp.broadcast_to(
+        jnp.asarray(trunk_bg, jnp.float32), (max(n_trunks, 1),))
+    idx = jnp.clip(trunk_of, 0, max(n_trunks - 1, 0))
+    private = trunk_of < 0
+    baud_r = jnp.where(private, BIG, baud_t[idx])
+    bg_r = jnp.where(private, 0.0, bg_t[idx])
+    return trunk_of, baud_r, bg_r
+
+
+def trunk_incidence(trunk_of, n_resources):
+    """One-hot [R, R] trunk co-membership matrix: cell (i, j) is True
+    when resources i and j share a trunk (diagonal True only for
+    trunked rows).  This is the `[L, R]` incidence map contracted with
+    itself -- what both the trunk fair-share divisor and the
+    correlated-failure expansion gather through."""
+    trunk_of = jnp.asarray(trunk_of, jnp.int32)
+    same = trunk_of[:, None] == trunk_of[None, :]
+    return same & (trunk_of >= 0)[:, None]
+
+
+def trunk_rate_cap(occupancy, trunk_of, trunk_baud, trunk_bg):
+    """Per-resource fair-share rate cap from trunk membership.
+
+    occupancy: i32/f32[R] live transfer count per private link row;
+    trunk_of/trunk_baud/trunk_bg: the per-resource topology vectors
+    from :func:`trunk_topology` (r_pad-padded by the engine; padded
+    rows carry trunk_of = -1).  A trunk with M total resident
+    transfers across its member rows and bg phantom flows grants each
+    of them at most ``trunk_baud / max(M + bg, 1)`` -- the same
+    fair-share law as the private link, evaluated on the *summed*
+    membership.  Private-only rows get a BIG cap (never binds).
+    """
+    occ = jnp.asarray(occupancy, jnp.float32)
+    inc = trunk_incidence(trunk_of, occ.shape[0])
+    m_trunk = jnp.sum(jnp.where(inc, occ[None, :], 0.0), axis=1)
+    cap = trunk_baud / jnp.maximum(m_trunk + trunk_bg, 1.0)
+    return jnp.where(trunk_of >= 0, cap, BIG)
+
+
 def submit_delay(gridlets, fleet, resource_idx):
     """User -> resource staging delay for each gridlet (input files)."""
     return transfer_delay(gridlets.in_bytes, fleet.baud_rate[resource_idx])

@@ -70,7 +70,31 @@ class Scenario(NamedTuple):
     plan_ahead: enable the cs/0203020 plan-ahead DBC dispatch --
         reservation windows and link queueing delay priced into the
         capacity prediction, and the exact grouped cost-time key
-        (default False = the legacy reactive broker).
+        (default False = the legacy reactive broker),
+    trunk_of: per-resource shared-trunk id ([R] ints; -1 = private
+        link only; default None = no trunks, the bitwise-frozen legacy
+        topology).  Resources sharing a trunk id form one failure
+        domain AND split the trunk's bandwidth (net mode),
+    trunk_baud: per-trunk capacity (scalar or [n_trunks]; default
+        "never binds") -- the upstream WAN segment's fair share caps
+        every member transfer's rate at ``trunk_baud / (M + trunk_bg)``
+        with M the total resident transfers across the trunk,
+    trunk_bg: per-trunk phantom background flows (scalar or
+        [n_trunks]; default 0),
+    fault_trace: replayable fault-injection schedule -- an iterable of
+        ``(time, target, up)`` rows or an equivalent [K, 3] array;
+        ``target`` is a resource index (0..R-1) or ``R + trunk_id`` to
+        hit a whole trunk (every incident resource fails/recovers in
+        one superstep).  ``up=0`` fails the target (in-flight gridlets
+        refunded and resubmitted), ``up=1`` brings it back.  Rows are
+        applied in time order; default None = no injection,
+    retry_limit: max per-gridlet failure-resubmission count before the
+        broker abandons it (default: unlimited, the legacy behaviour),
+    backoff_base: exponential-backoff base delay after a failure; a
+        gridlet's n-th failure blocks re-dispatch until
+        ``t_fail + backoff_base * 2**(n-1)`` (default 0 = immediate),
+    blacklist_cooldown: how long the broker shuns a freshly recovered
+        resource (default 0 = dispatch immediately on recovery).
     """
     mtbf: Any = None
     mttr: Any = None
@@ -87,6 +111,13 @@ class Scenario(NamedTuple):
     auction_period: Any = None
     auction_seed: Any = None
     plan_ahead: Any = None
+    trunk_of: Any = None
+    trunk_baud: Any = None
+    trunk_bg: Any = None
+    fault_trace: Any = None
+    retry_limit: Any = None
+    backoff_base: Any = None
+    blacklist_cooldown: Any = None
 
 
 class ExperimentResult(NamedTuple):
@@ -195,7 +226,11 @@ def _scenario_params(fleet, deadline, budget, opt, n_users,
         auction_key=jax.random.PRNGKey(
             s.seed if s.auction_seed is None else s.auction_seed),
         plan_ahead=bool(s.plan_ahead) if s.plan_ahead is not None
-        else False)
+        else False,
+        trunk_of=s.trunk_of, trunk_baud=s.trunk_baud,
+        trunk_bg=s.trunk_bg, fault_trace=s.fault_trace,
+        retry_limit=s.retry_limit, backoff_base=s.backoff_base,
+        blacklist_cooldown=s.blacklist_cooldown)
     if s.sched_min_period is not None:
         p = treplace(p, sched_min_period=jnp.asarray(
             s.sched_min_period, jnp.float32))

@@ -761,7 +761,7 @@ def event_scan_slab_xla(remaining, mips_eff, num_pe, k, tie=None,
 # (ref.link_scan_ref); all share _link_math for bitwise-identical
 # arithmetic.
 
-def _link_math(rem, baud, bg, tie):
+def _link_math(rem, baud, bg, tie, cap=None):
     """Shared fair-share arithmetic (jnp only -- runs inside the Pallas
     kernel body and as the XLA fallback).
 
@@ -769,14 +769,23 @@ def _link_math(rem, baud, bg, tie):
     baud/bg [L, 1] f32.  A link with non-positive or non-finite baud is
     dead: the engine's ``network.link_tabled`` predicate never routes a
     transfer onto one, but the row is masked here too so the outputs
-    stay well-defined.  Returns (rate [L, T], t_min [L, 1], argmin_col
-    [L, 1] i32, occupancy [L, 1] i32).
+    stay well-defined.  ``cap`` [L, 1] f32 is an optional per-row
+    fair-share rate ceiling -- the shared-trunk divisor: rows behind a
+    common WAN trunk get ``trunk_baud / (M + trunk_bg)`` with M the
+    trunk-wide occupancy (computed by the caller across rows, since a
+    row-blocked kernel grid cannot gather cross-row; see
+    core/network.trunk_rate_cap).  ``cap=None`` is the private-link
+    topology, bitwise-identical to the pre-trunk kernel.  Returns
+    (rate [L, T], t_min [L, 1], argmin_col [L, 1] i32, occupancy
+    [L, 1] i32).
     """
     l, t_n = rem.shape
     live = (baud > 0.0) & (baud < BIG)
     valid = (rem > 0.0) & (rem < BIG) & live
     m = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
     rate = jnp.where(valid, baud / jnp.maximum(m + bg, 1.0), 0.0)
+    if cap is not None:
+        rate = jnp.where(valid, jnp.minimum(rate, cap), 0.0)
     t = jnp.where(valid, rem / jnp.maximum(rate, 1e-30), BIG)
     tmin = jnp.min(t, axis=1, keepdims=True)
     tkey = jnp.where(valid, tie, BIG)
@@ -799,6 +808,17 @@ def _link_kernel(rem_ref, tie_ref, baud_ref, bg_ref, rate_ref,
     occ_ref[...] = occ
 
 
+def _link_kernel_cap(rem_ref, tie_ref, baud_ref, bg_ref, cap_ref,
+                     rate_ref, tmin_ref, amin_ref, occ_ref):
+    rate, tmin, amin, occ = _link_math(rem_ref[...], baud_ref[...],
+                                       bg_ref[...], tie_ref[...],
+                                       cap=cap_ref[...])
+    rate_ref[...] = rate
+    tmin_ref[...] = tmin
+    amin_ref[...] = amin
+    occ_ref[...] = occ
+
+
 def _link_defaults(remaining, tie, bg):
     l, t_n = remaining.shape
     if tie is None:
@@ -810,19 +830,22 @@ def _link_defaults(remaining, tie, bg):
             jnp.asarray(bg, jnp.float32).reshape(l))
 
 
-def link_scan(remaining, baud, bg=None, tie=None, *, block_l: int = 8,
-              interpret: bool = False):
+def link_scan(remaining, baud, bg=None, tie=None, cap=None, *,
+              block_l: int = 8, interpret: bool = False):
     """Fair-share link scan over the [L, T] transfer-slot table.
 
     remaining: [L, T] bytes still to move (<= 0 or >= BIG marks a free
     slot); baud: [L] link capacity in bytes/time-unit; bg: [L] phantom
     background flows sharing each link (default 0; may be fractional);
     tie: [L, T] FIFO tie-break key for the argmin (defaults to the col
-    index; the engine passes the flat gridlet index).  Returns (rate
-    [L, T], t_min [L], argmin_col [L] i32, occupancy [L] i32);
-    argmin_col is T for empty (or dead) rows.  The transfer axis is
-    lane-tiled internally (padded to LANE multiples, outputs sliced
-    back) -- no power-of-two bump: fair shares need no rank network.
+    index; the engine passes the flat gridlet index); cap: optional
+    [L] per-row fair-share rate ceiling -- the shared-trunk divisor
+    (see ``_link_math``; None = private-link topology, bitwise-frozen
+    legacy kernel).  Returns (rate [L, T], t_min [L], argmin_col [L]
+    i32, occupancy [L] i32); argmin_col is T for empty (or dead) rows.
+    The transfer axis is lane-tiled internally (padded to LANE
+    multiples, outputs sliced back) -- no power-of-two bump: fair
+    shares need no rank network.
     """
     l, t_n = remaining.shape
     remaining, tie, bg = _link_defaults(remaining, tie, bg)
@@ -834,20 +857,27 @@ def link_scan(remaining, baud, bg=None, tie=None, *, block_l: int = 8,
     block_l = min(block_l, l)
     assert l % block_l == 0, "pad the link axis upstream"
 
+    row_spec = pl.BlockSpec((block_l, t_pad), lambda i: (i, 0))
+    col_spec = pl.BlockSpec((block_l, 1), lambda i: (i, 0))
+    in_specs = [row_spec, row_spec, col_spec, col_spec]
+    inputs = [remaining, tie,
+              jnp.asarray(baud, jnp.float32).reshape(l, 1),
+              bg.reshape(l, 1)]
+    kernel = _link_kernel
+    if cap is not None:
+        kernel = _link_kernel_cap
+        in_specs = in_specs + [col_spec]
+        inputs = inputs + [jnp.asarray(cap, jnp.float32).reshape(l, 1)]
+
     rate, tmin, amin, occ = pl.pallas_call(
-        _link_kernel,
+        kernel,
         grid=(l // block_l,),
-        in_specs=[
-            pl.BlockSpec((block_l, t_pad), lambda i: (i, 0)),
-            pl.BlockSpec((block_l, t_pad), lambda i: (i, 0)),
-            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((block_l, t_pad), lambda i: (i, 0)),
-            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
+            row_spec,
+            col_spec,
+            col_spec,
+            col_spec,
         ],
         out_shape=[
             jax.ShapeDtypeStruct((l, t_pad), jnp.float32),
@@ -856,24 +886,24 @@ def link_scan(remaining, baud, bg=None, tie=None, *, block_l: int = 8,
             jax.ShapeDtypeStruct((l, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(remaining, tie,
-      jnp.asarray(baud, jnp.float32).reshape(l, 1),
-      bg.reshape(l, 1))
+    )(*inputs)
     # un-pad: the only out-of-T value is the empty/dead-row sentinel
     # t_pad -> remap to the caller's T.
     return (rate[:, :t_n], tmin[:, 0], jnp.minimum(amin[:, 0], t_n),
             occ[:, 0])
 
 
-def link_scan_xla(remaining, baud, bg=None, tie=None):
+def link_scan_xla(remaining, baud, bg=None, tie=None, cap=None):
     """Vectorised jnp fallback with identical semantics to the link
     kernel (shared ``_link_math``) -- the CPU hot path the engine's
     NETWORK source routes through off-TPU."""
     l, t_n = remaining.shape
     remaining, tie, bg = _link_defaults(remaining, tie, bg)
+    cap = (None if cap is None
+           else jnp.asarray(cap, jnp.float32).reshape(l, 1))
     rate, tmin, amin, occ = _link_math(
         remaining, jnp.asarray(baud, jnp.float32).reshape(l, 1),
-        bg.reshape(l, 1), tie)
+        bg.reshape(l, 1), tie, cap=cap)
     return rate, tmin[:, 0], amin[:, 0], occ[:, 0]
 
 

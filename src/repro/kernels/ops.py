@@ -123,21 +123,25 @@ def event_scan_slab(remaining, mips_eff, num_pe, k=8, tie=None,
 
 
 @functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
-def link_scan(remaining, baud, bg=None, tie=None, *, block_l=8,
-              interpret=None):
+def link_scan(remaining, baud, bg=None, tie=None, cap=None, *,
+              block_l=8, interpret=None):
     """Fair-share link transfer forecast (the network analogue of
     :func:`event_scan`; see kernels.event_scan.link_scan).
 
     ``remaining`` [L, T] bytes in flight per transfer slot, ``baud``
     [L] link capacity, ``bg`` [L] phantom background flows sharing each
-    link.  Returns (rate [L, T], t_min [L], argmin_col [L], occupancy
-    [L]).  Routing mirrors :func:`event_scan`: compiled Pallas on TPU,
-    the vectorised XLA fallback on CPU hosts (the engine's NETWORK
-    event source hot path), Pallas interpret mode only on request.
+    link, ``cap`` optional [L] per-row rate ceiling (the shared-trunk
+    fair share computed across rows; None = private-link topology,
+    bitwise-frozen legacy path).  Returns (rate [L, T], t_min [L],
+    argmin_col [L], occupancy [L]).  Routing mirrors
+    :func:`event_scan`: compiled Pallas on TPU, the vectorised XLA
+    fallback on CPU hosts (the engine's NETWORK event source hot
+    path), Pallas interpret mode only on request.
     """
     if interpret is None and jax.default_backend() != "tpu":
-        return _event.link_scan_xla(remaining, baud, bg=bg, tie=tie)
-    return _event.link_scan(remaining, baud, bg=bg, tie=tie,
+        return _event.link_scan_xla(remaining, baud, bg=bg, tie=tie,
+                                    cap=cap)
+    return _event.link_scan(remaining, baud, bg=bg, tie=tie, cap=cap,
                             block_l=block_l,
                             interpret=_auto_interpret(interpret))
 

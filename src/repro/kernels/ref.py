@@ -262,17 +262,18 @@ def event_scan_slab_assoc_ref(remaining, mips_eff, num_pe, k, tie=None,
             jnp.asarray(col_out, jnp.int32))
 
 
-def link_scan_ref(remaining, baud, bg=None, tie=None):
+def link_scan_ref(remaining, baud, bg=None, tie=None, cap=None):
     """Fair-share link scan, directly transcribed per link row.
 
     remaining: [L, T] bytes (<= 0 / huge marks a free slot); baud: [L]
     link capacity; bg: [L] phantom background flows (default 0); tie:
-    [L, T] FIFO tie-break key (default: col index).  Every active
-    transfer on a link receives baud / (m + bg); a link with
-    non-positive or non-finite baud is dead (all outputs masked).
-    Returns (rate [L, T], t_min [L], argmin_col [L], occupancy [L]);
-    argmin_col is T for empty (or dead) rows -- the contract of
-    kernels.event_scan.link_scan.
+    [L, T] FIFO tie-break key (default: col index); cap: optional [L]
+    per-row rate ceiling (the shared-trunk fair share; None = no
+    trunk).  Every active transfer on a link receives
+    min(baud / (m + bg), cap); a link with non-positive or non-finite
+    baud is dead (all outputs masked).  Returns (rate [L, T], t_min
+    [L], argmin_col [L], occupancy [L]); argmin_col is T for empty (or
+    dead) rows -- the contract of kernels.event_scan.link_scan.
     """
     import numpy as np
     remaining = np.asarray(remaining, np.float64)
@@ -287,6 +288,8 @@ def link_scan_ref(remaining, baud, bg=None, tie=None):
         bg = np.zeros((l_n,), np.float64)
     else:
         bg = np.asarray(bg, np.float64)
+    if cap is not None:
+        cap = np.asarray(cap, np.float64)
     rate = np.zeros((l_n, t_n))
     tmin = np.full((l_n,), 3.0e38)
     amin = np.full((l_n,), t_n, np.int32)
@@ -300,6 +303,10 @@ def link_scan_ref(remaining, baud, bg=None, tie=None):
         if m == 0:
             continue
         share = baud[r] / max(m + bg[r], 1.0)
+        if cap is not None:
+            # float32 the min like _link_math (its inputs are f32) so
+            # oracle vs kernel agreement stays exact at the crossover.
+            share = min(share, np.float64(np.float32(cap[r])))
         best = None
         for j in xfers:
             rate[r, j] = share

@@ -1,0 +1,318 @@
+"""Correlated failure domains: shared-trunk topology, trace-driven
+fault injection and the fault-tolerant retry/backoff broker.
+
+Pins the PR's three layers and their contracts:
+
+* topology math (``network.trunk_topology`` / ``trunk_incidence`` /
+  ``trunk_rate_cap``) and the capped fair-share ``link_scan`` across
+  all three kernel paths (Pallas interpret / XLA / numpy oracle);
+* engine semantics -- a trunk-target trace row fails every resource
+  behind the trunk in ONE superstep (one K_TRACE event), downtime
+  accrues per member, and the failure counters replay bit-for-bit
+  across every batch depth and engine path (``run`` / ``run_inner`` /
+  ``run_sweep_lanes``);
+* broker fault tolerance -- retry budgets abandon chronically failing
+  gridlets, exponential backoff delays re-dispatch, the cooldown
+  blacklist shuns freshly recovered resources;
+* the frozen default: a Scenario with every new knob at its default is
+  bitwise identical to no scenario at all, and the per-lane
+  ``truncated`` / ``overflow`` diagnostics surface through ``sweep`` /
+  ``sweep_sharded``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import des, engine, gridlet, network, resource, simulation
+from repro.core.types import DONE, FAILED, OPT_COST, TIME_SHARED
+from repro.kernels import ops
+from repro.kernels import event_scan as event_scan_mod
+from repro.kernels import ref
+
+
+def _fleet3():
+    return resource.make_fleet([4, 4, 4], 100.0, [1.0, 2.0, 3.0],
+                               TIME_SHARED)
+
+
+def _jobs(n=12, mi=500.0, in_bytes=None):
+    return gridlet.make_batch(jnp.full((n,), mi), in_bytes=in_bytes,
+                              user=jnp.zeros((n,), jnp.int32))
+
+
+# ----------------------------------------------------------------------
+# Topology math
+# ----------------------------------------------------------------------
+def test_trunk_topology_gathers_per_resource():
+    t_of, baud_r, bg_r = network.trunk_topology(
+        [0, 1, 0, -1], 4, trunk_baud=[100.0, 200.0], trunk_bg=[1.0, 0.0])
+    assert np.array_equal(np.asarray(t_of), [0, 1, 0, -1])
+    np.testing.assert_allclose(np.asarray(baud_r),
+                               [100.0, 200.0, 100.0, network.BIG])
+    np.testing.assert_allclose(np.asarray(bg_r), [1.0, 0.0, 1.0, 0.0])
+
+
+def test_trunk_topology_validates():
+    with pytest.raises(ValueError):
+        network.trunk_topology([0, 0], 3)          # wrong length
+    with pytest.raises(ValueError):
+        network.trunk_topology([0, -2], 2)         # id below -1
+
+
+def test_trunk_incidence_and_rate_cap():
+    t_of = jnp.asarray([0, 0, 1, -1], jnp.int32)
+    inc = np.asarray(network.trunk_incidence(t_of, 4))
+    assert np.array_equal(inc, [[1, 1, 0, 0], [1, 1, 0, 0],
+                                [0, 0, 1, 0], [0, 0, 0, 0]])
+    # occupancy 3+2 on trunk 0, 4 on trunk 1; bg 1 on trunk 0
+    cap = np.asarray(network.trunk_rate_cap(
+        jnp.asarray([3, 2, 4, 7]), t_of,
+        jnp.asarray([120.0, 120.0, 80.0, network.BIG]),
+        jnp.asarray([1.0, 1.0, 0.0, 0.0])))
+    np.testing.assert_allclose(cap[:3], [120.0 / 6, 120.0 / 6, 80.0 / 4])
+    assert cap[3] == network.BIG                   # private never binds
+
+
+def test_link_scan_cap_paths_agree():
+    rng = np.random.RandomState(5)
+    rem = rng.exponential(1e5, (8, 12)).astype(np.float32)
+    rem[rng.rand(8, 12) < 0.4] = 0.0
+    baud = rng.uniform(100.0, 1e4, (8,)).astype(np.float32)
+    bg = rng.choice([0.0, 1.0], (8,)).astype(np.float32)
+    cap = rng.uniform(50.0, 500.0, (8,)).astype(np.float32)
+    cap[0] = network.BIG                           # never-binding row
+    args = (jnp.asarray(rem), jnp.asarray(baud))
+    kw = dict(bg=jnp.asarray(bg), cap=jnp.asarray(cap))
+    pallas_out = ops.link_scan(*args, **kw, interpret=True)
+    xla_out = event_scan_mod.link_scan_xla(*args, **kw)
+    ref_out = ref.link_scan_ref(rem, baud, bg=bg, cap=cap)
+    for got, name in ((xla_out, "xla"), (ref_out, "oracle")):
+        np.testing.assert_allclose(np.asarray(pallas_out[0]),
+                                   np.asarray(got[0]), rtol=1e-4,
+                                   atol=1e-4, err_msg=name)
+        np.testing.assert_allclose(np.asarray(pallas_out[1]),
+                                   np.asarray(got[1]), rtol=1e-4,
+                                   err_msg=name)
+    # the cap binds: no transfer exceeds it, and rows where the private
+    # share already sat below the cap are untouched
+    rate = np.asarray(xla_out[0])
+    assert (rate <= cap[:, None] * (1 + 1e-5)).all()
+    un_out = event_scan_mod.link_scan_xla(*args, bg=jnp.asarray(bg))
+    un_rate = np.asarray(un_out[0])
+    loose = un_rate <= cap[:, None] * (1 - 1e-5)
+    np.testing.assert_allclose(rate[loose], un_rate[loose], rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# Engine: correlated failure + trace semantics
+# ----------------------------------------------------------------------
+def test_trunk_cut_fails_domain_in_one_superstep():
+    """One trunk-target down row fells every resource behind the trunk
+    in a single K_TRACE event; victims refund, resubmit elsewhere and
+    still finish."""
+    sc = simulation.Scenario(trunk_of=[0, 0, -1],
+                             fault_trace=[(1.0, 3 + 0, 0)])  # R + id
+    r = simulation.run_experiment(_jobs(), _fleet3(), 100.0, 1e9,
+                                  OPT_COST, scenario=sc)
+    assert int(r.n_failed) > 0
+    assert int(r.n_resubmits) == int(r.n_failed)
+    assert float(r.n_done.sum()) == 12.0
+    dt = np.asarray(r.downtime)
+    assert dt[0] == dt[1] and dt[0] > 0.0 and dt[2] == 0.0
+
+
+def test_trace_event_count_is_one_per_instant():
+    """The whole failure domain goes down under ONE trace event -- the
+    event log records a single K_TRACE firing per schedule row, not one
+    per member resource."""
+    sc = simulation.Scenario(trunk_of=[0, 0, -1],
+                             fault_trace=[(1.0, 3, 0), (5.0, 3, 1)])
+    g, fleet = _jobs(), _fleet3()
+    params = simulation._scenario_params(fleet, 100.0, 1e9, OPT_COST, 1,
+                                         sc)
+    res = engine.run(g, fleet, params, 1, 512,
+                     max_jobs=simulation.safe_max_jobs(g, params, fleet),
+                     batch=1)
+    kinds = np.asarray(res.trace[1])
+    assert (kinds == des.K_TRACE).sum() == 2
+    dt = np.asarray(res.downtime)
+    np.testing.assert_allclose(dt, [4.0, 4.0, 0.0], atol=1e-4)
+
+
+def test_trace_counters_identical_across_paths():
+    """n_failed / n_resubmits / downtime replay bit-for-bit across
+    batch depths {1, 2, 8} and across run / run_inner /
+    run_sweep_lanes under a trunk-cut trace scenario."""
+    sc = simulation.Scenario(trunk_of=[0, 0, -1],
+                             fault_trace=[(1.0, 3, 0), (5.0, 3, 1),
+                                          (9.0, 2, 0), (11.0, 2, 1)],
+                             retry_limit=3, backoff_base=0.5,
+                             blacklist_cooldown=2.0)
+    g, fleet = _jobs(), _fleet3()
+    params = simulation._scenario_params(fleet, 100.0, 1e9, OPT_COST, 1,
+                                         sc)
+    kw = dict(max_jobs=simulation.safe_max_jobs(g, params, fleet))
+    ref_res = engine.run(g, fleet, params, 1, 512, batch=1, **kw)
+    want = {f: np.asarray(getattr(ref_res, f))
+            for f in ("n_failed", "n_resubmits", "downtime", "spent",
+                      "term_time")}
+    assert int(ref_res.n_failed) > 0
+
+    runs = {}
+    for b in (2, 8):
+        runs[f"run.b{b}"] = engine.run(g, fleet, params, 1, 512,
+                                       batch=b, **kw)
+    runs["run_inner"] = jax.jit(
+        lambda gg, pp: engine.run_inner(gg, fleet, pp, 1, 512, **kw))(
+        g, params)
+    lanes = jax.jit(
+        lambda gg, pp: engine.run_sweep_lanes(gg, fleet, pp, 1, 512,
+                                              batch=8, **kw))(
+        g, jax.tree_util.tree_map(lambda a: jnp.stack([a, a]), params))
+    for lane in range(2):
+        runs[f"lanes.l{lane}"] = jax.tree_util.tree_map(
+            lambda a: a[lane], lanes)
+    for name, r in runs.items():
+        for f, w in want.items():
+            assert np.array_equal(w, np.asarray(getattr(r, f))), \
+                f"{name} diverges at {f}"
+
+
+def test_trunk_bandwidth_caps_transfer_rates():
+    """Net mode: two resources behind a half-speed trunk finish their
+    stagings later than over private links, identically at every batch
+    depth."""
+    g = _jobs(n=4, mi=100.0, in_bytes=jnp.full((4,), 1000.0))
+    fleet = resource.make_fleet([4, 4], 100.0, 1.0, TIME_SHARED)
+    r_priv = simulation.run_experiment(
+        g, fleet, 1000.0, 1e9, OPT_COST, net_cap=None,
+        scenario=simulation.Scenario(baud_rate=100.0))
+    sc = simulation.Scenario(baud_rate=100.0, trunk_of=[0, 0],
+                             trunk_baud=50.0)
+    r_tr = simulation.run_experiment(g, fleet, 1000.0, 1e9, OPT_COST,
+                                     net_cap=None, scenario=sc)
+    assert float(r_tr.term_time.max()) > float(r_priv.term_time.max())
+    for b in (1, 2):
+        rb = simulation.run_experiment(g, fleet, 1000.0, 1e9, OPT_COST,
+                                       net_cap=None, scenario=sc,
+                                       batch=b)
+        assert float(rb.term_time.max()) == float(r_tr.term_time.max())
+        assert float(rb.spent.sum()) == float(r_tr.spent.sum())
+
+
+# ----------------------------------------------------------------------
+# Broker fault tolerance
+# ----------------------------------------------------------------------
+def test_retry_limit_abandons_chronic_failures():
+    """With retry_limit=0 a single failure abandons the gridlet: no
+    resubmission, terminal FAILED status, broker still terminates."""
+    fleet = resource.make_fleet([4], 100.0, 1.0, TIME_SHARED)
+    sc = simulation.Scenario(fault_trace=[(1.0, 0, 0), (2.0, 0, 1)],
+                             retry_limit=0)
+    r = simulation.run_experiment(_jobs(), fleet, 500.0, 1e9, OPT_COST,
+                                  scenario=sc, max_events=4096)
+    status = np.asarray(r.gridlets.status)
+    assert int(r.n_failed) > 0
+    assert (status == FAILED).sum() == int(r.n_failed)
+    assert int(r.n_resubmits) == 0
+    assert not bool(r.truncated)
+    # untouched gridlets still finish
+    assert float(r.n_done.sum()) == 12.0 - int(r.n_failed)
+
+
+def test_backoff_delays_redispatch():
+    """Exponential backoff holds failed gridlets out of the dispatch
+    pool: a first retry waits exactly backoff_base after the failure
+    (retry_at == t_fail + base * 2**0) and nothing re-starts before
+    it; without backoff re-dispatch follows recovery immediately."""
+    fleet = resource.make_fleet([4], 100.0, 1.0, TIME_SHARED)
+    trace = [(1.0, 0, 0), (1.5, 0, 1)]
+    base = simulation.run_experiment(
+        _jobs(), fleet, 1000.0, 1e9, OPT_COST, max_events=4096,
+        scenario=simulation.Scenario(fault_trace=trace))
+    backed = simulation.run_experiment(
+        _jobs(), fleet, 1000.0, 1e9, OPT_COST, max_events=4096,
+        scenario=simulation.Scenario(fault_trace=trace,
+                                     backoff_base=100.0))
+    assert float(base.n_done.sum()) == 12.0
+    assert float(backed.n_done.sum()) == 12.0
+    failed = np.asarray(backed.gridlets.n_retries) > 0
+    assert failed.sum() == int(backed.n_failed) > 0
+    np.testing.assert_allclose(
+        np.asarray(backed.gridlets.retry_at)[failed], 1.0 + 100.0)
+    # no failed gridlet completes before its retry stamp -- the wait
+    # dwarfs the whole no-backoff makespan, so the comparison is
+    # unambiguous under time-shared contention effects
+    assert np.asarray(base.gridlets.finish).max() < 101.0
+    assert np.asarray(backed.gridlets.finish)[failed].min() >= 101.0
+
+
+def test_blacklist_cooldown_shuns_recovered_resource():
+    """A freshly recovered resource is shunned for blacklist_cooldown
+    time units: with a single resource the whole farm stalls that long
+    before re-dispatch."""
+    fleet = resource.make_fleet([4], 100.0, 1.0, TIME_SHARED)
+    trace = [(1.0, 0, 0), (2.0, 0, 1)]
+    plain = simulation.run_experiment(
+        _jobs(), fleet, 1000.0, 1e9, OPT_COST, max_events=4096,
+        scenario=simulation.Scenario(fault_trace=trace))
+    shunned = simulation.run_experiment(
+        _jobs(), fleet, 1000.0, 1e9, OPT_COST, max_events=4096,
+        scenario=simulation.Scenario(fault_trace=trace,
+                                     blacklist_cooldown=100.0))
+    assert float(plain.n_done.sum()) == 12.0
+    assert float(shunned.n_done.sum()) == 12.0
+    # recovery lands at t=2; the cooldown keeps the only resource off
+    # the registry until t=102, which dwarfs the plain makespan -- so
+    # every post-failure completion must land after it
+    assert np.asarray(plain.gridlets.finish).max() < 102.0
+    failed = np.asarray(shunned.gridlets.n_retries) > 0
+    assert failed.sum() > 0
+    assert np.asarray(shunned.gridlets.finish)[failed].min() >= 102.0
+
+
+# ----------------------------------------------------------------------
+# The frozen default + per-lane diagnostics
+# ----------------------------------------------------------------------
+def test_default_knobs_bitwise_frozen():
+    """A Scenario carrying every new knob at its default value is
+    bit-for-bit identical to running with no scenario at all."""
+    g, fleet = _jobs(), _fleet3()
+    r0 = simulation.run_experiment(g, fleet, 100.0, 1e9, OPT_COST)
+    r1 = simulation.run_experiment(
+        g, fleet, 100.0, 1e9, OPT_COST,
+        scenario=simulation.Scenario(trunk_of=None, fault_trace=None,
+                                     retry_limit=None, backoff_base=None,
+                                     blacklist_cooldown=None))
+    for f in ("spent", "term_time", "n_events", "n_failed", "downtime"):
+        assert np.array_equal(np.asarray(getattr(r0, f)),
+                              np.asarray(getattr(r1, f))), f
+    assert np.array_equal(np.asarray(r0.gridlets.finish),
+                          np.asarray(r1.gridlets.finish))
+
+
+def test_sweep_surfaces_truncated_and_overflow_per_lane():
+    """sweep / sweep_sharded expose the truncated and overflow
+    diagnostics with full [D, B] lane shape -- and a starved
+    max_events trips truncated on every lane, loudly."""
+    g, fleet = _jobs(n=6), _fleet3()
+    sc = simulation.Scenario(trunk_of=[0, 0, -1],
+                             fault_trace=[(1.0, 3, 0), (5.0, 3, 1)])
+    ok = simulation.sweep(g, fleet, [50.0, 100.0], [1e9, 1e8], OPT_COST,
+                          scenario=sc)
+    assert ok.truncated.shape == (2, 2) and ok.overflow.shape == (2, 2)
+    assert not np.asarray(ok.truncated).any()
+    assert not np.asarray(ok.overflow).any()
+    starved = simulation.sweep(g, fleet, [50.0, 100.0], [1e9], OPT_COST,
+                               scenario=sc, max_events=6)
+    assert starved.truncated.shape == (2, 1)
+    assert np.asarray(starved.truncated).all()
+    sharded = simulation.sweep_sharded(g, fleet, [50.0, 100.0],
+                                       [1e9, 1e8], OPT_COST, scenario=sc)
+    assert np.array_equal(np.asarray(sharded.truncated),
+                          np.asarray(ok.truncated))
+    assert np.array_equal(np.asarray(sharded.overflow),
+                          np.asarray(ok.overflow))
+    assert np.array_equal(np.asarray(sharded.n_failed),
+                          np.asarray(ok.n_failed))

@@ -32,9 +32,12 @@ from repro.core import engine, gridlet, resource, simulation, types
 # Deterministic seeded corpus: chosen to cover both resource policies,
 # all four broker optimisations, failures on/off, the network subsystem
 # on/off, the dynamic-pricing models (each of K_MARKET and K_AUCTION
-# fires in at least one seed -- asserted below) and plan-ahead dispatch
-# (_build_case draws all of those from the seed).
-CORPUS = (0, 3, 7, 42, 101, 555, 601, 607)
+# fires in at least one seed -- asserted below), plan-ahead dispatch
+# and the failure-domain axis (_build_case draws all of those from the
+# seed).  716 and 735 draw shared-trunk topologies with trunk-target
+# injection rows that actually fell a populated failure domain (716
+# additionally with retry_limit=1, 735 with the network subsystem on).
+CORPUS = (0, 3, 7, 42, 101, 555, 601, 607, 716, 735)
 
 MAX_EVENTS = 4096
 
@@ -85,6 +88,32 @@ def _build_case(seed):
                      auction_seed=int(rng.randint(0, 100)))
     if rng.randint(0, 2):
         sc_kw.update(plan_ahead=True)
+    # The failure-domain axis: shared-trunk topology, trace-driven
+    # fault injection and the fault-tolerant broker knobs.  Drawn AFTER
+    # every earlier knob so the pre-trunk scenario shapes replay
+    # unchanged per seed.  An injection schedule replaces the
+    # stochastic MTBF stream (mixing both fault sources on one
+    # resource is unsupported -- see engine.default_params).
+    if rng.randint(0, 2):
+        sc_kw.update(trunk_of=rng.randint(-1, 2, n_res).tolist(),
+                     trunk_baud=float(rng.choice([14_000.0, 56_000.0])),
+                     trunk_bg=float(rng.choice([0.0, 1.0])))
+        if rng.randint(0, 2):
+            sc_kw.pop("mtbf", None)
+            sc_kw.pop("mttr", None)
+            rows, t = [], 0.0
+            for _ in range(int(rng.randint(1, 4))):
+                t += float(np.round(rng.uniform(5.0, 60.0), 1))
+                tgt = int(rng.randint(0, n_res + 2))  # resource | trunk
+                rows.append((t, tgt, 0))
+                rows.append((t + float(np.round(rng.uniform(5.0, 30.0),
+                                                1)), tgt, 1))
+            sc_kw.update(fault_trace=rows)
+        if rng.randint(0, 2):
+            sc_kw.update(retry_limit=int(rng.randint(1, 4)),
+                         backoff_base=float(rng.choice([0.0, 5.0])),
+                         blacklist_cooldown=float(rng.choice([0.0,
+                                                              10.0])))
     sc = simulation.Scenario(**sc_kw) if sc_kw else None
     params = simulation._scenario_params(fleet, deadline, budget, opt,
                                          n_users, sc)
