@@ -24,6 +24,13 @@ runs are bit-for-bit identical (``batched_identical``).  The 20-user
 cell is additionally compared against the recorded pre-superstep engine
 (tests/data/golden_pre_refactor.json): results must stay identical
 while while-loop iterations keep shrinking (``iteration_ratio``).
+A third untimed pass per scenario runs with the telemetry metrics ring
+recording and gates ``telemetry_identical`` -- the ring is a separate
+loop carry that must never feed back into the simulation.  Every cell
+also carries roofline columns (``arith_intensity`` /
+``pct_of_roofline`` / ``roofline_bound``): the analytic FLOP/byte
+model of the associative slab solve at the cell's job-table shape
+(benchmarks/roofline.bench_row) grounded against the measured wall.
 
 Three microbench sections ride along under the ``_`` prefix (skipped
 by the per-scenario renderer columns, rendered as their own tables):
@@ -78,6 +85,7 @@ import numpy as np
 from repro.core import engine, gridlet, resource, simulation, types
 from repro.kernels import event_scan as event_scan_mod
 
+from . import roofline
 from .common import art_path
 
 REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
@@ -202,8 +210,11 @@ def _rank_crossover():
 
 # "How" counters may pack the same events into supersteps differently
 # between the reference and sweep loops; every "what" field must match
-# bitwise (same convention as tests/test_sweep_engine.py).
-_HOW_COUNTERS = ("n_steps", "n_spec", "n_scans", "n_reseeds")
+# bitwise (same convention as tests/test_sweep_engine.py).  The
+# telemetry ring is observability, not a result -- it records one row
+# per committed superstep, so it inherits the packing differences.
+_HOW_COUNTERS = ("n_steps", "n_spec", "n_scans", "n_reseeds",
+                 "telemetry")
 
 
 def _results_identical(a, b) -> bool:
@@ -463,6 +474,14 @@ def run():
                                   net_cap=net_cap)
         r1, _, _ = _one(fleet, g, n_users, scenario, 1, deadline,
                         budget, net_cap=net_cap, timed=False)
+        # Telemetry identity gate: the same run with the metrics ring
+        # recording must be bitwise identical on every "what" field
+        # (the ring is a separate loop carry that must never feed back
+        # into the simulation -- see repro/core/telemetry.py).
+        r_tel = simulation.run_experiment(
+            g, fleet, deadline=deadline, budget=budget,
+            opt=types.OPT_COST, n_users=n_users, scenario=scenario,
+            batch=engine.DEFAULT_BATCH, net_cap=net_cap, telemetry=1024)
         events = int(np.asarray(r.n_events))
         steps = int(np.asarray(r.n_steps))
         steps_k1 = int(np.asarray(r1.n_steps))
@@ -501,7 +520,24 @@ def run():
             "spent": float(np.asarray(r.spent).sum()),
             "overflow": int(np.asarray(r.overflow)),
             "truncated": bool(np.asarray(r.truncated)),
+            "telemetry_identical": bool(
+                _results_identical(r, r_tel)
+                and r_tel.telemetry is not None
+                and int(np.asarray(r_tel.telemetry.n)) > 0),
         }
+        # Roofline grounding: analytic arithmetic intensity of the
+        # associative slab solve at this cell's [r_pad, J] shape, and
+        # the measured throughput as a fraction of the intensity-capped
+        # ceiling (benchmarks/roofline.bench_row; chip model is the TPU
+        # target -- on the CPU CI host the percentage is a tiny
+        # relative-regression signal, not a utilisation claim).
+        r_pad = -(-fleet.r // engine.BLOCK_R) * engine.BLOCK_R
+        j_cap = int(simulation.safe_max_jobs(
+            g, engine.default_params(deadline, budget, types.OPT_COST,
+                                     n_users, fleet.r), fleet))
+        cell.update(roofline.bench_row(
+            r_pad, j_cap, engine.DEFAULT_BATCH,
+            int(np.asarray(r.n_scans)), wall))
         name = f"engine_{n_users}u_{n_jobs}j" + extras.get("suffix", "")
         if extras.get("suffix") == "_fail":
             cell["scenario"] = {"mtbf": float(np.asarray(scenario.mtbf)),
@@ -557,7 +593,9 @@ def run():
                    f"steps={steps} (k1={steps_k1}, "
                    f"{cell['batch_iteration_ratio']:.2f}x) "
                    f"done={cell['n_done']:.0f} "
-                   f"identical={cell['batched_identical']}")
+                   f"identical={cell['batched_identical']} "
+                   f"tel={cell['telemetry_identical']} "
+                   f"AI={cell['arith_intensity']:.2f}")
         if "iteration_ratio" in cell:
             derived += f" iters_vs_pre={cell['iteration_ratio']:.2f}x"
         if "n_resubmits" in cell:

@@ -34,7 +34,8 @@ def _delta(new, old):
 
 def render(report: dict, baseline: dict | None = None) -> str:
     cols = ["scenario", "events/sec", "compile s", "while-loop iters",
-            "events/superstep", "events", "identical"]
+            "events/superstep", "events", "identical", "telemetry",
+            "AI FLOP/B", "% roofline"]
     if baseline is not None:
         cols += ["Δ events/sec", "Δ events/superstep"]
     lines = ["| " + " | ".join(cols) + " |",
@@ -46,10 +47,16 @@ def render(report: dict, baseline: dict | None = None) -> str:
         epb = cell.get("events_per_superstep")
         ident = cell.get("batched_identical",
                          cell.get("result_identical"))
+        tel = cell.get("telemetry_identical")
+        pct = cell.get("pct_of_roofline")
         row = [name, _fmt(eps), _fmt(cell.get("compile_s"), 1),
                _fmt(cell.get("supersteps")),
                _fmt(epb, 2), _fmt(cell.get("events")),
-               "--" if ident is None else ("yes" if ident else "**NO**")]
+               "--" if ident is None else ("yes" if ident else "**NO**"),
+               "--" if tel is None else ("yes" if tel else "**NO**"),
+               _fmt(cell.get("arith_intensity"), 2),
+               "--" if pct is None else
+               f"{pct:.2g} ({cell.get('roofline_bound', '?')}-bound)"]
         if baseline is not None:
             base = baseline.get(name, {})
             row += [_delta(eps, base.get("events_per_sec")),

@@ -86,6 +86,34 @@ def slab_cost(r_pad: int, j: int, k: int) -> dict:
             "machine_balance": BALANCE}
 
 
+def bench_row(r_pad: int, j: int, k: int, supersteps: int,
+              wall_s: float) -> dict:
+    """Roofline columns for one BENCH_engine cell: grounds the measured
+    wall time of a run (``supersteps`` scans at the ``[r_pad, j]``
+    job-slot shape, slab depth ``k``) against :func:`slab_cost`'s
+    analytic per-superstep model of the associative slab solve.
+
+    * ``arith_intensity`` -- FLOPs per HBM byte of one slab solve;
+    * ``pct_of_roofline`` -- achieved FLOP/s (analytic FLOPs x
+      measured supersteps / wall) over the intensity-capped ceiling
+      ``min(PEAK_FLOPS, intensity x HBM_BW)``;
+    * ``roofline_bound`` -- which roof applies at this intensity.
+
+    The chip model is the TPU target; on the CPU CI host the percentage
+    is honest-but-tiny and serves as a relative-regression signal, not
+    an absolute utilisation claim.
+    """
+    c = slab_cost(r_pad, j, k)["assoc"]
+    achieved = c["flops"] * supersteps / max(wall_s, 1e-12)
+    ceiling = min(PEAK_FLOPS, c["intensity"] * HBM_BW)
+    return {
+        "arith_intensity": c["intensity"],
+        "pct_of_roofline": 100.0 * achieved / ceiling,
+        "roofline_bound": ("memory" if c["intensity"] < BALANCE
+                           else "compute"),
+    }
+
+
 def engine_rows():
     """Analytic slab rooflines at the bench's canonical shapes, plus
     the measured depth counters from the committed bench artifact."""

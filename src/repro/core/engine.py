@@ -171,6 +171,7 @@ from . import broker as broker_mod
 from . import calendar, des, network, rand
 from . import economy as econ_mod
 from . import reservation as resv_mod
+from . import telemetry as telemetry_mod
 from ..kernels import event_scan as _event_kernels
 from ..kernels import ops as kernel_ops
 from ..kernels.event_scan import BIG as _BIG  # empty-slot sentinel
@@ -440,6 +441,11 @@ class SimResult(NamedTuple):
     n_spec: jax.Array
     n_reseeds: jax.Array
     n_scans: jax.Array
+    # The metrics ring (core/telemetry.py) when the run recorded one,
+    # else None.  Observability only: every "what" comparison across
+    # engine paths / telemetry on-off excludes it (like the "how"
+    # counters, it may pack supersteps differently per path).
+    telemetry: object = None
 
 
 # ----------------------------------------------------------------------
@@ -1775,13 +1781,13 @@ def step(state: SimState, fleet, params: SimParams, n_users: int):
     advance the Fig 8 share algebra over [t, t*), apply every source
     due at t*.  (Standalone form without the cross-iteration slab
     carry; the jitted loops run :func:`_step_commit` directly.)"""
-    state, _, _ = _step_commit(state, fleet, params, n_users,
-                               _empty_slab(state))
+    state, _, _, _ = _step_commit(state, fleet, params, n_users,
+                                  _empty_slab(state))
     return state
 
 
 def _step_commit(state: SimState, fleet, params: SimParams,
-                 n_users: int, slab, select_free=False):
+                 n_users: int, slab, select_free=False, tel=None):
     """The committing superstep.  Takes and returns the slab carry
     ``(rank f32[R_pad, J], ok bool[])`` -- the last scan's (remaining,
     tie) rank table shifted by every completion since, and whether it
@@ -1789,9 +1795,11 @@ def _step_commit(state: SimState, fleet, params: SimParams,
     slab-fed exactly like the speculative micro-steps' (sort-free when
     the carry holds, one lexsort reseed when it does not), so a
     completion-dominated stretch of supersteps runs without any sort
-    at all.  Returns ``(state, slab, finished)`` -- the per-user
+    at all.  Returns ``(state, slab, finished, tel)`` -- the per-user
     termination flags ride in the while-loop carry so the loop
-    condition never recomputes them.
+    condition never recomputes them, and ``tel`` is the telemetry ring
+    carry (``None`` when telemetry is off; it never feeds back into
+    the simulation arithmetic).
 
     ``select_free`` (static) is the sweep-engine variant: every
     ``lax.cond`` in the superstep body is replaced by a masked
@@ -1864,13 +1872,17 @@ def _step_commit(state: SimState, fleet, params: SimParams,
     state, finished = _bookkeep(state, fleet, params, n_users, kinds,
                                 counts, whos, t_next)
     state = replace(state, n_steps=state.n_steps + 1)
+    # Observability only: records the post-apply state into the metrics
+    # ring.  Nothing below reads ``tel``; see core/telemetry.py.
+    tel = telemetry_mod.record(tel, state, fleet, kinds, counts, t_next,
+                               spec=False)
 
     fired_interfering = (fired_t[pos_of[des.K_FAILURE]]
                          | fired_t[pos_of[des.K_RECOVERY]]
                          | fired_t[pos_of[des.K_TRACE]]
                          | fired_t[pos_of[des.K_RESERVATION]])
     return state, _slab_after(state, ctx, ctx["scan"], fired_interfering,
-                              fleet, n_resources, r_pad), finished
+                              fleet, n_resources, r_pad), finished, tel
 
 
 def _empty_slab(state):
@@ -1988,7 +2000,7 @@ def _slab_after(state, ctx, scan, fired_interfering, fleet, n_resources,
 
 
 def _speculative_step(state, fleet, params, n_users, t_safe, slab,
-                      finished):
+                      finished, tel=None):
     """One speculative micro-superstep of the k-step batched path.
 
     Applies the earliest pending batch of the *slab-safe* sources --
@@ -2019,7 +2031,7 @@ def _speculative_step(state, fleet, params, n_users, t_safe, slab,
     horizon fire through the NETWORK apply (their RETURN rides the same
     micro-step); only drains that would mature an ARRIVAL -- IN_TRANSIT
     stagings -- are horizon-cut and land in a commit.
-    Returns ``(state, fired, slab', finished')``; ``fired`` False means
+    Returns ``(state, fired, slab', finished', tel')``; ``fired`` False means
     the state was returned untouched (the caller stops speculating:
     pending times only move when events apply) and ``finished`` passes
     through unchanged.
@@ -2088,26 +2100,29 @@ def _speculative_step(state, fleet, params, n_users, t_safe, slab,
         whos = jnp.stack([ctx[("who", k)] for k in kind_list])
         s, fin = _bookkeep(s, fleet, params, n_users, kinds, counts,
                            whos, t_next)
+        tel2 = telemetry_mod.record(tel, s, fleet, kinds, counts,
+                                    t_next, spec=True)
         # A fired strike restructures rows/slots exactly as in a
         # commit: invalidate the rank carry so the next scan reseeds.
         interfering = (ctx[("count", des.K_FAILURE)] +
                        ctx[("count", des.K_RECOVERY)]) > 0
         slab2 = _slab_after(s, ctx, ctx["scan"], interfering,
                             fleet, n_resources, r_pad)
-        return replace(s, n_spec=s.n_spec + 1), slab2, fin
+        return replace(s, n_spec=s.n_spec + 1), slab2, fin, tel2
 
     def dead(s):
         # Untouched state: the scan just performed (reseeded or not)
         # still describes the table, so hand it to the next scan.
         return s, (rank_used, jnp.asarray(True), slab[2], slab[3]), \
-            finished
+            finished, tel
 
-    (state, slab_next, finished) = jax.lax.cond(fire, live, dead, state)
-    return state, fire, slab_next, finished
+    (state, slab_next, finished, tel) = jax.lax.cond(fire, live, dead,
+                                                     state)
+    return state, fire, slab_next, finished, tel
 
 
 def _sweep_micro(state, fleet, params, n_users, t_safe, slab, finished,
-                 alive):
+                 alive, tel=None):
     """One **masked** speculative micro-superstep of the select-free
     sweep engine -- :func:`_speculative_step` with every branch point
     replaced by masked arithmetic, built for lanes of an outer vmap.
@@ -2137,7 +2152,7 @@ def _sweep_micro(state, fleet, params, n_users, t_safe, slab, finished,
       than the reference whenever a carry invalidates mid-slab --
       results, traces and ``n_events`` stay bit-for-bit identical.
 
-    Returns ``(state, fire, slab', finished')``; ``fire`` doubles as
+    Returns ``(state, fire, slab', finished', tel')``; ``fire`` doubles as
     the next micro-step's ``alive`` (once a micro-step declines, the
     state -- hence every pending instant -- is unchanged, so every
     later one declines too).
@@ -2228,6 +2243,12 @@ def _sweep_micro(state, fleet, params, n_users, t_safe, slab, finished,
         state,
         n_spec=state.n_spec + fire.astype(jnp.int32),
         n_scans=state.n_scans + alive.astype(jnp.int32))
+    # Masked recorder: a declined micro-step (``fire`` False) writes no
+    # ring row -- the explicit gate, not the counts, decides (declined
+    # steps are bitwise no-ops including counts, but being explicit
+    # keeps the masked path's contract visible).
+    tel = telemetry_mod.record(tel, state, fleet, kinds, counts, t_eff,
+                               spec=True, gate=fire)
 
     # Slab: micro admissions are space-shared only (ts_newly is always
     # empty here), so validity persists from the input unless a strike
@@ -2239,7 +2260,7 @@ def _sweep_micro(state, fleet, params, n_users, t_safe, slab, finished,
     n_comp_r = jnp.pad(ctx["n_comp_r"], (0, r_pad - n_resources))
     slab2 = (scan[4] - n_comp_r[:, None].astype(jnp.float32),
              slab[1] & ~interfering) + ctx["qcarry"]
-    return state, fire, slab2, finished
+    return state, fire, slab2, finished, tel
 
 
 def _speculation_horizon(state, fleet, params, n_users):
@@ -2275,7 +2296,7 @@ def _speculation_horizon(state, fleet, params, n_users):
 
 
 def step_batched(state: SimState, fleet, params: SimParams, n_users: int,
-                 batch: int, slab=None):
+                 batch: int, slab=None, tel=None):
     """One batched while-loop iteration: a committing superstep (which
     handles whatever is due next, at full priority/tie-break
     generality) followed by up to ``batch - 1`` speculative
@@ -2283,9 +2304,10 @@ def step_batched(state: SimState, fleet, params: SimParams, n_users: int,
     fed by the committing superstep's precomputed wave ranking (the
     slab carry -- see :func:`_speculative_step`).  Takes and returns
     ``(state, slab)`` so the ranking survives across while-loop
-    iterations (returns ``(state, slab, finished)`` -- the last
+    iterations (returns ``(state, slab, finished, tel)`` -- the last
     superstep's per-user termination flags, which the jitted loops
-    carry so the loop condition never recomputes :func:`_user_flags`);
+    carry so the loop condition never recomputes :func:`_user_flags`,
+    plus the telemetry ring carry, ``None`` when telemetry is off);
     ``slab=None`` starts without one.
 
     When the horizon is empty (an interfering source is due immediately
@@ -2296,31 +2318,33 @@ def step_batched(state: SimState, fleet, params: SimParams, n_users: int,
     """
     if slab is None:
         slab = _empty_slab(state)
-    state, slab, finished = _step_commit(state, fleet, params, n_users,
-                                         slab)
+    state, slab, finished, tel = _step_commit(state, fleet, params,
+                                              n_users, slab, tel=tel)
     if batch <= 1:
-        return state, slab, finished
+        return state, slab, finished, tel
     t_safe = _speculation_horizon(state, fleet, params, n_users)
 
     def micro(_, carry):
-        s, alive, slab, fin = carry
+        s, alive, slab, fin, tel = carry
 
         def go(s):
             return _speculative_step(s, fleet, params, n_users, t_safe,
-                                     slab, fin)
+                                     slab, fin, tel)
 
         # Once a micro-step declines, every later one would too (the
         # state, hence every pending time, is unchanged): short-circuit.
         return jax.lax.cond(
-            alive, go, lambda s: (s, jnp.asarray(False), slab, fin), s)
+            alive, go,
+            lambda s: (s, jnp.asarray(False), slab, fin, tel), s)
 
-    state, _, slab, finished = jax.lax.fori_loop(
-        0, batch - 1, micro, (state, jnp.asarray(True), slab, finished))
-    return state, slab, finished
+    state, _, slab, finished, tel = jax.lax.fori_loop(
+        0, batch - 1, micro,
+        (state, jnp.asarray(True), slab, finished, tel))
+    return state, slab, finished, tel
 
 
 def step_sweep(state: SimState, fleet, params: SimParams, n_users: int,
-               batch: int, slab=None):
+               batch: int, slab=None, tel=None):
     """One select-free batched iteration -- :func:`step_batched` with
     every ``lax.cond`` replaced by masked arithmetic, built to live
     under an outer ``vmap`` over scenarios (the sweep engine).
@@ -2338,20 +2362,22 @@ def step_sweep(state: SimState, fleet, params: SimParams, n_users: int,
     """
     if slab is None:
         slab = _empty_slab(state)
-    state, slab, finished = _step_commit(state, fleet, params, n_users,
-                                         slab, select_free=True)
+    state, slab, finished, tel = _step_commit(state, fleet, params,
+                                              n_users, slab,
+                                              select_free=True, tel=tel)
     if batch <= 1:
-        return state, slab, finished
+        return state, slab, finished, tel
     t_safe = _speculation_horizon(state, fleet, params, n_users)
 
     def micro(_, carry):
-        s, alive, slab, fin = carry
+        s, alive, slab, fin, tel = carry
         return _sweep_micro(s, fleet, params, n_users, t_safe, slab,
-                            fin, alive)
+                            fin, alive, tel)
 
-    state, _, slab, finished = jax.lax.fori_loop(
-        0, batch - 1, micro, (state, jnp.asarray(True), slab, finished))
-    return state, slab, finished
+    state, _, slab, finished, tel = jax.lax.fori_loop(
+        0, batch - 1, micro,
+        (state, jnp.asarray(True), slab, finished, tel))
+    return state, slab, finished, tel
 
 
 def _continue(state, finished, max_events):
@@ -2445,7 +2471,7 @@ def init_state(gridlets, fleet, n_users: int, first_sched: float = 0.0,
     )
 
 
-def _finalize(state: SimState) -> SimResult:
+def _finalize(state: SimState, tel=None) -> SimResult:
     # Users that never started (e.g. zero budget) terminate at final t.
     term = jnp.where(jnp.isfinite(state.term_time), state.term_time,
                      state.t)
@@ -2460,14 +2486,14 @@ def _finalize(state: SimState) -> SimResult:
                      n_failed=state.n_failed,
                      n_resubmits=state.n_resubmits, downtime=downtime,
                      n_spec=state.n_spec, n_reseeds=state.n_reseeds,
-                     n_scans=state.n_scans)
+                     n_scans=state.n_scans, telemetry=tel)
 
 
 @functools.partial(jax.jit, static_argnames=("n_users", "max_events",
                                              "max_jobs", "batch",
-                                             "net_cap"))
+                                             "net_cap", "telemetry"))
 def _run_jit(gridlets, fleet, params, n_users, max_events, max_jobs,
-             batch, net_cap=0):
+             batch, net_cap=0, telemetry=None):
     state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
                        params=params, net_cap=net_cap)
     # The loop carry holds the slab (the last scan's rank table) and
@@ -2475,19 +2501,24 @@ def _run_jit(gridlets, fleet, params, n_users, max_events, max_jobs,
     # completion-dominated stretches of iterations -- committing AND
     # speculative supersteps -- run without any sort, and the loop
     # condition reads the carried flags instead of re-deriving
-    # _user_flags per evaluation.
+    # _user_flags per evaluation.  The telemetry ring rides the carry
+    # as a fourth element; ``telemetry=None`` (static) makes it an
+    # empty pytree node, lowering to exactly the telemetry-free loop.
     _, fin0 = _user_flags(state, params, fleet, n_users)
-    state, _, _ = jax.lax.while_loop(
+    tel0 = (telemetry_mod.init(telemetry, fleet.r)
+            if telemetry else None)
+    state, _, _, tel = jax.lax.while_loop(
         lambda c: _continue(c[0], c[2], max_events),
         lambda c: step_batched(c[0], fleet, params, n_users, batch,
-                               c[1]),
-        (state, _empty_slab(state), fin0))
-    return _finalize(state)
+                               c[1], c[3]),
+        (state, _empty_slab(state), fin0, tel0))
+    return _finalize(state, tel)
 
 
 def run(gridlets, fleet, params: SimParams, n_users: int,
         max_events: int, max_jobs: int | None = None,
-        batch: int = DEFAULT_BATCH, net_cap: int = 0) -> SimResult:
+        batch: int = DEFAULT_BATCH, net_cap: int = 0,
+        telemetry: int | None = None) -> SimResult:
     """Run a full experiment: broker-driven scheduling + execution.
 
     ``batch`` (static) is the superstep batching factor k: each
@@ -2504,14 +2535,22 @@ def run(gridlets, fleet, params: SimParams, n_users: int,
     fair-share each resource's ``params.link_baud`` instead of taking
     the analytic bytes/baud delay, with up to ``net_cap`` concurrent
     transfers per link (0 = analytic links, the default).
+
+    ``telemetry`` (static) enables the observability ring: a positive
+    capacity records one metrics row per committed superstep into
+    ``SimResult.telemetry`` (see :mod:`repro.core.telemetry`).  The
+    ring is a separate loop carry that never feeds back into the
+    simulation -- results are bitwise identical with it on or off, and
+    ``telemetry=None`` compiles to exactly the telemetry-free program.
     """
     return _run_jit(gridlets, fleet, params, n_users, max_events,
-                    max_jobs, batch, net_cap)
+                    max_jobs, batch, net_cap, telemetry)
 
 
 def run_inner(gridlets, fleet, params: SimParams, n_users: int,
               max_events: int, max_jobs: int | None = None,
-              batch: int = 1, net_cap: int = 0) -> SimResult:
+              batch: int = 1, net_cap: int = 0,
+              telemetry: int | None = None) -> SimResult:
     """Unjitted variant for use under an outer vmap/jit (sweep).
 
     ``batch`` defaults to 1 here: under vmap the speculative path's
@@ -2522,17 +2561,20 @@ def run_inner(gridlets, fleet, params: SimParams, n_users: int,
     state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
                        params=params, net_cap=net_cap)
     _, fin0 = _user_flags(state, params, fleet, n_users)
-    state, _, _ = jax.lax.while_loop(
+    tel0 = (telemetry_mod.init(telemetry, fleet.r)
+            if telemetry else None)
+    state, _, _, tel = jax.lax.while_loop(
         lambda c: _continue(c[0], c[2], max_events),
         lambda c: step_batched(c[0], fleet, params, n_users, batch,
-                               c[1]),
-        (state, _empty_slab(state), fin0))
-    return _finalize(state)
+                               c[1], c[3]),
+        (state, _empty_slab(state), fin0, tel0))
+    return _finalize(state, tel)
 
 
 def run_sweep(gridlets, fleet, params: SimParams, n_users: int,
               max_events: int, max_jobs: int | None = None,
-              batch: int = DEFAULT_BATCH, net_cap: int = 0) -> SimResult:
+              batch: int = DEFAULT_BATCH, net_cap: int = 0,
+              telemetry: int | None = None) -> SimResult:
     """Unjitted select-free variant for use under an outer vmap/jit --
     the sweep engine (see :func:`step_sweep`).
 
@@ -2549,11 +2591,14 @@ def run_sweep(gridlets, fleet, params: SimParams, n_users: int,
     state = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
                        params=params, net_cap=net_cap)
     _, fin0 = _user_flags(state, params, fleet, n_users)
-    state, _, _ = jax.lax.while_loop(
+    tel0 = (telemetry_mod.init(telemetry, fleet.r)
+            if telemetry else None)
+    state, _, _, tel = jax.lax.while_loop(
         lambda c: _continue(c[0], c[2], max_events),
-        lambda c: step_sweep(c[0], fleet, params, n_users, batch, c[1]),
-        (state, _empty_slab(state), fin0))
-    return _finalize(state)
+        lambda c: step_sweep(c[0], fleet, params, n_users, batch, c[1],
+                             c[3]),
+        (state, _empty_slab(state), fin0, tel0))
+    return _finalize(state, tel)
 
 
 # ----------------------------------------------------------------------
@@ -2571,7 +2616,7 @@ def _tree_where(pred, new, old):
     return jax.tree_util.tree_map(sel, new, old)
 
 
-def _commit_lanes(state, fleet, params, n_users, slab):
+def _commit_lanes(state, fleet, params, n_users, slab, tel=None):
     """The select-free committing superstep over a whole lane batch --
     :func:`_step_commit` with the scenario axis *inside* the step, so
     expensive bodies that most supersteps do not need run under a real
@@ -2878,7 +2923,7 @@ def _commit_lanes(state, fleet, params, n_users, slab):
                  | fired[:, pos[des.K_TRACE]]
                  | fired[:, pos[des.K_RESERVATION]])
 
-    def tail(state, params, t_next, fired_int, pack, counts, whos):
+    def tail(state, params, t_next, fired_int, pack, counts, whos, tel):
         ctx = _ctx(pack)
         state = _alloc_newly(state, ctx, n_resources, r_pad)
         if _net_on(state):
@@ -2888,16 +2933,18 @@ def _commit_lanes(state, fleet, params, n_users, slab):
         state, finished = _bookkeep(state, fleet, params, n_users,
                                     kinds, counts, whos, t_next)
         state = replace(state, n_steps=state.n_steps + 1)
+        tel = telemetry_mod.record(tel, state, fleet, kinds, counts,
+                                   t_next, spec=False)
         slab = _slab_after(state, ctx, ctx["scan"], fired_int, fleet,
                            n_resources, r_pad)
-        return state, slab, finished
+        return state, slab, finished, tel
 
     return jax.vmap(tail)(state, params, t_next, fired_int, pack,
-                          counts, whos)
+                          counts, whos, tel)
 
 
 def _step_sweep_lanes(state, fleet, params, n_users, batch, slab,
-                      alive):
+                      alive, tel=None):
     """One lane-batched while-loop iteration: a piece-wise committing
     superstep (:func:`_commit_lanes`) plus up to ``batch - 1``
     speculative micro-supersteps -- run in a ``while_loop`` that exits
@@ -2906,36 +2953,36 @@ def _step_sweep_lanes(state, fleet, params, n_users, batch, slab,
     skipping the remaining iterations is exact).  ``alive`` seeds the
     per-lane micro gates so frozen (finished) lanes never count toward
     the any-lane exit test."""
-    state, slab, finished = _commit_lanes(state, fleet, params, n_users,
-                                          slab)
+    state, slab, finished, tel = _commit_lanes(state, fleet, params,
+                                               n_users, slab, tel)
     if batch <= 1:
-        return state, slab, finished
+        return state, slab, finished, tel
     t_safe = jax.vmap(
         lambda s, p: _speculation_horizon(s, fleet, p, n_users))(
             state, params)
 
     def cond(c):
-        i, _, fire, _, _ = c
+        i, _, fire, _, _, _ = c
         return (i < batch - 1) & jnp.any(fire)
 
     def body(c):
-        i, s, fire, slab, fin = c
-        s, fire, slab, fin = jax.vmap(
-            lambda s, p, t, sl, f, a: _sweep_micro(
-                s, fleet, p, n_users, t, sl, f, a))(
-                    s, params, t_safe, slab, fin, fire)
-        return i + 1, s, fire, slab, fin
+        i, s, fire, slab, fin, tel = c
+        s, fire, slab, fin, tel = jax.vmap(
+            lambda s, p, t, sl, f, a, tl: _sweep_micro(
+                s, fleet, p, n_users, t, sl, f, a, tl))(
+                    s, params, t_safe, slab, fin, fire, tel)
+        return i + 1, s, fire, slab, fin, tel
 
-    _, state, _, slab, finished = jax.lax.while_loop(
+    _, state, _, slab, finished, tel = jax.lax.while_loop(
         cond, body,
-        (jnp.asarray(0, jnp.int32), state, alive, slab, finished))
-    return state, slab, finished
+        (jnp.asarray(0, jnp.int32), state, alive, slab, finished, tel))
+    return state, slab, finished, tel
 
 
 def run_sweep_lanes(gridlets, fleet, params: SimParams, n_users: int,
                     max_events: int, max_jobs: int | None = None,
-                    batch: int = DEFAULT_BATCH,
-                    net_cap: int = 0) -> SimResult:
+                    batch: int = DEFAULT_BATCH, net_cap: int = 0,
+                    telemetry: int | None = None) -> SimResult:
     """The lane-batched sweep engine: run one scenario per lane of
     ``params`` (every leaf carries a leading lane axis L, e.g. from
     ``vmap(_scenario_point)``), with the lane axis INSIDE the while
@@ -2963,27 +3010,32 @@ def run_sweep_lanes(gridlets, fleet, params: SimParams, n_users: int,
         s = init_state(gridlets, fleet, n_users, max_jobs=max_jobs,
                        params=p, net_cap=net_cap)
         _, fin0 = _user_flags(s, p, fleet, n_users)
-        return s, _empty_slab(s), fin0
+        tel0 = (telemetry_mod.init(telemetry, fleet.r)
+                if telemetry else None)
+        return s, _empty_slab(s), fin0, tel0
 
-    state, slab, fin = jax.vmap(mk)(params)
+    state, slab, fin, tel = jax.vmap(mk)(params)
 
     def cond(c):
-        state, _, fin = c
+        state, _, fin, _ = c
         return jnp.any(jax.vmap(_continue, in_axes=(0, 0, None))(
             state, fin, max_events))
 
     def body(c):
-        state, slab, fin = c
+        state, slab, fin, tel = c
         alive = jax.vmap(_continue, in_axes=(0, 0, None))(
             state, fin, max_events)
-        s2, sl2, f2 = _step_sweep_lanes(state, fleet, params, n_users,
-                                        batch, slab, alive)
+        s2, sl2, f2, tl2 = _step_sweep_lanes(state, fleet, params,
+                                             n_users, batch, slab,
+                                             alive, tel)
         return (_tree_where(alive, s2, state),
                 _tree_where(alive, sl2, slab),
-                _tree_where(alive, f2, fin))
+                _tree_where(alive, f2, fin),
+                _tree_where(alive, tl2, tel))
 
-    state, slab, fin = jax.lax.while_loop(cond, body, (state, slab, fin))
-    return jax.vmap(_finalize)(state)
+    state, slab, fin, tel = jax.lax.while_loop(
+        cond, body, (state, slab, fin, tel))
+    return jax.vmap(_finalize)(state, tel)
 
 
 def run_direct(gridlets, fleet, resource_idx, dispatch_time,
@@ -3050,4 +3102,4 @@ def run_direct(gridlets, fleet, resource_idx, dispatch_time,
                             reservations=reservations,  # brokers inert
                             link_baud=link_baud, bg_flows=bg_flows)
     return _run_jit(g, fleet, params, 1, max_events, None, batch,
-                    net_cap)
+                    net_cap, None)

@@ -143,6 +143,9 @@ class ExperimentResult(NamedTuple):
     n_scans: jax.Array       # i32 scans performed (committing +
                              #     speculative supersteps, incl.
                              #     declined micro-steps)
+    telemetry: Any = None    # telemetry.Telemetry metrics ring when the
+                             # run recorded one (observability only --
+                             # never part of result identity)
 
 
 def _max_events(n_gridlets: int, n_users: int, horizon: float,
@@ -184,6 +187,7 @@ def summarize(res: engine.SimResult, params, n_users: int,
         n_spec=res.n_spec,
         n_reseeds=res.n_reseeds,
         n_scans=res.n_scans,
+        telemetry=res.telemetry,
     )
 
 
@@ -244,7 +248,8 @@ def run_experiment(gridlets_batch, fleet, deadline, budget,
                    max_events: int | None = None,
                    scenario: Scenario | None = None,
                    batch: int = engine.DEFAULT_BATCH,
-                   net_cap: int | None = 0) -> ExperimentResult:
+                   net_cap: int | None = 0,
+                   telemetry: int | None = None) -> ExperimentResult:
     """``batch`` is the engine's k-step superstep batching factor
     (static; see engine.step_batched) -- results are bit-for-bit
     identical for every value, ``batch=1`` disables speculation.
@@ -253,7 +258,12 @@ def run_experiment(gridlets_batch, fleet, deadline, budget,
     subsystem: 0 (default) keeps the analytic links, ``None`` sizes the
     transfer-slot table automatically (:func:`safe_net_cap`), any
     positive int is the explicit transfer-slot count per link.  The
-    scenario's ``baud_rate``/``bg_flows`` knobs configure the links."""
+    scenario's ``baud_rate``/``bg_flows`` knobs configure the links.
+
+    ``telemetry`` (static) enables the observability metrics ring: a
+    positive row capacity records per-superstep time series into
+    ``ExperimentResult.telemetry`` (see :mod:`repro.core.telemetry`).
+    Purely observational -- results are bitwise identical on or off."""
     params = _scenario_params(fleet, deadline, budget, opt, n_users,
                               scenario)
     if net_cap is None:
@@ -263,7 +273,7 @@ def run_experiment(gridlets_batch, fleet, deadline, budget,
         max_events = _max_events(gridlets_batch.n, n_users, horizon, 1.0)
     res = engine.run(gridlets_batch, fleet, params, n_users, max_events,
                      max_jobs=safe_max_jobs(gridlets_batch, params, fleet),
-                     batch=batch, net_cap=net_cap)
+                     batch=batch, net_cap=net_cap, telemetry=telemetry)
     return summarize(res, params, n_users, fleet.r, max_events)
 
 

@@ -1,0 +1,294 @@
+"""Speculation-safe on-device telemetry: the metrics ring.
+
+The paper's deliverables are *time series* -- per-resource utilisation
+curves (Figs 9/12), spend/time breakdowns, trace tables -- but the
+engine's loop only surfaces end-of-run scalars.  This module adds a
+fixed-capacity metrics ring carried *alongside* ``SimState`` through
+every engine loop (``run`` / ``run_inner`` / ``run_sweep`` /
+``run_sweep_lanes``): one row per applied superstep (committing or
+speculative), written with the same masked ``.at[pos].set(...,
+mode="drop")`` idiom as the event-trace ring.
+
+The hard invariant -- **telemetry never feeds back into simulation
+arithmetic** -- is structural, not behavioural:
+
+* :func:`record` is a *pure function of the post-superstep state* (plus
+  the superstep's event counts); it returns a new ``Telemetry`` and
+  nothing else.  No source, no advance, no bookkeeping ever reads a
+  ``Telemetry`` field.
+* The ring rides the loop carry as a separate element next to
+  ``(state, slab, finished)``.  When telemetry is off the element is
+  ``None`` -- an *empty pytree* -- so the traced program is exactly the
+  pre-telemetry carry: zero extra arrays, zero extra ops.
+
+Consequently telemetry-on runs are bitwise identical on
+``SimState``/``SimResult`` to telemetry-off runs (asserted across the
+fuzz corpus by tests/test_scenario_fuzz.py and gated per bench scenario
+by ``telemetry_identical`` in CI).
+
+Ring semantics mirror the event-trace ring: capacity is static, writes
+past it are dropped (``mode="drop"``), and ``n`` keeps counting -- so
+``n > cap`` detects truncation instead of silently wrapping.  Exporters
+(:func:`to_jsonl`, :func:`to_chrome_trace`) and the paper-figure
+post-processor (:func:`utilisation`) are host-side numpy; schema in
+docs/OBSERVABILITY.md.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from . import des
+from .types import QUEUED, RUNNING, pytree_dataclass
+
+#: Human-readable names for the des.K_* codes (bit positions of the
+#: ``kinds`` fired-kind bitmask column).
+KIND_NAMES = {
+    des.K_COMPLETION: "COMPLETION",
+    des.K_FAILURE: "FAILURE",
+    des.K_RECOVERY: "RECOVERY",
+    des.K_TRACE: "TRACE",
+    des.K_RESERVATION: "RESERVATION",
+    des.K_MARKET: "MARKET",
+    des.K_AUCTION: "AUCTION",
+    des.K_NETWORK: "NETWORK",
+    des.K_RETURN: "RETURN",
+    des.K_ARRIVAL: "ARRIVAL",
+    des.K_CALENDAR: "CALENDAR",
+    des.K_BROKER: "BROKER",
+}
+
+#: JSONL row schema: key -> (kind, doc).  The golden schema test pins
+#: this exact key set; extend it together with ``record`` and the docs.
+SCHEMA = {
+    "step": ("int", "row index (ring position)"),
+    "t": ("float", "simulation time of the superstep commit"),
+    "kinds": ("list[str]", "event kinds fired this superstep"),
+    "events": ("int", "events applied this superstep"),
+    "util": ("list[float]", "per-resource busy-PE fraction [R]"),
+    "queue": ("list[int]", "per-resource QUEUED gridlets [R]"),
+    "net_bytes": ("float", "bytes in flight on the fair-share links"),
+    "price": ("list[float]", "posted per-resource G$/MI [R]"),
+    "spent": ("float", "cumulative committed spend (all users)"),
+    "depth": ("int", "slab depth: 0 = committing superstep, d = d-th "
+                     "speculative micro-step of its slab"),
+}
+
+
+@pytree_dataclass
+class Telemetry:
+    """The on-device metrics ring (all leaves; capacity is static).
+
+    One row per *applied* superstep; declined micro-steps write
+    nothing (their masked row position lands past the ring and drops).
+    ``n`` counts every applied superstep, written or dropped;
+    ``cur_depth`` is the recorder's own slab-position carry (how many
+    speculative micro-steps since the last commit) -- it never reaches
+    the simulation.
+    """
+    n: jax.Array          # i32 rows recorded (monotonic; > cap = truncated)
+    cur_depth: jax.Array  # i32 slab-depth carry for the next row
+    t: jax.Array          # f32[cap] superstep commit instant
+    kinds: jax.Array      # i32[cap] fired-kind bitmask (bit = des.K_*)
+    events: jax.Array     # i32[cap] events applied this superstep
+    util: jax.Array       # f32[cap, R] busy-PE fraction per resource
+    queue: jax.Array      # i32[cap, R] QUEUED gridlets per resource
+    net: jax.Array        # f32[cap] bytes in flight on modelled links
+    price: jax.Array      # f32[cap, R] posted G$/MI per resource
+    spent: jax.Array      # f32[cap] cumulative spend, summed over users
+    depth: jax.Array      # i32[cap] slab depth (0 = committing superstep)
+
+
+def init(cap: int, n_resources: int) -> Telemetry:
+    """An empty ring of static capacity ``cap`` for an R-resource
+    fleet.  Unwritten rows keep the sentinels (t = inf, kinds = 0)."""
+    cap = int(cap)
+    if cap <= 0:
+        raise ValueError(f"telemetry capacity must be positive: {cap}")
+    r = int(n_resources)
+    return Telemetry(
+        n=jnp.asarray(0, jnp.int32),
+        cur_depth=jnp.asarray(0, jnp.int32),
+        t=jnp.full((cap,), jnp.inf, jnp.float32),
+        kinds=jnp.zeros((cap,), jnp.int32),
+        events=jnp.zeros((cap,), jnp.int32),
+        util=jnp.zeros((cap, r), jnp.float32),
+        queue=jnp.zeros((cap, r), jnp.int32),
+        net=jnp.zeros((cap,), jnp.float32),
+        price=jnp.zeros((cap, r), jnp.float32),
+        spent=jnp.zeros((cap,), jnp.float32),
+        depth=jnp.zeros((cap,), jnp.int32),
+    )
+
+
+def record(tel, state, fleet, kinds, counts, t_next, *, spec,
+           gate=None):
+    """Append one metrics row for an applied superstep; ``tel is
+    None`` is the static off-gate (returns None, traces nothing).
+
+    Pure function of the *post-apply* state: utilisation / queue depth
+    / in-flight bytes / prices / spend are read back from ``state``
+    rather than threaded from the superstep's internals, so every
+    engine path (commit, speculative micro, masked sweep micro,
+    lane-batched tail) records through identical arithmetic and the
+    recorder cannot perturb -- or depend on -- how the superstep was
+    produced.
+
+    ``kinds``/``counts`` are the superstep's aligned per-source event
+    vectors (exactly what ``_bookkeep`` traced); ``spec`` (static) marks
+    speculative micro-steps for the slab-depth column; ``gate``
+    (optional bool) masks the write -- default: a row is written iff
+    any event applied, which keeps declined/masked micro-steps rowless.
+    """
+    if tel is None:
+        return None
+    from .types import replace
+    cap = tel.t.shape[0]
+    r = tel.util.shape[1]
+    if gate is None:
+        gate = jnp.sum(counts) > 0
+    g = state.g
+    res = jnp.clip(g.resource, 0, r - 1)
+    n_run = jnp.zeros((r,), jnp.float32).at[res].add(
+        (g.status == RUNNING).astype(jnp.float32))
+    n_q = jnp.zeros((r,), jnp.int32).at[res].add(
+        (g.status == QUEUED).astype(jnp.int32))
+    npe = fleet.num_pe.astype(jnp.float32)
+    util = jnp.minimum(n_run, npe) / jnp.maximum(npe, 1.0)
+    bitmask = jnp.sum(jnp.where(
+        counts > 0, jnp.left_shift(jnp.int32(1), kinds.astype(jnp.int32)),
+        0)).astype(jnp.int32)
+    depth_row = tel.cur_depth + 1 if spec else jnp.asarray(0, jnp.int32)
+    # Masked ring write: the same drop idiom as the event-trace ring.
+    pos = jnp.where(gate, tel.n, cap)
+    return replace(
+        tel,
+        n=tel.n + gate.astype(jnp.int32),
+        cur_depth=jnp.where(gate, depth_row, tel.cur_depth),
+        t=tel.t.at[pos].set(t_next, mode="drop"),
+        kinds=tel.kinds.at[pos].set(bitmask, mode="drop"),
+        events=tel.events.at[pos].set(
+            jnp.sum(counts).astype(jnp.int32), mode="drop"),
+        util=tel.util.at[pos].set(util, mode="drop"),
+        queue=tel.queue.at[pos].set(n_q, mode="drop"),
+        net=tel.net.at[pos].set(jnp.sum(state.link_rem), mode="drop"),
+        price=tel.price.at[pos].set(state.price, mode="drop"),
+        spent=tel.spent.at[pos].set(jnp.sum(state.spent), mode="drop"),
+        depth=tel.depth.at[pos].set(depth_row, mode="drop"),
+    )
+
+
+# ----------------------------------------------------------------------
+# Host-side exporters / post-processors (numpy; never traced)
+# ----------------------------------------------------------------------
+
+def _kind_names(bitmask: int) -> list:
+    return [name for k, name in sorted(KIND_NAMES.items())
+            if bitmask & (1 << k)]
+
+
+def rows(tel) -> list:
+    """The ring as a list of plain-python dicts (SCHEMA keys), valid
+    rows only.  Rows past capacity were dropped at write time; the
+    caller can detect truncation via ``n_recorded(tel) > len(rows)``."""
+    import numpy as np
+    n = min(int(np.asarray(tel.n)), tel.t.shape[0])
+    t = np.asarray(tel.t)[:n]
+    kinds = np.asarray(tel.kinds)[:n]
+    events = np.asarray(tel.events)[:n]
+    util = np.asarray(tel.util)[:n]
+    queue = np.asarray(tel.queue)[:n]
+    net = np.asarray(tel.net)[:n]
+    price = np.asarray(tel.price)[:n]
+    spent = np.asarray(tel.spent)[:n]
+    depth = np.asarray(tel.depth)[:n]
+    out = []
+    for i in range(n):
+        out.append({
+            "step": i,
+            "t": float(t[i]),
+            "kinds": _kind_names(int(kinds[i])),
+            "events": int(events[i]),
+            "util": [float(x) for x in util[i]],
+            "queue": [int(x) for x in queue[i]],
+            "net_bytes": float(net[i]),
+            "price": [float(x) for x in price[i]],
+            "spent": float(spent[i]),
+            "depth": int(depth[i]),
+        })
+    return out
+
+
+def n_recorded(tel) -> int:
+    """Total applied supersteps the recorder saw (written + dropped)."""
+    import numpy as np
+    return int(np.asarray(tel.n))
+
+
+def truncated(tel) -> bool:
+    """True when applied supersteps outran the ring capacity (later
+    rows were dropped; size ``cap`` past the run's superstep count to
+    keep the series complete)."""
+    return n_recorded(tel) > tel.t.shape[0]
+
+
+def to_jsonl(tel, path) -> int:
+    """Write the ring as JSON Lines (one SCHEMA object per row).
+    Returns the number of rows written."""
+    rws = rows(tel)
+    with open(path, "w") as f:
+        for row in rws:
+            f.write(json.dumps(row) + "\n")
+    return len(rws)
+
+
+def to_chrome_trace(tel, path, pid: str = "gridsim") -> int:
+    """Write the ring in Chrome ``trace_event`` JSON (load in
+    chrome://tracing or Perfetto).  Per-resource utilisation, queue
+    depth, prices, spend and in-flight bytes render as counter tracks
+    ("ph": "C"); each superstep's fired kinds render as instant events
+    ("ph": "i").  Timestamps are simulation seconds scaled to
+    microseconds.  Returns the number of trace events written."""
+    events = []
+    for row in rows(tel):
+        ts = row["t"] * 1e6
+        events.append({"name": "+".join(row["kinds"]) or "none",
+                       "ph": "i", "ts": ts, "pid": pid, "tid": "events",
+                       "s": "t", "args": {"events": row["events"],
+                                          "depth": row["depth"]}})
+        events.append({"name": "utilisation", "ph": "C", "ts": ts,
+                       "pid": pid,
+                       "args": {f"r{i}": u
+                                for i, u in enumerate(row["util"])}})
+        events.append({"name": "queue_depth", "ph": "C", "ts": ts,
+                       "pid": pid,
+                       "args": {f"r{i}": q
+                                for i, q in enumerate(row["queue"])}})
+        events.append({"name": "price", "ph": "C", "ts": ts, "pid": pid,
+                       "args": {f"r{i}": p
+                                for i, p in enumerate(row["price"])}})
+        events.append({"name": "economy", "ph": "C", "ts": ts,
+                       "pid": pid, "args": {"spent": row["spent"]}})
+        events.append({"name": "network", "ph": "C", "ts": ts,
+                       "pid": pid,
+                       "args": {"in_flight_bytes": row["net_bytes"]}})
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+    return len(events)
+
+
+def utilisation(tel):
+    """The paper's per-resource utilisation series: ``(t [K], util
+    [K, R])`` numpy arrays -- busy-PE fraction per resource sampled at
+    every applied superstep (piecewise-constant between samples: the
+    engine advances work at constant Fig 8 rates between events, so
+    ``util[i]`` holds over ``[t[i], t[i+1])`` exactly).
+
+    Time-weighted means (the single-number utilisation figures):
+    ``numpy.sum(util[:-1] * numpy.diff(t)[:, None], 0) / (t[-1] - t[0])``.
+    """
+    import numpy as np
+    n = min(int(np.asarray(tel.n)), tel.t.shape[0])
+    return np.asarray(tel.t)[:n], np.asarray(tel.util)[:n]

@@ -5,6 +5,12 @@ interpret mode elsewhere (this container is CPU-only, so tests and
 benches run the kernels through the interpreter; the TPU lowering is the
 TARGET and is exercised by .lower() in the dry-run-adjacent kernel
 tests).
+
+Every wrapper body runs under a ``jax.named_scope`` carrying the
+kernel's public name, so device profiles (``jax.profiler.trace`` /
+XProf) attribute time to ``event_scan`` / ``event_scan_slab`` /
+``link_scan`` / ``event_frontier`` by name instead of a soup of fused
+HLO ops -- see docs/OBSERVABILITY.md for the capture recipe.
 """
 from __future__ import annotations
 
@@ -64,22 +70,24 @@ def event_scan(remaining, mips_eff, num_pe, tie=None, policy=None,
     (then sort-free, purely elementwise) XLA implementation -- the
     engine's slab-fed speculative micro-steps use it on every backend.
     """
-    if rank is not None:
-        return _event.event_scan_xla(remaining, mips_eff, num_pe,
-                                     tie=tie, policy=policy,
-                                     pe_blocked=pe_blocked,
-                                     row_ok=row_ok, with_rank=with_rank,
-                                     rank=rank)
-    if interpret is None and jax.default_backend() != "tpu":
-        return _event.event_scan_xla(remaining, mips_eff, num_pe,
-                                     tie=tie, policy=policy,
-                                     pe_blocked=pe_blocked,
-                                     row_ok=row_ok, with_rank=with_rank)
-    return _event.event_scan(remaining, mips_eff, num_pe, tie=tie,
-                             policy=policy, pe_blocked=pe_blocked,
-                             row_ok=row_ok, block_r=block_r,
-                             interpret=_auto_interpret(interpret),
-                             with_rank=with_rank)
+    with jax.named_scope("event_scan"):
+        if rank is not None:
+            return _event.event_scan_xla(remaining, mips_eff, num_pe,
+                                         tie=tie, policy=policy,
+                                         pe_blocked=pe_blocked,
+                                         row_ok=row_ok,
+                                         with_rank=with_rank, rank=rank)
+        if interpret is None and jax.default_backend() != "tpu":
+            return _event.event_scan_xla(remaining, mips_eff, num_pe,
+                                         tie=tie, policy=policy,
+                                         pe_blocked=pe_blocked,
+                                         row_ok=row_ok,
+                                         with_rank=with_rank)
+        return _event.event_scan(remaining, mips_eff, num_pe, tie=tie,
+                                 policy=policy, pe_blocked=pe_blocked,
+                                 row_ok=row_ok, block_r=block_r,
+                                 interpret=_auto_interpret(interpret),
+                                 with_rank=with_rank)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_r", "interpret",
@@ -108,18 +116,21 @@ def event_scan_slab(remaining, mips_eff, num_pe, k=8, tie=None,
     recurrence (the reference path the differential tests pin the scan
     against).  Wave 0 is bitwise identical either way.
     """
-    if interpret is None and jax.default_backend() != "tpu":
-        return _event.event_scan_slab_xla(remaining, mips_eff, num_pe, k,
-                                          tie=tie, policy=policy,
-                                          pe_blocked=pe_blocked,
-                                          row_ok=row_ok, live=live,
-                                          assoc=assoc)
-    return _event.event_scan_slab(remaining, mips_eff, num_pe, k,
-                                  tie=tie, policy=policy,
-                                  pe_blocked=pe_blocked, row_ok=row_ok,
-                                  live=live, block_r=block_r,
-                                  interpret=_auto_interpret(interpret),
-                                  assoc=assoc)
+    with jax.named_scope("event_scan_slab"):
+        if interpret is None and jax.default_backend() != "tpu":
+            return _event.event_scan_slab_xla(remaining, mips_eff,
+                                              num_pe, k, tie=tie,
+                                              policy=policy,
+                                              pe_blocked=pe_blocked,
+                                              row_ok=row_ok, live=live,
+                                              assoc=assoc)
+        return _event.event_scan_slab(remaining, mips_eff, num_pe, k,
+                                      tie=tie, policy=policy,
+                                      pe_blocked=pe_blocked,
+                                      row_ok=row_ok, live=live,
+                                      block_r=block_r,
+                                      interpret=_auto_interpret(interpret),
+                                      assoc=assoc)
 
 
 @functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
@@ -138,12 +149,13 @@ def link_scan(remaining, baud, bg=None, tie=None, cap=None, *,
     fallback on CPU hosts (the engine's NETWORK event source hot
     path), Pallas interpret mode only on request.
     """
-    if interpret is None and jax.default_backend() != "tpu":
-        return _event.link_scan_xla(remaining, baud, bg=bg, tie=tie,
-                                    cap=cap)
-    return _event.link_scan(remaining, baud, bg=bg, tie=tie, cap=cap,
-                            block_l=block_l,
-                            interpret=_auto_interpret(interpret))
+    with jax.named_scope("link_scan"):
+        if interpret is None and jax.default_backend() != "tpu":
+            return _event.link_scan_xla(remaining, baud, bg=bg, tie=tie,
+                                        cap=cap)
+        return _event.link_scan(remaining, baud, bg=bg, tie=tie,
+                                cap=cap, block_l=block_l,
+                                interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("sizes", "interpret"))
@@ -159,7 +171,8 @@ def event_frontier(cand, sizes, cuts=None, *, interpret=None):
     mirrors :func:`event_scan`: compiled Pallas on TPU, the vectorised
     XLA fallback on CPU hosts, Pallas interpret mode on request.
     """
-    if interpret is None and jax.default_backend() != "tpu":
-        return _event.event_frontier_xla(cand, sizes, cuts=cuts)
-    return _event.event_frontier(cand, sizes, cuts=cuts,
-                                 interpret=_auto_interpret(interpret))
+    with jax.named_scope("event_frontier"):
+        if interpret is None and jax.default_backend() != "tpu":
+            return _event.event_frontier_xla(cand, sizes, cuts=cuts)
+        return _event.event_frontier(cand, sizes, cuts=cuts,
+                                     interpret=_auto_interpret(interpret))

@@ -171,11 +171,39 @@ def _assert_paths_identical(seed):
         runs[f"run_sweep_lanes.l{lane}"] = jax.tree_util.tree_map(
             lambda a: a[lane], lanes)
 
+    # telemetry on/off: the metrics ring is a separate loop carry that
+    # must never feed back into the simulation -- every engine path
+    # replays the full fingerprint (results, gridlets, trace) bitwise
+    # with the ring recording alongside.
+    runs["run.b1.tel"] = engine.run(g, fleet, params, n_users,
+                                    MAX_EVENTS, batch=1, telemetry=256,
+                                    **kw)
+    runs["run.b8.tel"] = engine.run(g, fleet, params, n_users,
+                                    MAX_EVENTS, batch=8, telemetry=256,
+                                    **kw)
+    runs["run_sweep.b8.tel"] = jax.jit(
+        lambda gg, pp: engine.run_sweep(gg, fleet, pp, n_users,
+                                        MAX_EVENTS, batch=8,
+                                        telemetry=256, **kw))(g, params)
+    lanes_tel = jax.jit(
+        lambda gg, pp: engine.run_sweep_lanes(gg, fleet, pp, n_users,
+                                              MAX_EVENTS, batch=8,
+                                              telemetry=256, **kw))(
+        g, jax.tree_util.tree_map(lambda a: jnp.stack([a, a]), params))
+    for lane in range(2):
+        runs[f"run_sweep_lanes.l{lane}.tel"] = jax.tree_util.tree_map(
+            lambda a: a[lane], lanes_tel)
+
     for name, r in runs.items():
         fp = _fingerprint(r)
         for key, want in fp0.items():
             assert np.array_equal(want, fp[key]), \
                 f"seed {seed}: {name} diverges from batch=1 at {key}"
+        if name.endswith(".tel"):
+            assert r.telemetry is not None and int(r.telemetry.n) > 0, \
+                f"seed {seed}: {name} recorded no telemetry rows"
+        else:
+            assert r.telemetry is None
 
 
 @pytest.mark.parametrize("seed", CORPUS)

@@ -1,0 +1,156 @@
+"""The telemetry subsystem: ring semantics, exporter schema, the
+utilisation post-processor and the speculation-safety off-gate.
+
+The bitwise on/off identity across engine paths is pinned by
+tests/test_scenario_fuzz.py (the fuzz corpus runs every path with the
+ring recording); this module pins everything else: the golden JSONL
+row schema (a field added to ``telemetry.record`` without updating
+``SCHEMA``/docs fails here, not in a consumer), Chrome trace_event
+structure, drop-past-capacity ring behaviour, and that ``telemetry=
+None`` yields ``result.telemetry is None`` on every run path.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine, gridlet, resource, simulation, telemetry, types
+
+
+@pytest.fixture(scope="module")
+def traced_run():
+    fleet = resource.make_fleet(
+        num_pe=[2, 4], mips_per_pe=[100.0, 200.0],
+        cost_per_sec=[2.0, 4.0], policy=types.TIME_SHARED)
+    farm = gridlet.task_farm(jax.random.PRNGKey(0), n_jobs=12)
+    res = simulation.run_experiment(farm, fleet, deadline=10_000.0,
+                                    budget=1e7, telemetry=256,
+                                    max_events=512)
+    return fleet, farm, res
+
+
+def test_result_carries_ring(traced_run):
+    fleet, farm, res = traced_run
+    tel = res.telemetry
+    assert tel is not None
+    assert telemetry.n_recorded(tel) > 0
+    assert not telemetry.truncated(tel)
+    # One row per applied superstep; the ring's event column must sum
+    # to the engine's own event counter.
+    rows = telemetry.rows(tel)
+    assert sum(r["events"] for r in rows) == int(np.asarray(res.n_events))
+    # Commit instants are non-decreasing (chronological ring).
+    t = [r["t"] for r in rows]
+    assert all(a <= b for a, b in zip(t, t[1:]))
+
+
+def test_jsonl_golden_schema(traced_run, tmp_path):
+    """The exporter writes exactly the documented SCHEMA keys with the
+    documented python kinds -- the golden trace-schema contract."""
+    _, _, res = traced_run
+    path = tmp_path / "trace.jsonl"
+    n = telemetry.to_jsonl(res.telemetry, path)
+    lines = path.read_text().splitlines()
+    assert n == len(lines) > 0
+    kinds = {"int": int, "float": float, "list[str]": list,
+             "list[float]": list, "list[int]": list}
+    for line in lines:
+        row = json.loads(line)
+        assert set(row) == set(telemetry.SCHEMA), \
+            "JSONL keys drifted from telemetry.SCHEMA"
+        for key, (kind, _) in telemetry.SCHEMA.items():
+            assert isinstance(row[key], kinds[kind]), (key, kind)
+        for name in row["kinds"]:
+            assert name in telemetry.KIND_NAMES.values()
+
+
+def test_chrome_trace_structure(traced_run, tmp_path):
+    _, _, res = traced_run
+    path = tmp_path / "trace.json"
+    n = telemetry.to_chrome_trace(res.telemetry, path)
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    assert len(events) == n > 0
+    assert {e["ph"] for e in events} == {"C", "i"}
+    for e in events:
+        assert {"name", "ph", "ts", "pid"} <= set(e)
+    # Counter tracks exist for each documented series.
+    names = {e["name"] for e in events if e["ph"] == "C"}
+    assert {"utilisation", "queue_depth", "price", "economy",
+            "network"} <= names
+
+
+def test_utilisation_series(traced_run):
+    fleet, farm, res = traced_run
+    t, util = telemetry.utilisation(res.telemetry)
+    assert t.shape[0] == util.shape[0] == telemetry.n_recorded(res.telemetry)
+    assert util.shape[1] == fleet.r
+    assert (util >= 0.0).all() and (util <= 1.0).all()
+    # Left-Riemann integral recovers executed MI exactly on this
+    # load-free fleet (same audit examples/utilisation_trace.py runs).
+    npe = np.asarray(fleet.num_pe, np.float64)
+    mips = np.asarray(fleet.mips_per_pe, np.float64)
+    integral = ((util[:-1].astype(np.float64) * npe * mips).sum(1)
+                * np.diff(t)).sum()
+    done = np.asarray(res.gridlets.status) == types.DONE
+    mi_done = np.asarray(res.gridlets.length_mi, np.float64)[done].sum()
+    np.testing.assert_allclose(integral, mi_done, rtol=1e-3)
+
+
+def test_ring_drops_past_capacity(traced_run):
+    """A tiny ring drops rows instead of wrapping, keeps counting, and
+    changes nothing about the simulation results."""
+    fleet, farm, _ = traced_run
+    params = simulation._scenario_params(fleet, 10_000.0, 1e7,
+                                         types.OPT_COST, 1, None)
+    big = engine.run(farm, fleet, params, 1, 512, telemetry=256)
+    tiny = engine.run(farm, fleet, params, 1, 512, telemetry=4)
+    assert telemetry.truncated(tiny.telemetry)
+    assert (telemetry.n_recorded(tiny.telemetry)
+            == telemetry.n_recorded(big.telemetry))
+    assert len(telemetry.rows(tiny.telemetry)) == 4
+    # The first 4 rows are identical -- later writes dropped, never
+    # wrapped over them.
+    for a, b in zip(telemetry.rows(tiny.telemetry),
+                    telemetry.rows(big.telemetry)):
+        assert a == b
+    for f in ("spent", "term_time", "n_events"):
+        assert np.array_equal(np.asarray(getattr(big, f)),
+                              np.asarray(getattr(tiny, f)))
+
+
+def test_off_gate_is_none(traced_run):
+    fleet, farm, _ = traced_run
+    params = simulation._scenario_params(fleet, 10_000.0, 1e7,
+                                         types.OPT_COST, 1, None)
+    assert engine.run(farm, fleet, params, 1, 512).telemetry is None
+    assert engine.run_inner(farm, fleet, params, 1, 512).telemetry is None
+    assert engine.run_sweep(farm, fleet, params, 1, 512).telemetry is None
+    res = simulation.run_experiment(farm, fleet, deadline=10_000.0,
+                                    budget=1e7, max_events=512)
+    assert res.telemetry is None
+
+
+def test_init_rejects_nonpositive_capacity():
+    with pytest.raises(ValueError):
+        telemetry.init(0, 2)
+    with pytest.raises(ValueError):
+        telemetry.init(-8, 2)
+
+
+def test_depth_column_marks_slab_position(traced_run):
+    """Speculative micro-steps record their position inside the slab;
+    committing supersteps record depth 0."""
+    fleet, farm, _ = traced_run
+    params = simulation._scenario_params(fleet, 10_000.0, 1e7,
+                                         types.OPT_COST, 1, None)
+    r1 = engine.run(farm, fleet, params, 1, 512, batch=1, telemetry=256)
+    rk = engine.run(farm, fleet, params, 1, 512, batch=8, telemetry=256)
+    assert all(r["depth"] == 0 for r in telemetry.rows(r1.telemetry))
+    depths = [r["depth"] for r in telemetry.rows(rk.telemetry)]
+    assert max(depths) > 0, "batch=8 never speculated on this farm"
+    assert max(depths) <= 7  # at most batch - 1 micro-steps per slab
+    # Depth resets at each commit and increments within a slab.
+    for prev, cur in zip(depths, depths[1:]):
+        assert cur == 0 or cur == prev + 1
